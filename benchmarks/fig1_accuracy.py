@@ -1,0 +1,82 @@
+"""Paper Fig. 1: average k-NN accuracy A_m(k) across target ratios and
+neighborhood sizes, per dataset, MPAD (fixed alpha,b) vs all baselines.
+
+Usage: PYTHONPATH=src python -m benchmarks.fig1_accuracy
+           [--datasets fasttext,isolet] [--ratios ...] [--out csv]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.mpad_paper import (FIXED_PARAMS, K_VALUES, TARGET_RATIOS)
+from repro.core import MPADConfig, fit_mpad
+from repro.core.baselines import BASELINE_FITTERS
+from repro.search import amk_accuracy
+
+from .datasets import load
+
+METHODS = ["mpad", "pca", "rp", "mds", "kpca", "isomap", "umap"]
+
+
+def run(datasets, ratios, ks, iters=48, seed=0, out_dir="benchmarks/artifacts"):
+    rows = []
+    for ds in datasets:
+        xtr, xte = load(ds, seed)
+        n_dim = xtr.shape[1]
+        alpha, b = FIXED_PARAMS[ds]
+        for ratio in ratios:
+            m = max(1, int(round(ratio * n_dim)))
+            reducers = {}
+            t0 = time.time()
+            reducers["mpad"] = fit_mpad(
+                xtr, MPADConfig(m=m, alpha=alpha, b=b, iters=iters))
+            fit_t = {"mpad": time.time() - t0}
+            for name, fit in BASELINE_FITTERS.items():
+                t0 = time.time()
+                reducers[name] = fit(xtr, m, jax.random.key(seed + 7))
+                fit_t[name] = time.time() - t0
+            for k in ks:
+                for name, red in reducers.items():
+                    acc = float(amk_accuracy(red, xtr, xte, k))
+                    rows.append(dict(dataset=ds, ratio=ratio, m=m, k=k,
+                                     method=name, acc=acc,
+                                     fit_s=round(fit_t[name], 2)))
+                    print(f"{ds:9s} ratio={ratio:4.2f} k={k:2d} "
+                          f"{name:7s} A_m(k)={acc:.4f}")
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, "fig1_accuracy.json"), "w") as f:
+        json.dump(rows, f, indent=1)
+    # Fig.1 aggregate: mean over (ratio, k) per method per dataset
+    print("\n=== Fig.1: average A_m(k) per dataset ===")
+    summary = {}
+    for ds in datasets:
+        print(f"\n{ds}:")
+        for name in METHODS:
+            accs = [r["acc"] for r in rows
+                    if r["dataset"] == ds and r["method"] == name]
+            if accs:
+                summary[(ds, name)] = sum(accs) / len(accs)
+                print(f"  {name:7s} {summary[(ds, name)]:.4f}")
+    return rows, summary
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--datasets", default="fasttext,isolet,arcene,pbmc3k")
+    ap.add_argument("--ratios", default=",".join(map(str, TARGET_RATIOS)))
+    ap.add_argument("--ks", default=",".join(map(str, K_VALUES)))
+    ap.add_argument("--iters", type=int, default=48)
+    args = ap.parse_args()
+    run(args.datasets.split(","),
+        [float(r) for r in args.ratios.split(",")],
+        [int(k) for k in args.ks.split(",")], iters=args.iters)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Paper Fig. 2: robustness — how often each method ranks 1st/2nd in
+A_m(k) across the MPAD (alpha, b) grid x global (ratio, k) combinations.
+
+Default grid is a stratified subsample of the paper's 1000 settings per
+dataset (the full grid is ~4x slower; pass --full for the exact 8x5 grid).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from collections import Counter
+
+import jax
+
+from repro.configs.mpad_paper import (ALPHA_GRID, B_GRID, K_VALUES,
+                                      TARGET_RATIOS)
+from repro.core import MPADConfig, fit_mpad
+from repro.core.baselines import BASELINE_FITTERS
+from repro.search import amk_accuracy
+
+from .datasets import load
+
+
+def run(datasets, alphas, bs, ratios, ks, iters=32, seed=0,
+        out_dir="benchmarks/artifacts"):
+    results = {}
+    for ds in datasets:
+        xtr, xte = load(ds, seed)
+        n_dim = xtr.shape[1]
+        first, second = Counter(), Counter()
+        for ratio in ratios:
+            m = max(1, int(round(ratio * n_dim)))
+            base_reds = {name: fit(xtr, m, jax.random.key(seed + 7))
+                         for name, fit in BASELINE_FITTERS.items()}
+            base_acc = {}                      # (name, k) -> acc, computed once
+            for k in ks:
+                for name, red in base_reds.items():
+                    base_acc[(name, k)] = float(amk_accuracy(red, xtr, xte, k))
+            for alpha in alphas:
+                for b in bs:
+                    red = fit_mpad(xtr, MPADConfig(
+                        m=m, alpha=alpha, b=b, iters=iters))
+                    for k in ks:
+                        acc = {"mpad": float(amk_accuracy(red, xtr, xte, k))}
+                        for name in base_reds:
+                            acc[name] = base_acc[(name, k)]
+                        ranked = sorted(acc, key=acc.get, reverse=True)
+                        first[ranked[0]] += 1
+                        second[ranked[1]] += 1
+        results[ds] = {"first": dict(first), "second": dict(second)}
+        print(f"{ds}: first={dict(first)}")
+        print(f"{ds}: second={dict(second)}")
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, "fig2_robustness.json"), "w") as f:
+        json.dump(results, f, indent=1)
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--datasets", default="fasttext,isolet,arcene,pbmc3k")
+    ap.add_argument("--full", action="store_true",
+                    help="paper's full 8x5 (alpha, b) grid")
+    args = ap.parse_args()
+    if args.full:
+        alphas, bs = ALPHA_GRID, B_GRID
+    else:
+        alphas, bs = [1.0, 25.0, 10000.0], [60.0, 80.0, 100.0]
+    run(args.datasets.split(","), alphas, bs, TARGET_RATIOS, K_VALUES)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Paper Fig. 3: ablations — vary one parameter (k / target ratio / b /
+alpha) with the others fixed; MPAD vs baselines."""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+
+from repro.configs.mpad_paper import (ALPHA_GRID, B_GRID, FIXED_PARAMS,
+                                      K_VALUES, TARGET_RATIOS)
+from repro.core import MPADConfig, fit_mpad
+from repro.core.baselines import BASELINE_FITTERS
+from repro.search import amk_accuracy
+
+from .datasets import load
+
+BASE = dict(ratio=0.2, k=10)
+
+
+def run(dataset: str, iters=48, seed=0, out_dir="benchmarks/artifacts"):
+    xtr, xte = load(dataset, seed)
+    n_dim = xtr.shape[1]
+    alpha0, b0 = FIXED_PARAMS[dataset]
+    rows = []
+
+    def eval_all(m, k, alpha, b, sweep, value):
+        red = fit_mpad(xtr, MPADConfig(m=m, alpha=alpha, b=b, iters=iters))
+        rows.append(dict(sweep=sweep, value=value, method="mpad",
+                         acc=float(amk_accuracy(red, xtr, xte, k))))
+        for name, fit in BASELINE_FITTERS.items():
+            r = fit(xtr, m, jax.random.key(seed + 7))
+            rows.append(dict(sweep=sweep, value=value, method=name,
+                             acc=float(amk_accuracy(r, xtr, xte, k))))
+
+    m0 = max(1, int(round(BASE["ratio"] * n_dim)))
+    for k in K_VALUES:                                  # column 1: vary k
+        eval_all(m0, k, alpha0, b0, "k", k)
+    for ratio in TARGET_RATIOS:                         # column 2: vary ratio
+        eval_all(max(1, int(round(ratio * n_dim))), BASE["k"], alpha0, b0,
+                 "ratio", ratio)
+    for b in B_GRID:                                    # column 3: vary b
+        eval_all(m0, BASE["k"], alpha0, b, "b", b)
+    for alpha in ALPHA_GRID:                            # column 4: vary alpha
+        eval_all(m0, BASE["k"], alpha, b0, "alpha", alpha)
+
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"fig3_ablation_{dataset}.json")
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=1)
+    for sweep in ("k", "ratio", "b", "alpha"):
+        print(f"\n--- {dataset}: vary {sweep} (base ratio={BASE['ratio']}, "
+              f"k={BASE['k']}, alpha={alpha0}, b={b0}) ---")
+        vals = sorted({r["value"] for r in rows if r["sweep"] == sweep})
+        for v in vals:
+            sub = {r["method"]: r["acc"] for r in rows
+                   if r["sweep"] == sweep and r["value"] == v}
+            best = max(sub, key=sub.get)
+            print(f"  {sweep}={v:<8} " + " ".join(
+                f"{m}={a:.3f}" for m, a in sub.items()) + f"  best={best}")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="fasttext")
+    args = ap.parse_args()
+    run(args.dataset)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,106 @@
+"""Perf-iteration probe: re-lower one (arch x shape) cell with the CURRENT
+code and print the roofline terms + byte/collective breakdowns. This is the
+measure step of the hypothesis -> change -> measure -> validate loop
+(EXPERIMENTS.md §Perf).
+
+  PYTHONPATH=src python -m benchmarks.perf_iter --arch olmoe-1b-7b \
+      --shape train_4k [--tag baseline]
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+import argparse
+import json
+import time
+
+import jax
+
+from repro.configs import get_arch
+from repro.launch.hlo_analysis import analyze_hlo, bytes_breakdown
+from repro.launch.mesh import make_production_mesh
+from repro.parallel.context import mesh_context
+from repro.parallel.sharding import tree_named
+
+PEAK_FLOPS, HBM_BW, LINK_BW = 197e12, 819e9, 50e9
+
+
+def _arch_variant(arch_name, variant):
+    """Build an ArchSpec with a config override (perf-iteration variants)."""
+    if not variant:
+        return get_arch(arch_name)
+    import dataclasses
+    import importlib
+    from repro.configs.lm_family import make_lm_arch
+    from repro.configs.registry import ARCH_MODULES
+    mod = importlib.import_module(ARCH_MODULES[arch_name])
+    cfg = mod.CONFIG
+    if variant == "moe_ep":
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, impl="ep"))
+    elif variant in ("tt_full", "tt_mpad", "tt_int8"):
+        from repro.configs.recsys_family import make_twotower_arch
+        from repro.configs.two_tower_retrieval import MPAD_DIM, RERANK
+        return make_twotower_arch(cfg, mpad_dim=MPAD_DIM, rerank=RERANK,
+                                  mode=variant.split("_")[1])
+    else:
+        raise ValueError(variant)
+    return make_lm_arch(arch_name, cfg, mod.SMOKE, long_ok=False)
+
+
+def probe(arch_name, shape, multi_pod=False, tag="probe", breakdown=True,
+          variant=None):
+    arch = _arch_variant(arch_name, variant)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    with mesh_context(mesh):
+        args = arch.abstract_args(shape)
+        jitted = jax.jit(
+            arch.step_fn(shape),
+            in_shardings=tree_named(mesh, arch.arg_specs(shape, mesh)),
+            out_shardings=tree_named(mesh, arch.out_specs(shape, mesh)))
+        compiled = jitted.lower(*args).compile()
+        hlo = compiled.as_text()
+        tca = analyze_hlo(hlo)
+        mem = compiled.memory_analysis()
+    terms = {"compute_s": tca["dot_flops"] / PEAK_FLOPS,
+             "memory_s": tca["bytes"] / HBM_BW,
+             "collective_s": tca["coll_total"] / LINK_BW}
+    dom = max(terms, key=terms.get)
+    print(f"\n=== {tag}: {arch_name}.{shape} (compile {time.time()-t0:.0f}s) ===")
+    print(f"dot_flops/dev {tca['dot_flops']:.3e}  bytes/dev {tca['bytes']:.3e}"
+          f"  coll/dev {tca['coll_total']:.3e}")
+    print(f"terms: compute {terms['compute_s']:.3e}s | memory "
+          f"{terms['memory_s']:.3e}s | collective {terms['collective_s']:.3e}s"
+          f"  -> dominant: {dom}")
+    print(f"peak mem/dev: {mem.peak_memory_in_bytes/1e9:.2f} GB")
+    print("collectives:", {k: f"{v:.2e}" for k, v in tca.items()
+                           if k.startswith("coll_") and isinstance(v, float)
+                           and v > 0})
+    print("coll counts:", tca["coll_counts"])
+    if breakdown:
+        print("top byte movers (op:jax_op_name, trip-weighted):")
+        for k, v in bytes_breakdown(hlo, top=12):
+            print(f"  {v:12.3e}  {k}")
+    return {"tag": tag, "arch": arch_name, "shape": shape, **tca,
+            **terms, "dominant": dom,
+            "peak_mem": mem.peak_memory_in_bytes}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--tag", default="probe")
+    ap.add_argument("--variant", default=None)
+    ap.add_argument("--save", default=None)
+    args = ap.parse_args()
+    rec = probe(args.arch, args.shape, args.multi_pod, args.tag,
+                variant=args.variant)
+    if args.save:
+        os.makedirs(os.path.dirname(args.save), exist_ok=True)
+        with open(args.save, "w") as f:
+            json.dump(rec, f, indent=1, default=str)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,102 @@
+"""Roofline analysis from dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Hardware model (TPU v5e, per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI. The dry-run records *per-device* quantities (XLA SPMD
+compiles the per-device program), so:
+
+  compute_term    = dot_flops_per_dev / 197e12        [s]
+  memory_term     = bytes_per_dev     / 819e9         [s]  (op-level upper
+                    bound: operands+outputs per fused op, fusion-internal
+                    traffic excluded)
+  collective_term = coll_bytes_per_dev / 50e9         [s]
+
+All three use the trip-count-aware HLO analysis (scan bodies weighted by
+known_trip_count — XLA's builtin cost_analysis counts them once).
+
+MODEL_FLOPS is the analytic 6·N·D (dense) / 6·N_active·D (MoE) GLOBAL
+count; utilization = MODEL_FLOPS / (dot_flops_per_dev * n_devices).
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12         # bf16 / chip
+HBM_BW = 819e9              # bytes/s / chip
+LINK_BW = 50e9              # bytes/s / ICI link
+
+__all__ = ["load_cells", "roofline_row", "main"]
+
+
+def load_cells(art_dir: str, mesh: str = "pod_16x16"):
+    cells = []
+    for f in sorted(glob.glob(os.path.join(art_dir, f"{mesh}.*.json"))):
+        with open(f) as fh:
+            cells.append(json.load(fh))
+    return cells
+
+
+def roofline_row(rec: dict) -> dict:
+    if rec.get("status") != "ok":
+        return {"arch": rec["arch"], "shape": rec["shape"],
+                "status": rec["status"], "reason": rec.get("reason", "")}
+    n_dev = rec["n_devices"]
+    flops = rec.get("hlo_dot_flops", rec.get("flops", 0.0))
+    byts = rec.get("hlo_bytes_accessed", rec.get("bytes_accessed", 0.0))
+    coll = rec.get("hlo_coll_bytes", rec.get("collectives", {}).get("total", 0))
+    t_c = flops / PEAK_FLOPS
+    t_m = byts / HBM_BW
+    t_x = coll / LINK_BW
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    dom = max(terms, key=terms.get)
+    model = rec.get("model_flops", 0.0)
+    useful = model / (flops * n_dev) if flops else 0.0
+    bound = max(t_c, t_m, t_x)
+    # fraction of roofline: time the chip MUST spend on useful model flops
+    # over the time the compiled program actually needs (bound by slowest term)
+    frac = (model / n_dev / PEAK_FLOPS) / bound if bound > 0 else 0.0
+    return {"arch": rec["arch"], "shape": rec["shape"], "status": "ok",
+            "kind": rec["kind"], "n_devices": n_dev,
+            "compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+            "dominant": dom, "model_flops": model,
+            "useful_flops_ratio": useful, "roofline_frac": frac,
+            "peak_mem_gb": rec.get("memory", {}).get(
+                "peak_memory_in_bytes", 0) / 1e9}
+
+
+def summarize(art_dir: str, mesh: str = "pod_16x16", out_json=None):
+    rows = [roofline_row(r) for r in load_cells(art_dir, mesh)]
+    ok = [r for r in rows if r.get("status") == "ok"]
+    ok.sort(key=lambda r: (r["arch"], r["shape"]))
+    hdr = (f"{'arch':22s} {'shape':15s} {'compute_s':>10s} {'memory_s':>10s} "
+           f"{'collect_s':>10s} {'dominant':>10s} {'useful':>7s} "
+           f"{'roofl%':>7s} {'peakGB':>7s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in ok:
+        print(f"{r['arch']:22s} {r['shape']:15s} {r['compute_s']:10.2e} "
+              f"{r['memory_s']:10.2e} {r['collective_s']:10.2e} "
+              f"{r['dominant']:>10s} {r['useful_flops_ratio']:7.3f} "
+              f"{100*r['roofline_frac']:6.1f}% {r['peak_mem_gb']:7.2f}")
+    skipped = [r for r in rows if r.get("status") == "skipped"]
+    for r in skipped:
+        print(f"{r['arch']:22s} {r['shape']:15s} SKIPPED: {r['reason'][:60]}")
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(rows, f, indent=1)
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--artifacts", default="benchmarks/artifacts/dryrun")
+    ap.add_argument("--mesh", default="pod_16x16")
+    ap.add_argument("--out", default="benchmarks/artifacts/roofline.json")
+    args = ap.parse_args()
+    summarize(args.artifacts, args.mesh, args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,135 @@
+"""Benchmark aggregator: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. Fast subset by default
+(suitable for CI); the full paper grids live in the per-figure modules:
+
+  fig1_accuracy.py   — Fig.1 average A_m(k), all methods x datasets
+  fig2_robustness.py — Fig.2 first/second-place counts over param grid
+  fig3_ablation.py   — Fig.3 single-parameter ablations
+  table3_scaling.py  — Table 3 runtime scaling vs N
+  roofline.py        — §Roofline terms per dry-run cell
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def _timeit(f, *args, reps=5, **kw):
+    out = f(*args, **kw)
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(reps):
+        out = f(*args, **kw)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / reps * 1e6          # us
+
+
+def bench_objective_backends(rows):
+    """Table 3 (complexity): one objective eval, N=2048, n=64."""
+    from repro.core.fast_objective import mu_b_fast_value_and_grad
+    from repro.core.objective import mu_b_exact_value_and_grad
+    from repro.kernels.mpad_pairwise import mu_kernel_value_and_grad
+    n, d = 2048, 64
+    x = jax.random.normal(jax.random.key(0), (n, d))
+    w = jax.random.normal(jax.random.key(1), (d,))
+    w = w / jnp.linalg.norm(w)
+    us_fast = _timeit(mu_b_fast_value_and_grad, w, x, b=80.0)
+    us_exact = _timeit(mu_b_exact_value_and_grad, w, x, b=80.0, reps=2)
+    us_kern = _timeit(mu_kernel_value_and_grad, w, x, b=80.0, reps=2)
+    rows.append(("mpad_objective_fast_N2048", us_fast,
+                 f"speedup_vs_exact={us_exact / us_fast:.1f}x"))
+    rows.append(("mpad_objective_exact_N2048", us_exact, "paper_faithful"))
+    rows.append(("mpad_objective_kernel_N2048", us_kern,
+                 "pallas_interpret_cpu"))
+
+
+def bench_kernels(rows):
+    from repro.kernels.knn_topk import knn_ref, knn_topk_pallas
+    q = jax.random.normal(jax.random.key(0), (128, 64))
+    x = jax.random.normal(jax.random.key(1), (4096, 64))
+    us_k = _timeit(knn_topk_pallas, q, x, 10, reps=2)
+    us_r = _timeit(knn_ref, q, x, 10)
+    rows.append(("knn_topk_pallas_interp_4096", us_k, "interpret_mode"))
+    rows.append(("knn_ref_jnp_4096", us_r, "oracle"))
+
+
+def bench_fit(rows):
+    from repro.core import MPADConfig, fit_mpad
+    x = jax.random.normal(jax.random.key(0), (600, 128))
+    t0 = time.time()
+    res = fit_mpad(x, MPADConfig(m=16, iters=48))
+    jax.block_until_ready(res.matrix)
+    rows.append(("mpad_fit_600x128_m16", (time.time() - t0) * 1e6,
+                 f"phi_final={float(res.objective_trace[-1, -1]):.3f}"))
+
+
+def bench_accuracy(rows):
+    """Fig.1 subset: fasttext stand-in, ratio 0.2, k=10, all methods."""
+    from benchmarks.fig1_accuracy import run
+    _, summary = run(["fasttext"], [0.2], [10], iters=32)
+    for (ds, name), acc in summary.items():
+        rows.append((f"amk_{ds}_{name}", 0.0, f"A_m(10)={acc:.4f}"))
+
+
+def bench_serving(rows):
+    from repro.core import MPADConfig
+    from repro.search import SearchEngine, ServeConfig, knn_search
+    from repro.search.knn import recall_at_k
+    key = jax.random.key(0)
+    centers = jax.random.normal(key, (32, 128)) * 2
+    lab = jax.random.randint(jax.random.fold_in(key, 1), (4096,), 0, 32)
+    corpus = centers[lab] + 0.4 * jax.random.normal(
+        jax.random.fold_in(key, 2), (4096, 128))
+    queries = corpus[:256] + 0.05 * jax.random.normal(
+        jax.random.fold_in(key, 3), (256, 128))
+    eng_full = SearchEngine(corpus, ServeConfig(target_dim=None))
+    eng_mpad = SearchEngine(corpus, ServeConfig(
+        target_dim=16, rerank=64, mpad=MPADConfig(m=16, iters=32)))
+    _, truth = knn_search(queries, corpus, 10)
+    us_full = _timeit(eng_full.search, queries, 10, reps=3)
+    us_mpad = _timeit(eng_mpad.search, queries, 10, reps=3)
+    _, found = eng_mpad.search(queries, 10)
+    rec = float(recall_at_k(found, truth))
+    rows.append(("serve_full_dim128_4096x256q", us_full, "exact"))
+    rows.append(("serve_mpad_dim16_rerank64", us_mpad,
+                 f"recall@10={rec:.4f}"))
+
+
+def roofline_summary(rows):
+    art = "benchmarks/artifacts/dryrun"
+    if not os.path.isdir(art):
+        rows.append(("roofline", 0.0, "no_dryrun_artifacts_run_dryrun_first"))
+        return
+    from benchmarks.roofline import load_cells, roofline_row
+    cells = [roofline_row(r) for r in load_cells(art)]
+    ok = [r for r in cells if r.get("status") == "ok"]
+    if ok:
+        worst = min(ok, key=lambda r: r["roofline_frac"])
+        best = max(ok, key=lambda r: r["roofline_frac"])
+        rows.append(("roofline_cells_ok", float(len(ok)),
+                     f"of_{len(cells)}"))
+        rows.append((f"roofline_worst_{worst['arch']}.{worst['shape']}",
+                     0.0, f"frac={worst['roofline_frac']:.3f}"))
+        rows.append((f"roofline_best_{best['arch']}.{best['shape']}",
+                     0.0, f"frac={best['roofline_frac']:.3f}"))
+
+
+def main() -> None:
+    rows = []
+    for bench in (bench_objective_backends, bench_kernels, bench_fit,
+                  bench_serving, bench_accuracy, roofline_summary):
+        try:
+            bench(rows)
+        except Exception as e:                       # keep the harness going
+            rows.append((bench.__name__, -1.0, f"ERROR:{type(e).__name__}"))
+    print("\nname,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from .registry import get_arch, all_arch_names
+from .common import ArchSpec, ShapeDef
+
+__all__ = ["get_arch", "all_arch_names", "ArchSpec", "ShapeDef"]

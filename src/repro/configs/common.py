@@ -1,0 +1,43 @@
+"""Shared config machinery: ShapeDef + ArchSpec.
+
+Each assigned architecture module exposes ``get_arch() -> ArchSpec``; the
+dry-run, smoke tests and benchmarks all consume this one interface:
+
+  * ``abstract_args(shape)``  — ShapeDtypeStruct pytrees for every positional
+                                argument of the step function (no allocation)
+  * ``arg_specs(shape, mesh)``/``out_specs(shape, mesh)`` — PartitionSpec
+                                pytrees for in_shardings / out_shardings
+  * ``step_fn(shape)``        — the function to jit/lower for that cell
+  * ``smoke()``               — reduced same-family config, one real step on
+                                CPU, asserts finite outputs + shapes
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+__all__ = ["ShapeDef", "ArchSpec"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeDef:
+    name: str
+    kind: str                       # train | prefill | decode | serve
+    skip: Optional[str] = None      # reason this cell is skipped (documented)
+    desc: str = ""
+
+
+@dataclasses.dataclass
+class ArchSpec:
+    name: str
+    family: str                     # lm | gnn | recsys
+    shapes: Dict[str, ShapeDef]
+    abstract_args: Callable[[str], tuple]
+    arg_specs: Callable[[str, Any], tuple]
+    out_specs: Callable[[str, Any], Any]
+    step_fn: Callable[[str], Callable]
+    smoke: Callable[[], dict]
+    model_flops: Callable[[str], float] = lambda shape: 0.0   # 6ND-style
+
+    def runnable_shapes(self):
+        return {k: v for k, v in self.shapes.items() if v.skip is None}

@@ -1,0 +1,10 @@
+"""gin-tu [gnn] n_layers=5 d_hidden=64 aggregator=sum eps=learnable
+[arXiv:1810.00826; paper]."""
+from repro.configs.gnn_family import make_gin_arch
+from repro.models.gnn import GINConfig
+
+CONFIG = GINConfig(name="gin-tu", n_layers=5, d_hidden=64)
+
+
+def get_arch():
+    return make_gin_arch("gin-tu", CONFIG)

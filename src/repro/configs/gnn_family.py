@@ -1,0 +1,164 @@
+"""GNN-family ArchSpec builder (GIN): full_graph_sm / minibatch_lg /
+ogb_products / molecule cells. All four shapes lower train_step."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.common import ArchSpec, ShapeDef
+from repro.models import gnn
+from repro.optim import AdamWConfig, init_opt_state, make_train_step
+from repro.parallel import sharding as sh
+
+__all__ = ["make_gin_arch", "GNN_SHAPES"]
+
+_ADAM = AdamWConfig(lr=1e-3, total_steps=10_000)
+
+
+def _pad_to(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+GNN_SHAPES = {
+    # name: (regime, params). Edge counts get padded to 512 multiples.
+    "full_graph_sm": dict(regime="full", n_nodes=2708, n_edges=10556,
+                          d_feat=1433, n_classes=7),
+    "minibatch_lg": dict(regime="sampled", batch_nodes=1024, fanout=(15, 10),
+                         d_feat=602, n_classes=41),
+    "ogb_products": dict(regime="full", n_nodes=2_449_029, n_edges=61_859_140,
+                         d_feat=100, n_classes=47),
+    "molecule": dict(regime="mol", n_graphs=128, n_nodes=30, d_feat=32,
+                     n_classes=2),
+}
+
+
+def make_gin_arch(name: str, base_cfg: gnn.GINConfig) -> ArchSpec:
+    shapes = {k: ShapeDef(name=k, kind="train", desc=str(v))
+              for k, v in GNN_SHAPES.items()}
+
+    def shape_cfg(sname):
+        s = GNN_SHAPES[sname]
+        return gnn.GINConfig(
+            name=f"{base_cfg.name}:{sname}", n_layers=base_cfg.n_layers,
+            d_hidden=base_cfg.d_hidden, d_feat=s["d_feat"],
+            n_classes=s["n_classes"], fanout=s.get("fanout", (15, 10)))
+
+    @functools.lru_cache(maxsize=None)
+    def abstract_state(sname):
+        c = shape_cfg(sname)
+        params = jax.eval_shape(
+            lambda: gnn.gin_init_params(jax.random.key(0), c))
+        opt = jax.eval_shape(init_opt_state, params)
+        return params, opt
+
+    def batch_struct(sname):
+        s = GNN_SHAPES[sname]
+        f32, i32 = jnp.float32, jnp.int32
+        sd = jax.ShapeDtypeStruct
+        if s["regime"] == "full":
+            ep = _pad_to(s["n_edges"], 512)
+            return {"feats": sd((s["n_nodes"], s["d_feat"]), f32),
+                    "edge_src": sd((ep,), i32), "edge_dst": sd((ep,), i32),
+                    "edge_mask": sd((ep,), f32),
+                    "labels": sd((s["n_nodes"],), i32),
+                    "label_mask": sd((s["n_nodes"],), f32)}
+        if s["regime"] == "sampled":
+            b, (f1, f2), d = s["batch_nodes"], s["fanout"], s["d_feat"]
+            return {"feat_l0": sd((b, d), f32),
+                    "feat_l1": sd((b, f1, d), f32),
+                    "feat_l2": sd((b, f1, f2, d), f32),
+                    "labels": sd((b,), i32)}
+        g, n, d = s["n_graphs"], s["n_nodes"], s["d_feat"]
+        return {"feats": sd((g, n, d), f32), "adj": sd((g, n, n), f32),
+                "labels": sd((g,), i32)}
+
+    def abstract_args(sname):
+        params, opt = abstract_state(sname)
+        return (params, opt, batch_struct(sname))
+
+    def step_fn(sname):
+        s = GNN_SHAPES[sname]
+        c = shape_cfg(sname)
+        loss = {"full": gnn.gin_full_loss, "sampled": gnn.gin_sampled_loss,
+                "mol": gnn.gin_mol_loss}[s["regime"]]
+        return make_train_step(lambda p, b: loss(p, c, b), _ADAM)
+
+    def _batch_specs(sname, mesh):
+        s = GNN_SHAPES[sname]
+        dp = sh.dp_axes(mesh)
+        allax = tuple(mesh.axis_names)
+        if s["regime"] == "full":
+            return {"feats": P(None, None),
+                    "edge_src": P(allax), "edge_dst": P(allax),
+                    "edge_mask": P(allax),
+                    "labels": P(None), "label_mask": P(None)}
+        if s["regime"] == "sampled":
+            return {"feat_l0": P(dp, None), "feat_l1": P(dp, None, None),
+                    "feat_l2": P(dp, None, None, None), "labels": P(dp)}
+        return {"feats": P(dp, None, None), "adj": P(dp, None, None),
+                "labels": P(dp)}
+
+    def arg_specs(sname, mesh):
+        params, _ = abstract_state(sname)
+        pspec = sh.replicate_like(params)
+        return (pspec, sh.opt_specs(pspec), _batch_specs(sname, mesh))
+
+    def out_specs(sname, mesh):
+        params, _ = abstract_state(sname)
+        pspec = sh.replicate_like(params)
+        return (P(), pspec, sh.opt_specs(pspec))
+
+    def model_flops(sname) -> float:
+        s = GNN_SHAPES[sname]
+        c = shape_cfg(sname)
+        h = c.d_hidden
+        if s["regime"] == "full":
+            n, e = s["n_nodes"], s["n_edges"]
+            per_layer = 2 * n * s["d_feat"] * h + 2 * n * h * h + e * h
+            fwd = per_layer + (c.n_layers - 1) * (4 * n * h * h + e * h)
+        elif s["regime"] == "sampled":
+            b, (f1, f2) = s["batch_nodes"], s["fanout"]
+            nodes = b * (1 + f1 + f1 * f2)
+            fwd = 2 * nodes * s["d_feat"] * h + 4 * nodes * h * h
+        else:
+            g, n = s["n_graphs"], s["n_nodes"]
+            fwd = c.n_layers * (g * (2 * n * s["d_feat"] * h
+                                     + 4 * n * h * h + 2 * n * n * h))
+        return 3.0 * fwd
+
+    def smoke() -> dict:
+        c = gnn.GINConfig(name="gin-smoke", n_layers=3, d_hidden=16,
+                          d_feat=8, n_classes=3, fanout=(3, 2))
+        params = gnn.gin_init_params(jax.random.key(0), c)
+        opt = init_opt_state(params)
+        n, e = 24, 64
+        batch = {
+            "feats": jax.random.normal(jax.random.key(1), (n, 8)),
+            "edge_src": jax.random.randint(jax.random.key(2), (e,), 0, n),
+            "edge_dst": jax.random.randint(jax.random.key(3), (e,), 0, n),
+            "edge_mask": jnp.ones((e,)),
+            "labels": jax.random.randint(jax.random.key(4), (n,), 0, 3),
+            "label_mask": jnp.ones((n,)),
+        }
+        step = make_train_step(lambda p, b: gnn.gin_full_loss(p, c, b), _ADAM)
+        loss, params2, _ = jax.jit(step)(params, opt, batch)
+        sb = {"feat_l0": jax.random.normal(jax.random.key(5), (4, 8)),
+              "feat_l1": jax.random.normal(jax.random.key(6), (4, 3, 8)),
+              "feat_l2": jax.random.normal(jax.random.key(7), (4, 3, 2, 8)),
+              "labels": jax.random.randint(jax.random.key(8), (4,), 0, 3)}
+        l2 = gnn.gin_sampled_loss(params, c, sb)
+        mb = {"feats": jax.random.normal(jax.random.key(9), (5, 6, 8)),
+              "adj": jnp.ones((5, 6, 6)),
+              "labels": jax.random.randint(jax.random.key(10), (5,), 0, 3)}
+        l3 = gnn.gin_mol_loss(params, c, mb)
+        ok = all(bool(jnp.isfinite(x)) for x in (loss, l2, l3))
+        return {"ok": ok, "loss": float(loss), "sampled_loss": float(l2),
+                "mol_loss": float(l3)}
+
+    return ArchSpec(name=name, family="gnn", shapes=shapes,
+                    abstract_args=abstract_args, arg_specs=arg_specs,
+                    out_specs=out_specs, step_fn=step_fn, smoke=smoke,
+                    model_flops=model_flops)

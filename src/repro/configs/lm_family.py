@@ -1,0 +1,178 @@
+"""LM-family ArchSpec builder: train_4k / prefill_32k / decode_32k /
+long_500k cells for the five assigned transformer architectures."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.common import ArchSpec, ShapeDef
+from repro.models import transformer as tf
+from repro.models.moe import MoEConfig
+from repro.optim import AdamWConfig, init_opt_state, make_train_step
+from repro.parallel import sharding as sh
+
+__all__ = ["make_lm_arch", "lm_param_count", "LM_SHAPES"]
+
+LM_SHAPES = {
+    "train_4k": dict(kind="train", batch=256, seq=4096),
+    "prefill_32k": dict(kind="prefill", batch=32, seq=32768),
+    "decode_32k": dict(kind="decode", batch=128, seq=32768),
+    "long_500k": dict(kind="decode", batch=1, seq=524288),
+}
+
+_ADAM = AdamWConfig(lr=3e-4, total_steps=100_000)
+
+
+def lm_param_count(cfg: tf.LMConfig, active_only: bool = False) -> float:
+    d, dh = cfg.d_model, cfg.d_head
+    attn = d * cfg.n_heads * dh * 2 + d * cfg.n_kv_heads * dh * 2
+    if cfg.moe is None:
+        mlp = 3 * d * cfg.d_ff
+    else:
+        e = cfg.moe.top_k if active_only else cfg.moe.n_experts
+        mlp = 3 * d * cfg.moe.d_ff * e + d * cfg.moe.n_experts
+    emb = cfg.vocab_padded * d * (1 if cfg.tie_embeddings else 2)
+    return float(cfg.n_layers * (attn + mlp + 2 * d) + emb + d)
+
+
+def _with_moe_impl(cfg: tf.LMConfig, impl: str) -> tf.LMConfig:
+    if cfg.moe is None or cfg.moe.impl == impl:
+        return cfg
+    return dataclasses.replace(cfg, moe=dataclasses.replace(cfg.moe, impl=impl))
+
+
+def make_lm_arch(name: str, cfg: tf.LMConfig, smoke_cfg: tf.LMConfig,
+                 long_ok: bool, long_skip_reason: str = "",
+                 zero_opt: bool = True) -> ArchSpec:
+    """``zero_opt``: shard Adam moments over the DP axes as well (ZeRO-1);
+    validated as a §Perf iteration — cuts per-device optimizer memory by
+    dp_size at the cost of a params all-gather in the update."""
+    shapes = {}
+    for sname, s in LM_SHAPES.items():
+        skip = None
+        if sname == "long_500k" and not long_ok:
+            skip = long_skip_reason or (
+                "pure full attention on every layer: no sub-quadratic "
+                "structure for 512k decode (DESIGN.md §4)")
+        shapes[sname] = ShapeDef(name=sname, kind=s["kind"], skip=skip,
+                                 desc=f"B={s['batch']} S={s['seq']}")
+
+    def shape_cfg(sname) -> tf.LMConfig:
+        kind = LM_SHAPES[sname]["kind"]
+        if kind == "decode":       # tiny token counts: dense combine
+            return _with_moe_impl(cfg, "dense")
+        return cfg                 # train/prefill: configured impl
+
+    @functools.lru_cache(maxsize=None)
+    def abstract_state():
+        c = cfg
+        params = jax.eval_shape(lambda: tf.lm_init_params(jax.random.key(0), c))
+        opt = jax.eval_shape(init_opt_state, params)
+        return params, opt
+
+    def abstract_args(sname: str):
+        s = LM_SHAPES[sname]
+        params, opt = abstract_state()
+        b, seq = s["batch"], s["seq"]
+        if s["kind"] == "train":
+            batch = {"tokens": jax.ShapeDtypeStruct((b, seq), jnp.int32),
+                     "labels": jax.ShapeDtypeStruct((b, seq), jnp.int32)}
+            return (params, opt, batch)
+        cache = jax.eval_shape(
+            lambda: tf.init_cache(cfg, b, seq))
+        if s["kind"] == "prefill":
+            tokens = jax.ShapeDtypeStruct((b, seq), jnp.int32)
+            return (params, tokens, cache)
+        token = jax.ShapeDtypeStruct((b,), jnp.int32)
+        cur = jax.ShapeDtypeStruct((), jnp.int32)
+        return (params, token, cur, cache)
+
+    def step_fn(sname: str):
+        s = LM_SHAPES[sname]
+        c = shape_cfg(sname)
+        if s["kind"] == "train":
+            loss_fn = lambda p, batch: tf.lm_train_forward(p, c, batch)
+            return make_train_step(loss_fn, _ADAM)
+        if s["kind"] == "prefill":
+            return lambda p, tokens, cache: tf.lm_prefill(p, c, tokens, cache)
+        return lambda p, token, cur, cache: tf.lm_decode_step(
+            p, c, token, cur, cache)
+
+    def arg_specs(sname: str, mesh):
+        s = LM_SHAPES[sname]
+        dp = sh.dp_axes(mesh)
+        dp_size = 1
+        for a in dp:
+            dp_size *= mesh.shape[a]
+        pspec = sh.lm_param_specs(cfg)
+        b = s["batch"]
+        b_ax = dp if (b % dp_size == 0 and b >= dp_size) else None
+        if s["kind"] == "train":
+            bspec = {"tokens": P(b_ax, None), "labels": P(b_ax, None)}
+            params_abs, _ = abstract_state()
+            ospec = (sh.zero_opt_specs(params_abs, pspec, mesh)
+                     if zero_opt else sh.opt_specs(pspec))
+            return (pspec, ospec, bspec)
+        cspec = sh.lm_cache_specs(cfg, mesh, b, s["seq"])
+        if s["kind"] == "prefill":
+            return (pspec, P(b_ax, None), cspec)
+        return (pspec, P(b_ax), P(), cspec)
+
+    def out_specs(sname: str, mesh):
+        s = LM_SHAPES[sname]
+        dp = sh.dp_axes(mesh)
+        dp_size = 1
+        for a in dp:
+            dp_size *= mesh.shape[a]
+        pspec = sh.lm_param_specs(cfg)
+        b = s["batch"]
+        b_ax = dp if (b % dp_size == 0 and b >= dp_size) else None
+        if s["kind"] == "train":
+            params_abs, _ = abstract_state()
+            ospec = (sh.zero_opt_specs(params_abs, pspec, mesh)
+                     if zero_opt else sh.opt_specs(pspec))
+            return (P(), pspec, ospec)
+        cspec = sh.lm_cache_specs(cfg, mesh, b, s["seq"])
+        return (P(b_ax, "model"), cspec)     # logits vocab-sharded
+
+    def model_flops(sname: str) -> float:
+        s = LM_SHAPES[sname]
+        n_active = lm_param_count(cfg, active_only=True)
+        tokens = s["batch"] * (s["seq"] if s["kind"] in ("train", "prefill")
+                               else 1)
+        mult = 6.0 if s["kind"] == "train" else 2.0   # fwd+bwd vs fwd
+        return mult * n_active * tokens
+
+    def smoke() -> dict:
+        c = smoke_cfg
+        key = jax.random.key(0)
+        params = tf.lm_init_params(key, c)
+        b, s = 2, 32
+        toks = jax.random.randint(jax.random.key(1), (b, s), 0, c.vocab)
+        step = make_train_step(
+            lambda p, batch: tf.lm_train_forward(p, _with_moe_impl(c, "dispatch"), batch),
+            _ADAM)
+        loss, params2, _ = jax.jit(step)(params, init_opt_state(params),
+                                         {"tokens": toks, "labels": toks})
+        cache = tf.init_cache(c, b, s + 4)
+        logits, cache = jax.jit(
+            lambda p, t, ca: tf.lm_prefill(p, c, t, ca))(params, toks, cache)
+        nxt = jnp.argmax(logits[:, :c.vocab], axis=-1).astype(jnp.int32)
+        logits2, _ = jax.jit(
+            lambda p, t, n, ca: tf.lm_decode_step(p, c, t, n, ca))(
+            params, nxt, jnp.int32(s), cache)
+        ok = bool(jnp.isfinite(loss) and jnp.all(jnp.isfinite(logits2)))
+        return {"ok": ok, "loss": float(loss),
+                "logits_shape": tuple(logits2.shape),
+                "expect_vocab": c.vocab_padded}
+
+    return ArchSpec(
+        name=name, family="lm", shapes=shapes,
+        abstract_args=abstract_args, arg_specs=arg_specs,
+        out_specs=out_specs, step_fn=step_fn, smoke=smoke,
+        model_flops=model_flops)

@@ -1,0 +1,451 @@
+"""RecSys-family ArchSpec builders: train_batch / serve_p99 / serve_bulk /
+retrieval_cand cells for sasrec, dien, autoint, two-tower."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.common import ArchSpec, ShapeDef
+from repro.models import recsys as rs
+from repro.optim import AdamWConfig, init_opt_state, make_train_step
+from repro.parallel import sharding as sh
+
+__all__ = ["make_sasrec_arch", "make_dien_arch", "make_autoint_arch",
+           "make_twotower_arch", "RECSYS_SHAPES"]
+
+_ADAM = AdamWConfig(lr=1e-3, total_steps=100_000)
+
+RECSYS_SHAPES = {
+    "train_batch": dict(kind="train", batch=65536),
+    "serve_p99": dict(kind="serve", batch=512),
+    "serve_bulk": dict(kind="serve", batch=262144),
+    # spec says 1,000,000 candidates; padded to 2^20 for even sharding
+    "retrieval_cand": dict(kind="serve", batch=1, n_candidates=1_048_576),
+}
+
+_SD = jax.ShapeDtypeStruct
+_TOPK = 100
+
+
+def _shape_defs():
+    return {k: ShapeDef(name=k, kind=v["kind"], desc=str(v))
+            for k, v in RECSYS_SHAPES.items()}
+
+
+def _dp(mesh, b):
+    dp = sh.dp_axes(mesh)
+    size = 1
+    for a in dp:
+        size *= mesh.shape[a]
+    return dp if (b % size == 0 and b >= size) else None
+
+
+def _mk_arch(name, abstract_state, batch_struct, step_fn, batch_specs,
+             out_specs_fn, smoke, model_flops):
+    def abstract_args(sname):
+        params, opt = abstract_state()
+        if RECSYS_SHAPES[sname]["kind"] == "train":
+            return (params, opt, batch_struct(sname))
+        return (params, batch_struct(sname))
+
+    def arg_specs(sname, mesh):
+        params, _ = abstract_state()
+        pspec = param_specs_holder[0](params)
+        if RECSYS_SHAPES[sname]["kind"] == "train":
+            return (pspec, sh.opt_specs(pspec), batch_specs(sname, mesh))
+        return (pspec, batch_specs(sname, mesh))
+
+    def out_specs(sname, mesh):
+        params, _ = abstract_state()
+        pspec = param_specs_holder[0](params)
+        if RECSYS_SHAPES[sname]["kind"] == "train":
+            return (P(), pspec, sh.opt_specs(pspec))
+        return out_specs_fn(sname, mesh)
+
+    param_specs_holder = [None]          # set by caller
+
+    arch = ArchSpec(name=name, family="recsys", shapes=_shape_defs(),
+                    abstract_args=abstract_args, arg_specs=arg_specs,
+                    out_specs=out_specs, step_fn=step_fn, smoke=smoke,
+                    model_flops=model_flops)
+    return arch, param_specs_holder
+
+
+# ================================================================ SASRec
+
+def make_sasrec_arch(cfg: rs.SASRecConfig) -> ArchSpec:
+    @functools.lru_cache(maxsize=None)
+    def abstract_state():
+        params = jax.eval_shape(lambda: rs.sasrec_init(jax.random.key(0), cfg))
+        return params, jax.eval_shape(init_opt_state, params)
+
+    def batch_struct(sname):
+        s = RECSYS_SHAPES[sname]
+        if s["kind"] == "train":
+            b = s["batch"]
+            return {k: _SD((b, cfg.seq_len), jnp.int32)
+                    for k in ("seq", "pos", "neg")}
+        b = s["batch"]
+        return {"seq": _SD((b, cfg.seq_len), jnp.int32)}
+
+    def step_fn(sname):
+        if RECSYS_SHAPES[sname]["kind"] == "train":
+            return make_train_step(lambda p, b: rs.sasrec_loss(p, cfg, b),
+                                   _ADAM)
+        return lambda p, batch: rs.sasrec_serve_topk(p, cfg, batch["seq"],
+                                                     k=_TOPK)
+
+    def batch_specs(sname, mesh):
+        s = RECSYS_SHAPES[sname]
+        b_ax = _dp(mesh, s["batch"])
+        if s["kind"] == "train":
+            return {k: P(b_ax, None) for k in ("seq", "pos", "neg")}
+        return {"seq": P(b_ax, None)}
+
+    def out_specs_fn(sname, mesh):
+        b_ax = _dp(mesh, RECSYS_SHAPES[sname]["batch"])
+        return (P(b_ax, None), P(b_ax, None))
+
+    def model_flops(sname) -> float:
+        s = RECSYS_SHAPES[sname]
+        d, L = cfg.embed_dim, cfg.seq_len
+        per_ex = cfg.n_blocks * (8 * L * d * d + 4 * L * L * d)
+        if s["kind"] == "train":
+            return 3.0 * s["batch"] * (per_ex + 4 * L * d)
+        scan = 2.0 * cfg.n_items * d      # last-state x catalog
+        return s["batch"] * (per_ex + scan)
+
+    def smoke() -> dict:
+        c = rs.SASRecConfig(name="sasrec-smoke", n_items=200, seq_len=12)
+        p = rs.sasrec_init(jax.random.key(0), c)
+        b = {k: jax.random.randint(jax.random.fold_in(jax.random.key(1), i),
+                                   (4, 12), 0, 200)
+             for i, k in enumerate(("seq", "pos", "neg"))}
+        step = make_train_step(lambda pp, bb: rs.sasrec_loss(pp, c, bb), _ADAM)
+        loss, _, _ = jax.jit(step)(p, init_opt_state(p), b)
+        s, ids = rs.sasrec_serve_topk(p, c, b["seq"], k=7, item_chunk=64)
+        ok = bool(jnp.isfinite(loss)) and s.shape == (4, 7)
+        return {"ok": ok, "loss": float(loss), "topk_shape": tuple(s.shape)}
+
+    arch, holder = _mk_arch("sasrec", abstract_state, batch_struct, step_fn,
+                            batch_specs, out_specs_fn, smoke, model_flops)
+    from repro.parallel.sharding import sasrec_param_specs
+    holder[0] = sasrec_param_specs
+    return arch
+
+
+# ================================================================== DIEN
+
+def make_dien_arch(cfg: rs.DIENConfig) -> ArchSpec:
+    @functools.lru_cache(maxsize=None)
+    def abstract_state():
+        params = jax.eval_shape(lambda: rs.dien_init(jax.random.key(0), cfg))
+        return params, jax.eval_shape(init_opt_state, params)
+
+    def batch_struct(sname):
+        s = RECSYS_SHAPES[sname]
+        b, L = s["batch"], cfg.seq_len
+        if s["kind"] == "train":
+            return {"hist_items": _SD((b, L), jnp.int32),
+                    "hist_cats": _SD((b, L), jnp.int32),
+                    "target_item": _SD((b,), jnp.int32),
+                    "target_cat": _SD((b,), jnp.int32),
+                    "neg_items": _SD((b, L), jnp.int32),
+                    "neg_cats": _SD((b, L), jnp.int32),
+                    "label": _SD((b,), jnp.float32)}
+        if sname == "retrieval_cand":
+            c = s["n_candidates"]
+            return {"hist_items": _SD((1, L), jnp.int32),
+                    "hist_cats": _SD((1, L), jnp.int32),
+                    "cand_items": _SD((c,), jnp.int32),
+                    "cand_cats": _SD((c,), jnp.int32)}
+        return {"hist_items": _SD((b, L), jnp.int32),
+                "hist_cats": _SD((b, L), jnp.int32),
+                "target_item": _SD((b,), jnp.int32),
+                "target_cat": _SD((b,), jnp.int32)}
+
+    def step_fn(sname):
+        s = RECSYS_SHAPES[sname]
+        if s["kind"] == "train":
+            return make_train_step(lambda p, b: rs.dien_loss(p, cfg, b), _ADAM)
+        if sname == "retrieval_cand":
+            return lambda p, batch: rs.dien_score(p, cfg, batch)
+        return lambda p, batch: rs.dien_forward(p, cfg, batch)[0]
+
+    def batch_specs(sname, mesh):
+        s = RECSYS_SHAPES[sname]
+        if sname == "retrieval_cand":
+            allax = tuple(mesh.axis_names)
+            return {"hist_items": P(None, None), "hist_cats": P(None, None),
+                    "cand_items": P(allax), "cand_cats": P(allax)}
+        b_ax = _dp(mesh, s["batch"])
+        spec = {"hist_items": P(b_ax, None), "hist_cats": P(b_ax, None),
+                "target_item": P(b_ax), "target_cat": P(b_ax)}
+        if s["kind"] == "train":
+            spec.update({"neg_items": P(b_ax, None),
+                         "neg_cats": P(b_ax, None), "label": P(b_ax)})
+        return spec
+
+    def out_specs_fn(sname, mesh):
+        if sname == "retrieval_cand":
+            return P(tuple(mesh.axis_names))
+        return P(_dp(mesh, RECSYS_SHAPES[sname]["batch"]))
+
+    def model_flops(sname) -> float:
+        s = RECSYS_SHAPES[sname]
+        e2, h, L = cfg.embed_dim * 2, cfg.gru_dim, cfg.seq_len
+        gru = 6 * L * (e2 * h + h * h)
+        augru = 6 * L * (h * h + h * h) + 2 * L * (h + e2)
+        mlp = 2 * ((h + 2 * e2) * 200 + 200 * 80 + 80)
+        if s["kind"] == "train":
+            return 3.0 * s["batch"] * (gru + augru + mlp)
+        n = s.get("n_candidates", s["batch"])
+        shared = gru if sname == "retrieval_cand" else n * gru
+        return shared + n * (augru + mlp)
+
+    def smoke() -> dict:
+        c = rs.DIENConfig(name="dien-smoke", n_items=300, n_cats=20,
+                          seq_len=6)
+        p = rs.dien_init(jax.random.key(0), c)
+        ks = jax.random.split(jax.random.key(1), 7)
+        b = {"hist_items": jax.random.randint(ks[0], (4, 6), 0, 300),
+             "hist_cats": jax.random.randint(ks[1], (4, 6), 0, 20),
+             "target_item": jax.random.randint(ks[2], (4,), 0, 300),
+             "target_cat": jax.random.randint(ks[3], (4,), 0, 20),
+             "neg_items": jax.random.randint(ks[4], (4, 6), 0, 300),
+             "neg_cats": jax.random.randint(ks[5], (4, 6), 0, 20),
+             "label": (jax.random.uniform(ks[6], (4,)) > 0.5).astype(
+                 jnp.float32)}
+        step = make_train_step(lambda pp, bb: rs.dien_loss(pp, c, bb), _ADAM)
+        loss, _, _ = jax.jit(step)(p, init_opt_state(p), b)
+        sc = rs.dien_score(p, c, {"hist_items": b["hist_items"][:1],
+                                  "hist_cats": b["hist_cats"][:1],
+                                  "cand_items": jnp.arange(32),
+                                  "cand_cats": jnp.zeros(32, jnp.int32)})
+        ok = bool(jnp.isfinite(loss)) and sc.shape == (32,)
+        return {"ok": ok, "loss": float(loss), "scores": tuple(sc.shape)}
+
+    arch, holder = _mk_arch("dien", abstract_state, batch_struct, step_fn,
+                            batch_specs, out_specs_fn, smoke, model_flops)
+    from repro.parallel.sharding import dien_param_specs
+    holder[0] = dien_param_specs
+    return arch
+
+
+# ================================================================ AutoInt
+
+def make_autoint_arch(cfg: rs.AutoIntConfig) -> ArchSpec:
+    @functools.lru_cache(maxsize=None)
+    def abstract_state():
+        params = jax.eval_shape(
+            lambda: rs.autoint_init(jax.random.key(0), cfg))
+        return params, jax.eval_shape(init_opt_state, params)
+
+    def batch_struct(sname):
+        s = RECSYS_SHAPES[sname]
+        if sname == "retrieval_cand":
+            return {"user_fields": _SD((cfg.n_fields - 1,), jnp.int32),
+                    "cand_ids": _SD((s["n_candidates"],), jnp.int32)}
+        b = s["batch"]
+        spec = {"field_ids": _SD((b, cfg.n_fields), jnp.int32)}
+        if s["kind"] == "train":
+            spec["label"] = _SD((b,), jnp.float32)
+        return spec
+
+    def step_fn(sname):
+        s = RECSYS_SHAPES[sname]
+        if s["kind"] == "train":
+            return make_train_step(lambda p, b: rs.autoint_loss(p, cfg, b),
+                                   _ADAM)
+        if sname == "retrieval_cand":
+            return lambda p, batch: rs.autoint_score_candidates(
+                p, cfg, batch["user_fields"], batch["cand_ids"])
+        return lambda p, batch: rs.autoint_forward(p, cfg, batch["field_ids"])
+
+    def batch_specs(sname, mesh):
+        s = RECSYS_SHAPES[sname]
+        if sname == "retrieval_cand":
+            return {"user_fields": P(None),
+                    "cand_ids": P(tuple(mesh.axis_names))}
+        b_ax = _dp(mesh, s["batch"])
+        spec = {"field_ids": P(b_ax, None)}
+        if s["kind"] == "train":
+            spec["label"] = P(b_ax)
+        return spec
+
+    def out_specs_fn(sname, mesh):
+        if sname == "retrieval_cand":
+            return P(tuple(mesh.axis_names))
+        return P(_dp(mesh, RECSYS_SHAPES[sname]["batch"]))
+
+    def model_flops(sname) -> float:
+        s = RECSYS_SHAPES[sname]
+        f, d_out = cfg.n_fields, cfg.n_heads * cfg.d_attn
+        per_ex = cfg.n_attn_layers * (8 * f * cfg.embed_dim * d_out
+                                      + 4 * f * f * d_out) + 2 * f * d_out
+        n = s.get("n_candidates", s["batch"])
+        mult = 3.0 if s["kind"] == "train" else 1.0
+        return mult * n * per_ex
+
+    def smoke() -> dict:
+        c = rs.AutoIntConfig(name="autoint-smoke", n_fields=6,
+                             vocab_per_field=50)
+        p = rs.autoint_init(jax.random.key(0), c)
+        b = {"field_ids": jax.random.randint(jax.random.key(1), (8, 6), 0, 50),
+             "label": (jax.random.uniform(jax.random.key(2), (8,)) > 0.5
+                       ).astype(jnp.float32)}
+        step = make_train_step(lambda pp, bb: rs.autoint_loss(pp, c, bb),
+                               _ADAM)
+        loss, _, _ = jax.jit(step)(p, init_opt_state(p), b)
+        sc = rs.autoint_score_candidates(
+            p, c, jnp.zeros((5,), jnp.int32), jnp.arange(32), chunk=16)
+        ok = bool(jnp.isfinite(loss)) and sc.shape == (32,)
+        return {"ok": ok, "loss": float(loss)}
+
+    arch, holder = _mk_arch("autoint", abstract_state, batch_struct, step_fn,
+                            batch_specs, out_specs_fn, smoke, model_flops)
+    from repro.parallel.sharding import autoint_param_specs
+    holder[0] = autoint_param_specs
+    return arch
+
+
+# ============================================================== Two-tower
+
+def make_twotower_arch(cfg: rs.TwoTowerConfig, mpad_dim: int = 64,
+                       rerank: int = 256, mode: str = "mpad") -> ArchSpec:
+    """``mode`` selects the retrieval_cand serving path (§Perf hillclimb):
+    full  — paper baseline: f32 full-dim scan of all candidates
+    mpad  — the paper's technique: offline-reduced (C, m) cache + re-rank
+    int8  — beyond-paper: int8-quantized reduced cache + re-rank
+    """
+    @functools.lru_cache(maxsize=None)
+    def abstract_state():
+        params = jax.eval_shape(
+            lambda: rs.twotower_init(jax.random.key(0), cfg))
+        return params, jax.eval_shape(init_opt_state, params)
+
+    def batch_struct(sname):
+        s = RECSYS_SHAPES[sname]
+        if sname == "retrieval_cand":
+            c = s["n_candidates"]
+            base = {"user_ids": _SD((1,), jnp.int32),
+                    "hist_ids": _SD((1, cfg.n_user_feats), jnp.int32),
+                    "cand_emb": _SD((c, cfg.embed_dim), jnp.float32)}
+            if mode == "full":
+                return base
+            base.update({
+                "red_matrix": _SD((mpad_dim, cfg.embed_dim), jnp.float32),
+                "red_mean": _SD((cfg.embed_dim,), jnp.float32)})
+            if mode == "int8":
+                base.update({
+                    "cand_red_q": _SD((c, mpad_dim), jnp.int8),
+                    "cand_scale": _SD((mpad_dim,), jnp.float32)})
+            else:
+                base["cand_red"] = _SD((c, mpad_dim), jnp.float32)
+            return base
+        b = s["batch"]
+        spec = {"user_ids": _SD((b,), jnp.int32),
+                "hist_ids": _SD((b, cfg.n_user_feats), jnp.int32)}
+        if s["kind"] == "train":
+            spec.update({"pos_items": _SD((b,), jnp.int32),
+                         "neg_items": _SD((cfg.n_negatives,), jnp.int32),
+                         "neg_logq": _SD((cfg.n_negatives,), jnp.float32)})
+        else:
+            spec["item_ids"] = _SD((b,), jnp.int32)
+        return spec
+
+    def step_fn(sname):
+        s = RECSYS_SHAPES[sname]
+        if s["kind"] == "train":
+            return make_train_step(lambda p, b: rs.twotower_loss(p, cfg, b),
+                                   _ADAM)
+        if sname == "retrieval_cand":
+            def retrieve(p, batch):
+                if mode == "full":
+                    return rs.twotower_retrieve(p, cfg, batch, k=_TOPK)
+                return rs.twotower_retrieve(
+                    p, cfg, batch, k=_TOPK,
+                    reducer=(batch["red_matrix"], batch["red_mean"]),
+                    rerank=rerank, quantized=(mode == "int8"))
+            return retrieve
+
+        def serve(p, batch):                       # pairwise scoring
+            u = rs.twotower_user(p, cfg, batch["user_ids"], batch["hist_ids"])
+            v = rs.twotower_item(p, cfg, batch["item_ids"])
+            return jnp.sum(u * v, axis=-1)
+        return serve
+
+    def batch_specs(sname, mesh):
+        s = RECSYS_SHAPES[sname]
+        if sname == "retrieval_cand":
+            allax = tuple(mesh.axis_names)
+            spec = {"user_ids": P(None), "hist_ids": P(None, None),
+                    "cand_emb": P(allax, None)}
+            if mode == "full":
+                return spec
+            spec.update({"red_matrix": P(None, None), "red_mean": P(None)})
+            if mode == "int8":
+                spec.update({"cand_red_q": P(allax, None),
+                             "cand_scale": P(None)})
+            else:
+                spec["cand_red"] = P(allax, None)
+            return spec
+        b_ax = _dp(mesh, s["batch"])
+        spec = {"user_ids": P(b_ax), "hist_ids": P(b_ax, None)}
+        if s["kind"] == "train":
+            spec.update({"pos_items": P(b_ax), "neg_items": P(None),
+                         "neg_logq": P(None)})
+        else:
+            spec["item_ids"] = P(b_ax)
+        return spec
+
+    def out_specs_fn(sname, mesh):
+        if sname == "retrieval_cand":
+            return (P(None), P(None))
+        return P(_dp(mesh, RECSYS_SHAPES[sname]["batch"]))
+
+    def model_flops(sname) -> float:
+        s = RECSYS_SHAPES[sname]
+        dims = (cfg.field_dim * 2,) + cfg.tower_dims
+        tower = sum(2 * dims[i] * dims[i + 1] for i in range(len(dims) - 1))
+        if s["kind"] == "train":
+            return 3.0 * s["batch"] * (2 * tower) + \
+                3.0 * 2 * s["batch"] * cfg.n_negatives * cfg.embed_dim
+        if sname == "retrieval_cand":
+            n = s["n_candidates"]
+            return tower + 2.0 * n * mpad_dim + 2.0 * rerank * cfg.embed_dim
+        return s["batch"] * 2 * tower
+
+    def smoke() -> dict:
+        c = rs.TwoTowerConfig(name="tt-smoke", n_users=200, n_items=100,
+                              n_negatives=16)
+        p = rs.twotower_init(jax.random.key(0), c)
+        ks = jax.random.split(jax.random.key(1), 4)
+        b = {"user_ids": jax.random.randint(ks[0], (8,), 0, 200),
+             "hist_ids": jax.random.randint(ks[1], (8, c.n_user_feats), 0, 100),
+             "pos_items": jax.random.randint(ks[2], (8,), 0, 100),
+             "neg_items": jax.random.randint(ks[3], (16,), 0, 100),
+             "neg_logq": jnp.full((16,), -float(np.log(100.0)))}
+        step = make_train_step(lambda pp, bb: rs.twotower_loss(pp, c, bb),
+                               _ADAM)
+        loss, _, _ = jax.jit(step)(p, init_opt_state(p), b)
+        cand = rs.twotower_item(p, c, jnp.arange(100))
+        from repro.core import fit_mpad, MPADConfig
+        red = fit_mpad(cand, MPADConfig(m=16, iters=8))
+        s, ids = rs.twotower_retrieve(
+            p, c, {"user_ids": b["user_ids"][:1],
+                   "hist_ids": b["hist_ids"][:1], "cand_emb": cand},
+            k=5, reducer=(red.matrix, red.mean), rerank=20)
+        ok = bool(jnp.isfinite(loss)) and ids.shape == (5,)
+        return {"ok": ok, "loss": float(loss)}
+
+    arch, holder = _mk_arch("two-tower-retrieval", abstract_state,
+                            batch_struct, step_fn, batch_specs, out_specs_fn,
+                            smoke, model_flops)
+    from repro.parallel.sharding import twotower_param_specs
+    holder[0] = twotower_param_specs
+    return arch

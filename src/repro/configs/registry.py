@@ -1,0 +1,34 @@
+"""Architecture registry: ``--arch <id>`` resolution for launchers/dry-run."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+from .common import ArchSpec
+
+ARCH_MODULES = {
+    "tinyllama-1.1b": "repro.configs.tinyllama_1_1b",
+    "gemma3-4b": "repro.configs.gemma3_4b",
+    "stablelm-1.6b": "repro.configs.stablelm_1_6b",
+    "granite-moe-1b-a400m": "repro.configs.granite_moe_1b",
+    "olmoe-1b-7b": "repro.configs.olmoe_1b_7b",
+    "gin-tu": "repro.configs.gin_tu",
+    "sasrec": "repro.configs.sasrec",
+    "dien": "repro.configs.dien",
+    "autoint": "repro.configs.autoint",
+    "two-tower-retrieval": "repro.configs.two_tower_retrieval",
+}
+
+_cache: Dict[str, ArchSpec] = {}
+
+
+def get_arch(name: str) -> ArchSpec:
+    if name not in ARCH_MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {list(ARCH_MODULES)}")
+    if name not in _cache:
+        _cache[name] = importlib.import_module(ARCH_MODULES[name]).get_arch()
+    return _cache[name]
+
+
+def all_arch_names():
+    return list(ARCH_MODULES)

@@ -1,0 +1,21 @@
+"""Core MPAD (a.k.a. QPAD): quantile-preserving dimension reduction for
+nearest-neighbor-preserving vector search. See DESIGN.md."""
+from .mpad import MPADConfig, MPADResult, fit_mpad, transform
+from .objective import (mu_b_exact, mu_b_exact_value_and_grad, phi_exact,
+                        orthogonality_penalty, num_selected_pairs)
+from .fast_objective import (mu_b_fast, mu_b_fast_value_and_grad,
+                             phi_fast_value_and_grad, find_quantile_threshold,
+                             threshold_stats)
+from .baselines import (Reducer, fit_pca, fit_random_projection, fit_mds,
+                        fit_kpca_rbf, fit_isomap, fit_umap_lite,
+                        BASELINE_FITTERS)
+
+__all__ = [
+    "MPADConfig", "MPADResult", "fit_mpad", "transform",
+    "mu_b_exact", "mu_b_exact_value_and_grad", "phi_exact",
+    "orthogonality_penalty", "num_selected_pairs",
+    "mu_b_fast", "mu_b_fast_value_and_grad", "phi_fast_value_and_grad",
+    "find_quantile_threshold", "threshold_stats",
+    "Reducer", "fit_pca", "fit_random_projection", "fit_mds", "fit_kpca_rbf",
+    "fit_isomap", "fit_umap_lite", "BASELINE_FITTERS",
+]

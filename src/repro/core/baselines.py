@@ -1,0 +1,275 @@
+"""Baseline DR methods the paper compares against, re-implemented in JAX.
+
+The paper evaluates MPAD against UMAP, Isomap, Kernel PCA and classical MDS
+(with a linear-regression out-of-sample extension), plus PCA / random
+projections as the classical references. No sklearn/umap-learn offline, so
+each is built here from the primary sources:
+
+  * PCA                 — Pearson 1901 / Jolliffe 2002 (SVD of centered X)
+  * Random projection   — Achlioptas 2003 (gaussian + sparse ±1 variants)
+  * Classical MDS       — Torgerson double-centering; out-of-sample via
+                          ridge linear regression (paper refs [10, 45])
+  * Kernel PCA (RBF)    — Schölkopf 1998; centered-kernel eigendecomposition;
+                          optional Nyström landmark approximation for scale
+  * Isomap              — Tenenbaum 2000: k-NN graph + min-plus geodesics +
+                          MDS; landmark (de Silva–Tenenbaum) out-of-sample
+  * UMAP-lite           — McInnes 2018: fuzzy k-NN graph + attraction /
+                          negative-sampling repulsion SGD; OOS = fuzzy-
+                          weighted average of neighbor embeddings
+
+Every ``fit_*`` returns a :class:`Reducer` with a ``transform`` usable on
+out-of-sample points — the paper's evaluation protocol (Table 2) requires it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "Reducer", "fit_pca", "fit_random_projection", "fit_mds", "fit_kpca_rbf",
+    "fit_isomap", "fit_umap_lite", "BASELINE_FITTERS",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Reducer:
+    name: str
+    transform: Callable[[jax.Array], jax.Array]
+
+    def __call__(self, x):
+        return self.transform(x)
+
+
+# ---------------------------------------------------------------- PCA
+
+def fit_pca(x: jax.Array, m: int) -> Reducer:
+    x = jnp.asarray(x, jnp.float32)
+    mean = x.mean(axis=0)
+    xc = x - mean
+    _, _, vt = jnp.linalg.svd(xc, full_matrices=False)
+    comps = vt[:m]                                   # (m, n)
+    return Reducer("pca", lambda y: (jnp.asarray(y, jnp.float32) - mean) @ comps.T)
+
+
+# ------------------------------------------------- Random projection
+
+def fit_random_projection(key: jax.Array, n: int, m: int,
+                          kind: str = "gaussian") -> Reducer:
+    if kind == "gaussian":
+        mat = jax.random.normal(key, (n, m)) / jnp.sqrt(m)
+    elif kind == "achlioptas":                       # sparse ±sqrt(3), 2/3 zeros
+        u = jax.random.uniform(key, (n, m))
+        mat = jnp.where(u < 1 / 6, jnp.sqrt(3.0),
+                        jnp.where(u < 1 / 3, -jnp.sqrt(3.0), 0.0)) / jnp.sqrt(m)
+    else:
+        raise ValueError(kind)
+    return Reducer(f"rp_{kind}", lambda y: jnp.asarray(y, jnp.float32) @ mat)
+
+
+# --------------------------------------------------- Classical MDS
+
+def _sq_dists(a: jax.Array, b: jax.Array) -> jax.Array:
+    aa = jnp.sum(a * a, axis=1)[:, None]
+    bb = jnp.sum(b * b, axis=1)[None, :]
+    return jnp.maximum(aa + bb - 2.0 * (a @ b.T), 0.0)
+
+
+def _classical_mds_embed(d2: jax.Array, m: int):
+    """Torgerson: B = -1/2 H D^2 H; coords = V sqrt(lambda). Returns (Y, V, lam)."""
+    n = d2.shape[0]
+    h = jnp.eye(n) - jnp.full((n, n), 1.0 / n)
+    b = -0.5 * h @ d2 @ h
+    lam, v = jnp.linalg.eigh(b)                      # ascending
+    lam, v = lam[::-1][:m], v[:, ::-1][:, :m]
+    lam = jnp.maximum(lam, 1e-9)
+    return v * jnp.sqrt(lam)[None, :], v, lam
+
+
+def fit_mds(x: jax.Array, m: int, ridge: float = 1e-4) -> Reducer:
+    """Classical MDS + ridge-regression out-of-sample map (paper protocol)."""
+    x = jnp.asarray(x, jnp.float32)
+    mean = x.mean(axis=0)
+    xc = x - mean
+    y, _, _ = _classical_mds_embed(_sq_dists(x, x), m)
+    # linear map W: argmin ||Xc W - Y||^2 + ridge||W||^2
+    n_dim = xc.shape[1]
+    w = jnp.linalg.solve(xc.T @ xc + ridge * jnp.eye(n_dim), xc.T @ y)
+    return Reducer("mds", lambda q: (jnp.asarray(q, jnp.float32) - mean) @ w)
+
+
+# ------------------------------------------------- Kernel PCA (RBF)
+
+def _median_heuristic_gamma(x: jax.Array) -> jax.Array:
+    d2 = _sq_dists(x, x)
+    n = x.shape[0]
+    off = d2[jnp.triu_indices(n, k=1)]
+    med = jnp.median(off)
+    return 1.0 / jnp.maximum(med, 1e-9)
+
+
+def fit_kpca_rbf(x: jax.Array, m: int, gamma: Optional[float] = None,
+                 landmarks: Optional[int] = None,
+                 key: Optional[jax.Array] = None) -> Reducer:
+    """RBF Kernel PCA with centered-kernel OOS; Nyström if ``landmarks`` set."""
+    x = jnp.asarray(x, jnp.float32)
+    if landmarks is not None and landmarks < x.shape[0]:
+        if key is None:
+            key = jax.random.key(0)
+        idx = jax.random.choice(key, x.shape[0], (landmarks,), replace=False)
+        x = x[idx]                                   # Nyström: fit on landmark set
+    g = _median_heuristic_gamma(x) if gamma is None else jnp.asarray(gamma)
+    k = jnp.exp(-g * _sq_dists(x, x))
+    n = x.shape[0]
+    one = jnp.full((n, n), 1.0 / n)
+    kc = k - one @ k - k @ one + one @ k @ one
+    lam, v = jnp.linalg.eigh(kc)
+    lam, v = lam[::-1][:m], v[:, ::-1][:, :m]
+    lam = jnp.maximum(lam, 1e-9)
+    alphas = v / jnp.sqrt(lam)[None, :]              # (n, m)
+    k_row_mean = k.mean(axis=0)                      # (n,)
+    k_all_mean = k.mean()
+
+    def transform(q):
+        q = jnp.asarray(q, jnp.float32)
+        kq = jnp.exp(-g * _sq_dists(q, x))           # (d, n)
+        kq_c = (kq - kq.mean(axis=1, keepdims=True)
+                - k_row_mean[None, :] + k_all_mean)
+        return kq_c @ alphas
+
+    return Reducer("kpca", transform)
+
+
+# ----------------------------------------------------------- Isomap
+
+def _minplus_geodesics(d: jax.Array, iters: int) -> jax.Array:
+    """All-pairs shortest paths by iterated min-plus squaring of (N,N) dists."""
+
+    def body(g, _):
+        # g2[i,j] = min_k g[i,k] + g[k,j] — one-hop relaxation doubling
+        g2 = jnp.min(g[:, :, None] + g[None, :, :], axis=1)
+        return jnp.minimum(g, g2), None
+
+    g, _ = jax.lax.scan(body, d, None, length=iters)
+    return g
+
+
+def fit_isomap(x: jax.Array, m: int, k: int = 10) -> Reducer:
+    x = jnp.asarray(x, jnp.float32)
+    n = x.shape[0]
+    d = jnp.sqrt(_sq_dists(x, x))
+    # symmetric k-NN graph: keep edge if either endpoint ranks it in top-k
+    kth = jnp.sort(d, axis=1)[:, k]                  # k-th neighbor (excl. self at 0)
+    adj = (d <= kth[:, None]) | (d <= kth[None, :])
+    big = jnp.asarray(1e9, d.dtype)
+    graph = jnp.where(adj, d, big)
+    graph = jnp.where(jnp.eye(n, dtype=bool), 0.0, graph)
+    iters = max(1, int(jnp.ceil(jnp.log2(n))))
+    geo = _minplus_geodesics(graph, iters)
+    # disconnected components: cap at 1.5 x max finite geodesic
+    finite = geo < big / 2
+    gmax = jnp.max(jnp.where(finite, geo, 0.0))
+    geo = jnp.where(finite, geo, 1.5 * gmax)
+    y, v, lam = _classical_mds_embed(geo * geo, m)
+    col_mean = jnp.mean(geo * geo, axis=0)           # (n,)
+    lhalf_pinv = v / jnp.sqrt(lam)[None, :]          # (n, m): 1/sqrt(l) * v
+
+    def transform(q):
+        q = jnp.asarray(q, jnp.float32)
+        dq = jnp.sqrt(_sq_dists(q, x))               # (d, n)
+        # approx geodesic from test point: hop through its k nearest anchors
+        knn_d, knn_i = jax.lax.top_k(-dq, k)
+        hop = (-knn_d)[:, :, None] + geo[knn_i]      # (d, k, n)
+        geo_q = jnp.min(hop, axis=1)
+        # landmark-MDS triangulation (de Silva & Tenenbaum)
+        return 0.5 * (col_mean[None, :] - geo_q ** 2) @ lhalf_pinv
+
+    return Reducer("isomap", transform)
+
+
+# -------------------------------------------------------- UMAP-lite
+
+_UMAP_A, _UMAP_B = 1.576943, 0.8950609   # min_dist=0.1 curve fit (umap-learn)
+
+
+def fit_umap_lite(x: jax.Array, m: int, k: int = 15, epochs: int = 150,
+                  key: Optional[jax.Array] = None, lr: float = 1.0,
+                  n_neg: int = 5) -> Reducer:
+    """Reduced-fidelity UMAP: fuzzy graph + SGD, vectorized over all edges."""
+    x = jnp.asarray(x, jnp.float32)
+    if key is None:
+        key = jax.random.key(0)
+    n = x.shape[0]
+    d = jnp.sqrt(_sq_dists(x, x))
+    d = d + jnp.eye(n) * 1e9
+    knn_negd, knn_i = jax.lax.top_k(-d, k)           # (n, k)
+    knn_d = -knn_negd
+    rho = knn_d[:, 0:1]
+    # binary search sigma_i: sum_j exp(-(d_ij - rho_i)/sigma_i) = log2(k)
+    target = jnp.log2(jnp.asarray(float(k)))
+
+    def sigma_body(_, carry):
+        lo, hi = carry
+        mid = 0.5 * (lo + hi)
+        s = jnp.sum(jnp.exp(-jnp.maximum(knn_d - rho, 0.0) / mid[:, None]), axis=1)
+        too_big = s > target
+        return jnp.where(too_big, lo, mid), jnp.where(too_big, mid, hi)
+
+    lo0 = jnp.full((n,), 1e-4)
+    hi0 = jnp.full((n,), 1e3)
+    _, sigma = jax.lax.fori_loop(0, 40, sigma_body, (lo0, hi0))
+    w_knn = jnp.exp(-jnp.maximum(knn_d - rho, 0.0) / sigma[:, None])   # (n, k)
+    # symmetrize into a dense fuzzy graph (N small in paper's protocol)
+    wdense = jnp.zeros((n, n)).at[jnp.arange(n)[:, None], knn_i].set(w_knn)
+    wsym = wdense + wdense.T - wdense * wdense.T
+    src, dst = jnp.nonzero(wsym > 1e-3, size=n * k * 2, fill_value=0)
+    ew = wsym[src, dst]
+    # PCA init, small scale
+    init = fit_pca(x, m).transform(x)
+    emb0 = 1e-2 * init / (jnp.std(init) + 1e-9)
+    a, b = _UMAP_A, _UMAP_B
+
+    def epoch(emb, ek):
+        alpha = ek[0]
+        kk = ek[1].astype(jnp.uint32)
+        e = emb[src] - emb[dst]
+        d2 = jnp.maximum(jnp.sum(e * e, axis=1, keepdims=True), 1e-8)
+        grad_coef = (-2.0 * a * b * d2 ** (b - 1.0)) / (1.0 + a * d2 ** b)
+        att = jnp.clip(grad_coef * e, -4.0, 4.0) * ew[:, None]
+        emb = emb.at[src].add(alpha * att)
+        emb = emb.at[dst].add(-alpha * att)
+        negk = jax.random.fold_in(key, kk)
+        for t in range(n_neg):
+            neg = jax.random.randint(jax.random.fold_in(negk, t), src.shape, 0, n)
+            e = emb[src] - emb[neg]
+            d2 = jnp.maximum(jnp.sum(e * e, axis=1, keepdims=True), 1e-8)
+            rep = (2.0 * b) / ((1e-3 + d2) * (1.0 + a * d2 ** b))
+            emb = emb.at[src].add(alpha * jnp.clip(rep * e, -4.0, 4.0) * ew[:, None])
+        return emb, None
+
+    alphas = lr * (1.0 - jnp.arange(epochs) / epochs)
+    eks = jnp.stack([alphas, jnp.arange(epochs, dtype=jnp.float32)], axis=1)
+    emb, _ = jax.lax.scan(epoch, emb0, eks)
+
+    def transform(q):
+        q = jnp.asarray(q, jnp.float32)
+        dq = jnp.sqrt(_sq_dists(q, x))
+        nb_negd, nb_i = jax.lax.top_k(-dq, k)
+        wq = jnp.exp(-jnp.maximum(-nb_negd - (-nb_negd[:, 0:1]), 0.0))
+        wq = wq / jnp.sum(wq, axis=1, keepdims=True)
+        return jnp.einsum("dk,dkm->dm", wq, emb[nb_i])
+
+    return Reducer("umap", transform)
+
+
+# Registry used by the benchmark harness (name -> fit(x, m, key) -> Reducer)
+BASELINE_FITTERS = {
+    "pca": lambda x, m, key: fit_pca(x, m),
+    "rp": lambda x, m, key: fit_random_projection(key, x.shape[1], m),
+    "mds": lambda x, m, key: fit_mds(x, m),
+    "kpca": lambda x, m, key: fit_kpca_rbf(x, m),
+    "isomap": lambda x, m, key: fit_isomap(x, m),
+    "umap": lambda x, m, key: fit_umap_lite(x, m, key=key),
+}

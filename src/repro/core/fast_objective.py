@@ -1,0 +1,186 @@
+"""Sort-free-threshold / sorted-prefix fast path for the MPAD objective.
+
+Beyond-paper optimization #2 (see DESIGN.md §6): the paper computes mu_b by
+materializing all N(N-1)/2 pairwise differences and sorting them
+(O(N^2 log N) time, O(N^2) space). For *scalar* projections the same exact
+quantity is computable in O(N log N) time and O(N) space:
+
+  1. sort the projections once:              p_sorted, O(N log N)
+  2. exclusive prefix sums:                  O(N)
+  3. pairs with |p_i - p_j| <= t counted by  searchsorted(p_sorted, p_sorted - t)
+  4. the b%-quantile threshold tau_b found by monotone bisection on t
+     (~60 iterations, each O(N log N))
+  5. value  : sum of selected diffs from prefix sums
+     gradient: per-point signed coefficients c_i; grad mu = X^T c / |D_b|
+
+The selection->threshold duality: "smallest b% of pairs" == "pairs with
+d_ij <= tau_b" (ties at tau_b handled by an exact correction term).
+
+All functions expect a *unit-norm* ``w`` and return the *tangent-projected*
+gradient (the gradient of mu_b(w/||w||) evaluated at ||w||=1), which matches
+``jax.grad`` of the normalizing oracle in ``objective.py``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .objective import num_selected_pairs, orthogonality_penalty
+
+__all__ = [
+    "ThresholdStats",
+    "threshold_stats",
+    "find_quantile_threshold",
+    "mu_b_fast_value_and_grad",
+    "mu_b_fast",
+    "phi_fast_value_and_grad",
+]
+
+_BISECT_ITERS = 60
+
+
+class ThresholdStats(NamedTuple):
+    """Statistics of the pair set {(i,j) : |p_i - p_j| <= tau}."""
+
+    count: jax.Array      # int32 scalar: number of such pairs
+    sum: jax.Array        # f32 scalar:   sum of |p_i - p_j| over the set
+    coeff: jax.Array      # (N,) f32: c_i = #{j: p_j<p_i, within tau} - #{j: p_j>p_i, within tau}
+    tau: jax.Array        # the threshold used
+
+
+def _sorted_prefix(p: jax.Array):
+    order = jnp.argsort(p)
+    ps = p[order]
+    prefix = jnp.concatenate([jnp.zeros((1,), ps.dtype), jnp.cumsum(ps)])
+    return ps, prefix, order
+
+
+_INT32_SAFE_N = 46_340          # n(n-1)/2 < 2^31
+
+
+def _count_dtype(n: int):
+    """Pair counts overflow int32 beyond n~46k; f32 accumulation is exact to
+    ~6e-8 relative — far below the b% quantile granularity at that scale."""
+    return jnp.int32 if n <= _INT32_SAFE_N else jnp.float32
+
+
+def _count_below(ps: jax.Array, t: jax.Array) -> jax.Array:
+    """#pairs (i<j in sorted order) with ps[j] - ps[i] <= t. O(N log N)."""
+    n = ps.shape[0]
+    lo = jnp.searchsorted(ps, ps - t, side="left")
+    idx = jnp.arange(n)
+    return jnp.sum((idx - lo).astype(_count_dtype(n)))
+
+
+def threshold_stats(p: jax.Array, tau: jax.Array) -> ThresholdStats:
+    """Exact count / sum / gradient-coefficients for pairs with d <= tau."""
+    n = p.shape[0]
+    ps, prefix, order = _sorted_prefix(p)
+    idx = jnp.arange(n)
+    lo = jnp.searchsorted(ps, ps - tau, side="left")
+    hi = jnp.searchsorted(ps, ps + tau, side="right")
+    below = idx - lo                  # j < i (sorted) within tau
+    above = hi - idx - 1              # j > i (sorted) within tau
+    count = jnp.sum(below.astype(_count_dtype(n)))
+    # sum over {j<i} of (ps[i] - ps[j]) = below*ps[i] - (prefix[i]-prefix[lo])
+    s = jnp.sum(below * ps - (prefix[idx] - prefix[lo]))
+    c_sorted = (below - above).astype(p.dtype)
+    coeff = jnp.zeros_like(p).at[order].set(c_sorted)
+    return ThresholdStats(count=count, sum=s, coeff=coeff, tau=tau)
+
+
+def find_quantile_threshold(p: jax.Array, k_pairs: int) -> jax.Array:
+    """Smallest tau with count(tau) >= k_pairs, by monotone bisection."""
+    ps = jnp.sort(p)
+    lo0 = jnp.zeros((), p.dtype)
+    hi0 = (ps[-1] - ps[0]) + jnp.asarray(1e-12, p.dtype)
+
+    k_cmp = jnp.asarray(k_pairs, _count_dtype(p.shape[0]))
+
+    def body(_, carry):
+        lo, hi = carry
+        mid = 0.5 * (lo + hi)
+        cnt = _count_below(ps, mid)
+        take_hi = cnt >= k_cmp
+        return (jnp.where(take_hi, lo, mid), jnp.where(take_hi, mid, hi))
+
+    lo, hi = jax.lax.fori_loop(0, _BISECT_ITERS, body, (lo0, hi0))
+    return hi
+
+
+@functools.partial(jax.jit, static_argnames=("b",))
+def _mu_fast_impl(w: jax.Array, x: jax.Array, *, b: float):
+    k_pairs = num_selected_pairs(x.shape[0], b)
+    wn = w / jnp.linalg.norm(w)
+    p = x @ wn
+    tau = find_quantile_threshold(p, k_pairs)
+    st = threshold_stats(p, tau)
+    cnt = jnp.maximum(st.count, 1)
+    # exact tie correction: drop the (count - k) excess pairs, all == tau
+    kf = jnp.asarray(k_pairs, p.dtype)          # may exceed int32 range
+    excess = cnt.astype(p.dtype) - kf
+    value = (st.sum - excess * st.tau) / kf
+    g_raw = (x.T @ st.coeff) / cnt.astype(p.dtype)
+    g = g_raw - jnp.dot(g_raw, wn) * wn  # tangent projection (chain rule of w/||w||)
+    return value, g, st
+
+
+def mu_b_fast_value_and_grad(w: jax.Array, x: jax.Array, *, b: float):
+    value, g, _ = _mu_fast_impl(w, x, b=b)
+    return value, g
+
+
+@jax.custom_vjp
+def _mu_custom(w, x, b):
+    value, _, _ = _mu_fast_impl(w, x, b=b)
+    return value
+
+
+def _mu_fwd(w, x, b):
+    value, g, st = _mu_fast_impl(w, x, b=b)
+    wn = w / jnp.linalg.norm(w)
+    return value, (g, st.coeff, st.count, wn)
+
+
+def _mu_bwd(res, ct):
+    g, coeff, count, wn = res
+    cnt = jnp.maximum(count, 1).astype(g.dtype)
+    # d mu / d x_i = (c_i / count) * w_hat   (tangent part wrt x is exact)
+    gx = (coeff[:, None] / cnt) * wn[None, :] * ct
+    return (g * ct, gx, None)
+
+
+_mu_custom.defvjp(_mu_fwd, _mu_bwd)
+
+
+def mu_b_fast(w: jax.Array, x: jax.Array, *, b: float) -> jax.Array:
+    """Differentiable fast mu_b (custom VJP; exact value, subgradient)."""
+    return _mu_custom(w, x, b)
+
+
+@functools.partial(jax.jit, static_argnames=("b",))
+def phi_fast_value_and_grad(
+    w: jax.Array,
+    x: jax.Array,
+    prev: jax.Array,
+    prev_mask: jax.Array,
+    *,
+    b: float,
+    alpha: float,
+):
+    """Value and tangent gradient of phi = mu_b(w) - alpha*sum_j mask_j (w_j.w)^2.
+
+    ``prev`` is a fixed-size (m, n) buffer of previously selected directions
+    with ``prev_mask`` marking valid rows — fixed shapes keep one XLA program
+    for the whole greedy loop.
+    """
+    mu, g_mu, _ = _mu_fast_impl(w, x, b=b)
+    wn = w / jnp.linalg.norm(w)
+    dots = (prev @ wn) * prev_mask
+    pen = alpha * jnp.sum(dots * dots)
+    g_pen_raw = 2.0 * alpha * (prev.T @ (dots * prev_mask))
+    g_pen = g_pen_raw - jnp.dot(g_pen_raw, wn) * wn
+    return mu - pen, g_mu - g_pen

@@ -1,0 +1,179 @@
+"""MPAD trainer: greedy direction selection by Riemannian Adam on the sphere.
+
+Implements Algorithm 1 of the paper as a single jitted ``lax.scan`` program:
+
+  for k = 1..m:                      (outer scan, carry = direction buffer)
+      w ~ random unit vector
+      for t = 1..T:                  (inner scan, carry = (w, adam state))
+          phi, g = mu_b(w) - alpha * sum_j (w_j . w)^2   (tangent gradient)
+          w <- normalize(w + adam(g))
+      append w
+
+Backends:
+  * ``fast``   — O(N log N) sorted-threshold path (default; beyond-paper)
+  * ``exact``  — paper-faithful O(N^2) oracle via autodiff through top_k
+  * ``kernel`` — Pallas tiled pairwise kernel (TPU target; interpret on CPU)
+
+``batch_size`` enables *stochastic MPAD* (paper §6 future work): each inner
+iteration evaluates the objective on a fresh uniform row-subsample.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import fast_objective, objective
+
+__all__ = ["MPADConfig", "MPADResult", "fit_mpad", "transform"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MPADConfig:
+    m: int                      # target dimension (number of directions)
+    b: float = 80.0             # quantile percentage in (0, 100]
+    alpha: float = 25.0         # orthogonality penalty factor
+    iters: int = 64             # optimization iterations per direction (T)
+    lr: float = 0.05
+    backend: str = "fast"       # fast | exact | kernel
+    seed: int = 0
+    center: bool = True
+    batch_size: Optional[int] = None   # stochastic MPAD row-subsample
+    beta1: float = 0.9
+    beta2: float = 0.999
+    adam_eps: float = 1e-8
+
+    def __post_init__(self):
+        if not (0.0 < self.b <= 100.0):
+            raise ValueError(f"b must be in (0, 100], got {self.b}")
+        if self.backend not in ("fast", "exact", "kernel"):
+            raise ValueError(f"unknown backend {self.backend!r}")
+        if self.m < 1:
+            raise ValueError("m must be >= 1")
+
+
+class MPADResult(NamedTuple):
+    matrix: jax.Array            # (m, n) projection matrix, rows unit-norm
+    mean: jax.Array              # (n,) centering offset (zeros if center=False)
+    objective_trace: jax.Array   # (m, iters) phi value per direction per iter
+
+    def __call__(self, x: jax.Array) -> jax.Array:
+        return transform(self, x)
+
+
+def transform(result, x: jax.Array) -> jax.Array:
+    """f(x) = M (x - mean): maps (..., n) -> (..., m)."""
+    if isinstance(result, MPADResult):
+        matrix, mean = result.matrix, result.mean
+    else:
+        matrix, mean = result, jnp.zeros(result.shape[1], result.dtype)
+    return (x - mean) @ matrix.T
+
+
+def _phi_exact_value_and_grad(w, x, prev, prev_mask, *, b, alpha):
+    """Paper-faithful phi via autodiff (normalizing oracle + masked penalty)."""
+
+    def phi(w_):
+        mu = objective.mu_b_exact(w_, x, b=b)
+        wn = w_ / jnp.linalg.norm(w_)
+        dots = (prev @ wn) * prev_mask
+        return mu - alpha * jnp.sum(dots * dots)
+
+    return jax.value_and_grad(phi)(w)
+
+
+def _get_backend(name: str):
+    if name == "fast":
+        return fast_objective.phi_fast_value_and_grad
+    if name == "exact":
+        return _phi_exact_value_and_grad
+    if name == "kernel":
+        from repro.kernels.mpad_pairwise import ops as kernel_ops
+
+        return kernel_ops.phi_kernel_value_and_grad
+    raise ValueError(name)
+
+
+def greedy_fit_loop(x, key, phi_vg, *, m, b, alpha, iters, lr, batch_size,
+                    beta1, beta2, adam_eps):
+    """The greedy direction loop of Algorithm 1, parameterized on the
+    objective backend ``phi_vg(w, x, prev, prev_mask, b=, alpha=)``.
+
+    Pure function of its inputs — callers jit it (and may run it inside
+    ``shard_map`` with a collective-aware ``phi_vg``; see ``distributed.py``).
+    """
+    n_points, n_dim = x.shape
+
+    def direction_step(carry, k):
+        mbuf, mask = carry
+        wkey = jax.random.fold_in(key, k)
+        w0 = jax.random.normal(wkey, (n_dim,), x.dtype)
+        w0 = w0 / jnp.linalg.norm(w0)
+
+        def adam_iter(state, t):
+            w, mom, vel = state
+            if batch_size is not None and batch_size < n_points:
+                bkey = jax.random.fold_in(wkey, t + 1)
+                rows = jax.random.choice(
+                    bkey, n_points, (batch_size,), replace=False)
+                xb = x[rows]
+            else:
+                xb = x
+            phi, g = phi_vg(w, xb, mbuf, mask, b=b, alpha=alpha)
+            mom = beta1 * mom + (1.0 - beta1) * g
+            vel = beta2 * vel + (1.0 - beta2) * g * g
+            t1 = (t + 1).astype(x.dtype)
+            mhat = mom / (1.0 - beta1 ** t1)
+            vhat = vel / (1.0 - beta2 ** t1)
+            w = w + lr * mhat / (jnp.sqrt(vhat) + adam_eps)   # ascent
+            w = w / jnp.linalg.norm(w)
+            return (w, mom, vel), phi
+
+        zeros = jnp.zeros((n_dim,), x.dtype)
+        (w, _, _), trace = jax.lax.scan(
+            adam_iter, (w0, zeros, zeros), jnp.arange(iters))
+        mbuf = mbuf.at[k].set(w)
+        mask = mask.at[k].set(1.0)
+        return (mbuf, mask), trace
+
+    mbuf0 = jnp.zeros((m, n_dim), x.dtype)
+    mask0 = jnp.zeros((m,), x.dtype)
+    (mbuf, _), traces = jax.lax.scan(
+        direction_step, (mbuf0, mask0), jnp.arange(m))
+    return mbuf, traces
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("m", "b", "alpha", "iters", "lr", "backend", "batch_size",
+                     "beta1", "beta2", "adam_eps"),
+)
+def _fit(x, key, *, m, b, alpha, iters, lr, backend, batch_size, beta1, beta2,
+         adam_eps):
+    phi_vg = _get_backend(backend)
+    return greedy_fit_loop(
+        x, key, phi_vg, m=m, b=b, alpha=alpha, iters=iters, lr=lr,
+        batch_size=batch_size, beta1=beta1, beta2=beta2, adam_eps=adam_eps)
+
+
+def fit_mpad(x: jax.Array, config: MPADConfig,
+             key: Optional[jax.Array] = None) -> MPADResult:
+    """Fit the MPAD projection on data ``x`` of shape (N, n)."""
+    x = jnp.asarray(x, jnp.float32)
+    if x.ndim != 2:
+        raise ValueError(f"x must be (N, n), got {x.shape}")
+    if config.m > x.shape[1]:
+        raise ValueError(f"m={config.m} exceeds input dim {x.shape[1]}")
+    if key is None:
+        key = jax.random.key(config.seed)
+    mean = x.mean(axis=0) if config.center else jnp.zeros(x.shape[1], x.dtype)
+    xc = x - mean
+    matrix, traces = _fit(
+        xc, key,
+        m=config.m, b=config.b, alpha=config.alpha, iters=config.iters,
+        lr=config.lr, backend=config.backend, batch_size=config.batch_size,
+        beta1=config.beta1, beta2=config.beta2, adam_eps=config.adam_eps)
+    return MPADResult(matrix=matrix, mean=mean, objective_trace=traces)

@@ -1,0 +1,10 @@
+from .synthetic import (make_fasttext_like, make_isolet_like,
+                        make_arcene_like, make_pbmc3k_like, PAPER_DATASETS,
+                        make_clustered)
+from .pipeline import lm_token_batches, deterministic_shard
+from .graph import make_random_graph, sample_neighborhood_batch
+
+__all__ = ["make_fasttext_like", "make_isolet_like", "make_arcene_like",
+           "make_pbmc3k_like", "PAPER_DATASETS", "make_clustered",
+           "lm_token_batches", "deterministic_shard",
+           "make_random_graph", "sample_neighborhood_batch"]

@@ -1,0 +1,67 @@
+"""Deterministic, restart-safe data pipeline.
+
+Every batch is a pure function of (seed, step, shard) — no dispatcher state.
+This is the straggler/fault story (DESIGN.md §5): a replaced host recomputes
+exactly its shard for any step without coordination, and resuming from a
+checkpoint at step k replays the identical stream from k.
+"""
+from __future__ import annotations
+
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["lm_token_batches", "deterministic_shard", "recsys_ranking_batch",
+           "twotower_batch"]
+
+
+def deterministic_shard(seed: int, step: int, shard: int) -> jax.Array:
+    """The per-(step, shard) PRNG key — the whole coordination protocol."""
+    return jax.random.fold_in(jax.random.fold_in(
+        jax.random.key(seed), step), shard)
+
+
+def lm_token_batches(seed: int, batch: int, seq: int, vocab: int,
+                     shard: int = 0, n_steps: int | None = None
+                     ) -> Iterator[dict]:
+    """Zipf-ish synthetic token stream; yields {tokens, labels} (B, S)."""
+    ranks = np.arange(1, vocab + 1)
+    probs = (1.0 / ranks ** 1.1)
+    probs /= probs.sum()
+    step = 0
+    while n_steps is None or step < n_steps:
+        key = deterministic_shard(seed, step, shard)
+        toks = jax.random.choice(key, vocab, (batch, seq + 1),
+                                 p=jnp.asarray(probs))
+        yield {"tokens": toks[:, :-1].astype(jnp.int32),
+               "labels": toks[:, 1:].astype(jnp.int32)}
+        step += 1
+
+
+def recsys_ranking_batch(key, batch: int, seq_len: int, n_items: int,
+                         n_cats: int = 1000) -> dict:
+    ks = jax.random.split(key, 7)
+    return {
+        "hist_items": jax.random.randint(ks[0], (batch, seq_len), 0, n_items),
+        "hist_cats": jax.random.randint(ks[1], (batch, seq_len), 0, n_cats),
+        "target_item": jax.random.randint(ks[2], (batch,), 0, n_items),
+        "target_cat": jax.random.randint(ks[3], (batch,), 0, n_cats),
+        "neg_items": jax.random.randint(ks[4], (batch, seq_len), 0, n_items),
+        "neg_cats": jax.random.randint(ks[5], (batch, seq_len), 0, n_cats),
+        "label": (jax.random.uniform(ks[6], (batch,)) > 0.5).astype(
+            jnp.float32),
+    }
+
+
+def twotower_batch(key, batch: int, n_users: int, n_items: int,
+                   n_hist: int, n_neg: int) -> dict:
+    ks = jax.random.split(key, 4)
+    return {
+        "user_ids": jax.random.randint(ks[0], (batch,), 0, n_users),
+        "hist_ids": jax.random.randint(ks[1], (batch, n_hist), 0, n_items),
+        "pos_items": jax.random.randint(ks[2], (batch,), 0, n_items),
+        "neg_items": jax.random.randint(ks[3], (n_neg,), 0, n_items),
+        "neg_logq": jnp.full((n_neg,), -float(np.log(n_items))),
+    }

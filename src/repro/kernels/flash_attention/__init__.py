@@ -1,0 +1,5 @@
+from .kernel import flash_attention_fwd
+from .ops import flash_attention
+from .ref import attention_ref
+
+__all__ = ["flash_attention_fwd", "flash_attention", "attention_ref"]

@@ -1,0 +1,130 @@
+"""Pallas TPU flash-attention (forward): online-softmax tiles in VMEM.
+
+The §Perf measurement showed the chunked-jnp attention's score/probability
+tensors dominate the LM cells' HBM traffic (every (q_chunk x kv_chunk) f32
+tile is written + read back around each XLA fusion boundary). This kernel
+keeps the running (m, l, acc) state and the score tile entirely in VMEM:
+HBM traffic collapses to Q/K/V reads + one output write — the canonical
+FlashAttention dataflow expressed for the TPU memory hierarchy.
+
+Layout: grid (B*KV*G, nq, nk), kv axis fastest-varying. Q is viewed as
+(B*KV*G, Sq, dh) — GQA folds query groups into the leading grid axis and the
+K/V BlockSpec index maps divide it back (no KV head replication in HBM).
+Running state lives in revisited output blocks (acc, m, l); pl.when skips
+fully-masked (causal/window) kv tiles so the causal triangle costs ~half.
+
+Causal self-attention (q_pos = kv_pos = arange) with optional sliding
+window — the training/prefill hot path. Block sizes default to 128/256
+(MXU-aligned); VMEM per step ~ (2*q_blk*dh + k_blk*dh + q_blk*k_blk)*4B
+(128, 256, dh=128: ~0.4 MiB).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_NEG_INF = -1e30
+
+
+def _flash_kernel(sq, skv, g, window, scale, q_ref, k_ref, v_ref,
+                  acc_ref, m_ref, l_ref):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    qb = q_ref.shape[0]
+    kb = k_ref.shape[0]
+    # absolute positions: q rows are (g, Sq) folded -> position = row % Sq
+    row = qi * qb + jax.lax.broadcasted_iota(jnp.int32, (qb, kb), 0)
+    q_pos = row % sq
+    kv_pos = ki * kb + jax.lax.broadcasted_iota(jnp.int32, (qb, kb), 1)
+
+    @pl.when((ki == 0))
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # skip tiles that are entirely in the causal future (or past the window)
+    first_q = (qi * qb) % sq                 # positions are periodic in g
+    last_q = jnp.minimum(first_q + qb - 1, sq - 1)
+    tile_live = (ki * kb) <= last_q
+    if window is not None:
+        tile_live &= (ki * kb + kb - 1) >= 0   # window handled per-element
+
+    @pl.when(tile_live)
+    def _compute():
+        q = q_ref[...].astype(jnp.float32)             # (qb, dh)
+        k = k_ref[...].astype(jnp.float32)             # (kb, dh)
+        v = v_ref[...].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (qb, kb)
+        ok = (kv_pos <= q_pos) & (kv_pos < skv)
+        if window is not None:
+            ok &= (q_pos - kv_pos) < window
+        s = jnp.where(ok, s, _NEG_INF)
+        m_prev = m_ref[...][:, 0]                      # (qb,)
+        l_prev = l_ref[...][:, 0]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + jnp.sum(p, axis=1)
+        pv = jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)        # (qb, dh)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + pv
+        m_ref[...] = m_new[:, None]
+        l_ref[...] = l_new[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention_fwd(q, k, v, *, window=None, block_q: int = 128,
+                        block_k: int = 256, interpret: bool = True):
+    """Causal GQA self-attention. q: (B, Sq, H, dh); k, v: (B, Skv, KV, dh).
+
+    Returns (B, Sq, H, dh) in q's dtype.
+    """
+    b, sq, h, dh = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    scale = 1.0 / math.sqrt(dh)
+    block_q = min(block_q, sq)
+    if sq % block_q:
+        block_q = math.gcd(block_q, sq)
+    block_k = min(block_k, skv)
+    if skv % block_k:
+        block_k = math.gcd(block_k, skv)
+    # fold GQA groups into the lead axis: row r of head (kv, g) = g*Sq + pos
+    qv = (q.reshape(b, sq, kvh, g, dh).transpose(0, 2, 3, 1, 4)
+          .reshape(b * kvh, g * sq, dh))
+    kv_ = k.transpose(0, 2, 1, 3).reshape(b * kvh, skv, dh)
+    vv = v.transpose(0, 2, 1, 3).reshape(b * kvh, skv, dh)
+    grid = (b * kvh, g * sq // block_q, skv // block_k)
+    acc, m, l = pl.pallas_call(
+        functools.partial(_flash_kernel, sq, skv, g, window, scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, block_q, dh), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((None, block_k, dh), lambda bh, qi, ki: (bh, ki, 0)),
+            pl.BlockSpec((None, block_k, dh), lambda bh, qi, ki: (bh, ki, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, block_q, dh), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((None, block_q, 1), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((None, block_q, 1), lambda bh, qi, ki: (bh, qi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b * kvh, g * sq, dh), jnp.float32),
+            jax.ShapeDtypeStruct((b * kvh, g * sq, 1), jnp.float32),
+            jax.ShapeDtypeStruct((b * kvh, g * sq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qv, kv_, vv)
+    out = acc / jnp.maximum(l, 1e-30)
+    out = (out.reshape(b, kvh, g, sq, dh).transpose(0, 3, 1, 2, 4)
+           .reshape(b, sq, h, dh))
+    return out.astype(q.dtype)

@@ -1,0 +1,36 @@
+"""Jit'd wrapper with custom VJP: Pallas flash forward, rematerialized
+chunked-jnp backward (the standard serve-fast/train-correct split — the
+backward recomputes through the memory-bounded chunked path)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.models.layers import chunked_attention
+from .kernel import flash_attention_fwd
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def flash_attention(q, k, v, window=None, interpret=True):
+    return flash_attention_fwd(q, k, v, window=window, interpret=interpret)
+
+
+def _chunked(q, k, v, window):
+    sq = q.shape[1]
+    pos = jax.numpy.arange(sq)
+    return chunked_attention(q, k, v, pos, pos, window=window)
+
+
+def _fwd(q, k, v, window, interpret):
+    out = flash_attention_fwd(q, k, v, window=window, interpret=interpret)
+    return out, (q, k, v)
+
+
+def _bwd(window, interpret, res, ct):
+    q, k, v = res
+    _, vjp = jax.vjp(lambda q_, k_, v_: _chunked(q_, k_, v_, window), q, k, v)
+    return vjp(ct)
+
+
+flash_attention.defvjp(_fwd, _bwd)

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle: full-matrix causal GQA attention (optionally windowed)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, window=None):
+    """q: (B, Sq, H, dh); k, v: (B, Skv, KV, dh); self-attention positions
+    (q_pos = kv_pos = arange). Returns (B, Sq, H, dh) f32."""
+    b, sq, h, dh = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, sq, kvh, g, dh).astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k.astype(jnp.float32))
+    s = s / math.sqrt(dh)
+    qp = jnp.arange(sq)[:, None]
+    kp = jnp.arange(k.shape[1])[None, :]
+    ok = kp <= qp
+    if window is not None:
+        ok &= (qp - kp) < window
+    s = jnp.where(ok[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, dh)

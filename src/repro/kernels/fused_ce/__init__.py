@@ -1,0 +1,5 @@
+from .kernel import fused_ce_fwd
+from .ops import fused_ce
+from .ref import ce_ref
+
+__all__ = ["fused_ce_fwd", "fused_ce", "ce_ref"]

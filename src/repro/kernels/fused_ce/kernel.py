@@ -1,0 +1,95 @@
+"""Pallas TPU fused cross-entropy: logits never reach HBM.
+
+The chunked-CE scan still writes each (rows x vocab_chunk) f32 logits tile
+to HBM around the fusion boundary (with vocab up to 262k this is the second
+largest LM memory term after attention — §Perf). This kernel streams vocab
+tiles through VMEM with an online logsumexp and picks out the gold logit on
+the fly:
+
+  grid (T/bt, V/bv), vocab axis fastest:
+    logits_tile = h_tile @ w_tile              (bt x bv on the MXU)
+    m, s        online max / exp-sum           (bt,) each, revisited outputs
+    gold        sum of one-hot-selected logits (bt,)
+
+loss = (m + log s) - gold, assembled in ops.py. HBM traffic: h read once
+per vocab tile (bt x D), W read once, three (T,) vectors written — no
+(T, V) tensor anywhere.
+
+VMEM per step at bt=256, bv=512, D=2048: h 2 MB + w 4 MB + tile 0.5 MB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_NEG_INF = -1e30
+
+
+def _ce_kernel(vocab, h_ref, w_ref, lab_ref, m_ref, s_ref, g_ref):
+    vi = pl.program_id(1)
+    bt = h_ref.shape[0]
+    bv = w_ref.shape[1]
+    h = h_ref[...].astype(jnp.float32)                   # (bt, D)
+    w = w_ref[...].astype(jnp.float32)                   # (D, bv)
+    logits = jax.lax.dot_general(
+        h, w, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)              # (bt, bv)
+    col = vi * bv + jax.lax.broadcasted_iota(jnp.int32, (bt, bv), 1)
+    logits = jnp.where(col < vocab, logits, _NEG_INF)
+
+    @pl.when(vi == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        s_ref[...] = jnp.zeros_like(s_ref)
+        g_ref[...] = jnp.zeros_like(g_ref)
+
+    m_prev = m_ref[...][:, 0]
+    s_prev = s_ref[...][:, 0]
+    m_new = jnp.maximum(m_prev, jnp.max(logits, axis=1))
+    corr = jnp.exp(m_prev - m_new)
+    s_new = s_prev * corr + jnp.sum(jnp.exp(logits - m_new[:, None]), axis=1)
+    m_ref[...] = m_new[:, None]
+    s_ref[...] = s_new[:, None]
+    lab = lab_ref[...][:, 0]                             # (bt,)
+    hit = (col == lab[:, None])
+    g_ref[...] += jnp.sum(jnp.where(hit, logits, 0.0), axis=1)[:, None]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("vocab", "block_t", "block_v",
+                                    "interpret"))
+def fused_ce_fwd(h, w, labels, *, vocab=None, block_t: int = 256,
+                 block_v: int = 512, interpret: bool = True):
+    """h (T, D), w (D, V), labels (T,) -> per-token loss (T,) f32."""
+    import math
+    t, d = h.shape
+    v = w.shape[1]
+    vocab = v if vocab is None else vocab
+    block_t = min(block_t, t)
+    if t % block_t:
+        block_t = math.gcd(block_t, t)
+    block_v = min(block_v, v)
+    if v % block_v:
+        block_v = math.gcd(block_v, v)
+    grid = (t // block_t, v // block_v)
+    lab2 = labels.reshape(t, 1).astype(jnp.int32)
+    m, s, g = pl.pallas_call(
+        functools.partial(_ce_kernel, vocab),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_t, d), lambda ti, vi: (ti, 0)),
+            pl.BlockSpec((d, block_v), lambda ti, vi: (0, vi)),
+            pl.BlockSpec((block_t, 1), lambda ti, vi: (ti, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_t, 1), lambda ti, vi: (ti, 0)),
+            pl.BlockSpec((block_t, 1), lambda ti, vi: (ti, 0)),
+            pl.BlockSpec((block_t, 1), lambda ti, vi: (ti, 0)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((t, 1), jnp.float32)] * 3,
+        interpret=interpret,
+    )(h, w, lab2)
+    return (m[:, 0] + jnp.log(jnp.maximum(s[:, 0], 1e-30))) - g[:, 0]

@@ -1,0 +1,70 @@
+"""Custom-VJP wrapper: Pallas fused-CE forward; backward recomputes the
+softmax in vocab chunks (never materializing (T, V) either)."""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import fused_ce_fwd
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def fused_ce(h, w, labels, vocab=None, interpret=True):
+    return fused_ce_fwd(h, w, labels, vocab=vocab, interpret=interpret)
+
+
+def _fwd(h, w, labels, vocab, interpret):
+    loss = fused_ce_fwd(h, w, labels, vocab=vocab, interpret=interpret)
+    return loss, (h, w, labels)
+
+
+def _bwd(vocab, interpret, res, ct):
+    """d h = (softmax - onehot) @ w^T, d w = h^T @ (softmax - onehot),
+    computed per vocab chunk with a first lse pass (chunked, O(T) memory)."""
+    h, w, labels = res
+    t, d = h.shape
+    v = w.shape[1]
+    voc = v if vocab is None else vocab
+    chunk = math.gcd(4096, v)
+    n_chunks = v // chunk
+    h32 = h.astype(jnp.float32)
+
+    def lse_pass(carry, vi):
+        m_p, s_p = carry
+        wv = jax.lax.dynamic_slice_in_dim(w, vi * chunk, chunk, 1)
+        lg = h32 @ wv.astype(jnp.float32)
+        col = vi * chunk + jnp.arange(chunk)[None, :]
+        lg = jnp.where(col < voc, lg, -1e30)
+        m_n = jnp.maximum(m_p, lg.max(1))
+        s_n = s_p * jnp.exp(m_p - m_n) + jnp.exp(
+            lg - m_n[:, None]).sum(1)
+        return (m_n, s_n), None
+
+    (m, s), _ = jax.lax.scan(
+        lse_pass, (jnp.full((t,), -1e30), jnp.zeros((t,))),
+        jnp.arange(n_chunks))
+    lse = m + jnp.log(jnp.maximum(s, 1e-30))
+
+    def grad_pass(carry, vi):
+        dh_acc = carry
+        wv = jax.lax.dynamic_slice_in_dim(w, vi * chunk, chunk, 1)
+        lg = h32 @ wv.astype(jnp.float32)
+        col = vi * chunk + jnp.arange(chunk)[None, :]
+        lg = jnp.where(col < voc, lg, -1e30)
+        p = jnp.exp(lg - lse[:, None])
+        p = p - (col == labels[:, None]).astype(jnp.float32)
+        p = p * ct[:, None]
+        dh_acc = dh_acc + p @ wv.astype(jnp.float32).T
+        dwv = h32.T @ p
+        return dh_acc, dwv
+
+    dh, dws = jax.lax.scan(grad_pass, jnp.zeros((t, d)),
+                           jnp.arange(n_chunks))
+    dw = jnp.transpose(dws, (1, 0, 2)).reshape(d, v)   # chunks contiguous
+    return dh.astype(h.dtype), dw.astype(w.dtype), None
+
+
+fused_ce.defvjp(_fwd, _bwd)

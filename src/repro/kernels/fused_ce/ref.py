@@ -1,0 +1,19 @@
+"""Pure-jnp oracle: cross-entropy with materialized logits."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ce_ref(h, w, labels, vocab=None):
+    """h (T, D), w (D, V), labels (T,) -> per-token loss (T,) f32.
+
+    ``vocab``: logical vocab (<= V); padded tail masked out.
+    """
+    logits = (h.astype(jnp.float32) @ w.astype(jnp.float32))
+    if vocab is not None and vocab < w.shape[1]:
+        col = jnp.arange(w.shape[1])[None, :]
+        logits = jnp.where(col < vocab, logits, -1e30)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=1)[:, 0]
+    return lse - gold

@@ -1,0 +1,5 @@
+from .kernel import knn_topk_pallas
+from .ops import knn_topk
+from .ref import knn_ref
+
+__all__ = ["knn_topk_pallas", "knn_topk", "knn_ref"]

@@ -1,0 +1,6 @@
+from .kernel import pairwise_stats_pallas
+from .ref import pairwise_stats_ref
+from .ops import mu_kernel_value_and_grad, phi_kernel_value_and_grad
+
+__all__ = ["pairwise_stats_pallas", "pairwise_stats_ref",
+           "mu_kernel_value_and_grad", "phi_kernel_value_and_grad"]

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the MPAD pairwise-threshold statistics.
+
+Given scalar projections ``p`` (N,) and a threshold ``tau``, over all
+*unordered* pairs i<j with |p_i - p_j| <= tau:
+
+  count — number of such pairs
+  sum   — sum of |p_i - p_j|
+  coeff — c_i = #{j : p_j < p_i within tau} - #{j : p_j > p_i within tau}
+          (the exact subgradient coefficients: grad mu = X^T c / count)
+
+O(N^2) dense; the ground truth for both the Pallas kernel and the sorted
+fast path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pairwise_stats_ref(p: jax.Array, tau: jax.Array):
+    n = p.shape[0]
+    diff = p[:, None] - p[None, :]
+    ad = jnp.abs(diff)
+    neq = ~jnp.eye(n, dtype=bool)
+    within = (ad <= tau) & neq
+    count = jnp.sum(within, dtype=jnp.int32) // 2
+    s = jnp.sum(jnp.where(within, ad, 0.0)) * 0.5
+    coeff = jnp.sum(jnp.where(within, jnp.sign(diff), 0.0), axis=1)
+    return count, s, coeff

@@ -1,0 +1,198 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines: jax locks the device count on first init.
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this driver:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  2. jits the cell's step function with the arch's in/out shardings,
+  3. ``.lower(*ShapeDtypeStructs).compile()`` — no real allocation,
+  4. records ``memory_analysis()`` (proves fit), ``cost_analysis()``
+     (FLOPs/bytes for the roofline), and the collective-op byte volume
+     parsed from the partitioned HLO,
+  5. writes one JSON artifact per cell to --out (incremental: finished
+     cells are skipped on re-run).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh both \
+      [--arch NAME] [--shape NAME] [--out benchmarks/artifacts/dryrun]
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+
+from repro.configs import get_arch, all_arch_names
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.mesh import make_production_mesh
+from repro.parallel.context import mesh_context
+from repro.parallel.sharding import tree_named
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+
+
+def _tensor_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum operand bytes of every collective op in partitioned HLO."""
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        for coll in _COLLECTIVES:
+            # match "= <shape> <coll>(" and "-start(" variants; skip -done
+            if (f" {coll}(" in stripped or f" {coll}-start(" in stripped):
+                lhs, _, rhs = stripped.partition("(")
+                operands = rhs.rsplit(")", 1)[0]
+                n = sum(_tensor_bytes(m.group(1), m.group(2))
+                        for m in _SHAPE_RE.finditer(operands))
+                if n == 0:  # operands listed by name only: use result shape
+                    n = sum(_tensor_bytes(m.group(1), m.group(2))
+                            for m in _SHAPE_RE.finditer(lhs))
+                out[coll] += n
+                counts[coll] += 1
+                break
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    out["counts"] = counts
+    return out
+
+
+def _memory_dict(compiled) -> dict:
+    try:
+        m = compiled.memory_analysis()
+    except Exception as e:                             # backend-specific
+        return {"error": str(e)}
+    if m is None:
+        return {}
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "peak_memory_in_bytes", "generated_code_size_in_bytes")
+    d = {k: getattr(m, k) for k in keys if hasattr(m, k)}
+    if not d:
+        d = {"repr": str(m)}
+    return d
+
+
+def run_cell(arch_name: str, shape_name: str, multi_pod: bool,
+             out_dir: str, verbose: bool = True) -> dict:
+    mesh_tag = "multipod_2x16x16" if multi_pod else "pod_16x16"
+    cell_id = f"{mesh_tag}.{arch_name}.{shape_name}"
+    path = os.path.join(out_dir, cell_id + ".json")
+    if os.path.exists(path):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("status") in ("ok", "skipped"):
+            if verbose:
+                print(f"[cached] {cell_id}: {rec['status']}")
+            return rec
+    arch = get_arch(arch_name)
+    sdef = arch.shapes[shape_name]
+    rec = {"cell": cell_id, "arch": arch_name, "shape": shape_name,
+           "mesh": mesh_tag, "kind": sdef.kind,
+           "n_devices": 512 if multi_pod else 256,
+           "model_flops": arch.model_flops(shape_name)}
+    if sdef.skip is not None:
+        rec.update(status="skipped", reason=sdef.skip)
+        _write(path, rec)
+        if verbose:
+            print(f"[skip]   {cell_id}: {sdef.skip}")
+        return rec
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        with mesh_context(mesh):
+            args = arch.abstract_args(shape_name)
+            in_sh = tree_named(mesh, arch.arg_specs(shape_name, mesh))
+            out_sh = tree_named(mesh, arch.out_specs(shape_name, mesh))
+            step = arch.step_fn(shape_name)
+            jitted = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh)
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            cost = dict(compiled.cost_analysis() or {})
+            mem = _memory_dict(compiled)
+            hlo = compiled.as_text()
+            coll = collective_bytes(hlo)
+            # trip-count-aware analysis (XLA cost_analysis counts scan
+            # bodies once; this multiplies through known_trip_count)
+            tca = analyze_hlo(hlo)
+        rec.update(
+            status="ok", lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+            flops=cost.get("flops", 0.0),
+            bytes_accessed=cost.get("bytes accessed", 0.0),
+            cost_raw={k: v for k, v in cost.items()
+                      if isinstance(v, (int, float)) and not k.startswith("utilization")},
+            memory=mem, collectives=coll,
+            hlo_dot_flops=tca["dot_flops"], hlo_bytes_accessed=tca["bytes"],
+            hlo_coll_bytes=tca["coll_total"],
+            hlo_coll_detail={k: v for k, v in tca.items()
+                             if k.startswith("coll_")},
+            hlo_coll_counts=tca["coll_counts"],
+            hlo_bytes=len(hlo))
+        if verbose:
+            print(f"[ok]     {cell_id}: compile {t_compile:.0f}s "
+                  f"dotflops={tca['dot_flops']:.3e} "
+                  f"coll={tca['coll_total']:.3e}B")
+    except Exception as e:
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+        if verbose:
+            print(f"[FAIL]   {cell_id}: {type(e).__name__}: {e}")
+    _write(path, rec)
+    return rec
+
+
+def _write(path, rec):
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+    os.replace(tmp, path)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--out", default="benchmarks/artifacts/dryrun")
+    args = ap.parse_args()
+    archs = [args.arch] if args.arch else all_arch_names()
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    failed = []
+    for multi in meshes:
+        for a in archs:
+            arch = get_arch(a)
+            shapes = [args.shape] if args.shape else list(arch.shapes)
+            for s in shapes:
+                rec = run_cell(a, s, multi, args.out)
+                if rec["status"] == "error":
+                    failed.append(rec["cell"])
+    print(f"\ndone. {'FAILURES: ' + ', '.join(failed) if failed else 'all cells ok.'}")
+    raise SystemExit(1 if failed else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,316 @@
+"""Trip-count-aware HLO cost analysis.
+
+XLA's built-in ``compiled.cost_analysis()`` counts while-loop bodies ONCE —
+scan-stacked layer models (all our LMs) under-count FLOPs/bytes by ~n_layers
+and miss collectives inside scan bodies entirely. This parser walks the
+post-optimization HLO text instead:
+
+  * builds a symbol table of every instruction's result shape,
+  * computes dot FLOPs exactly (2 * prod(out) * prod(contracted)),
+  * computes bytes accessed per top-level op (operands + outputs; fusion
+    internals collapse into the fusion op),
+  * sums collective operand bytes per collective kind,
+  * weights everything by ``known_trip_count`` through nested while loops
+    (scan bodies multiply correctly even when nested).
+
+This is the measurement backbone of EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["analyze_hlo", "HLO_COLLECTIVES"]
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3": 1, "f8e5m2fnuz": 1, "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+    "token": 0, "s4": 1, "u4": 1,
+}
+
+HLO_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter",
+                   "all-to-all", "collective-permute")
+
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\([^)]*\)\s*->")
+_INSTR = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+)$")
+_SHAPE = re.compile(r"^\(?\s*([a-z0-9]+)\[([0-9,]*)\]")
+_TUPLE_SHAPES = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OPNAME = re.compile(r"^(?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+([\w\-]+)\(")
+_CALLS = re.compile(r"(?:calls|to_apply|body)=%?([\w\.\-]+)")
+_COND = re.compile(r"condition=%?([\w\.\-]+)")
+_BODY = re.compile(r"body=%?([\w\.\-]+)")
+_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_OPERANDS = re.compile(r"%([\w\.\-]+)")
+_LHS_C = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_LHS_B = re.compile(r"lhs_batch_dims=\{([0-9,]*)\}")
+
+_ZERO_COST_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "opt-barrier",
+    "domain",
+}
+
+
+def _shape_bytes(dtype: str, dims: List[int]) -> int:
+    n = 1
+    for d in dims:
+        n *= d
+    return n * DTYPE_BYTES.get(dtype, 4)
+
+
+def _parse_result_shapes(rhs: str) -> List[Tuple[str, List[int]]]:
+    """Result type(s) from the rhs of '='; tuples give several entries."""
+    if rhs.startswith("("):
+        end = rhs.index(")")
+        return [(m.group(1), [int(x) for x in m.group(2).split(",") if x])
+                for m in _TUPLE_SHAPES.finditer(rhs[:end])]
+    m = _SHAPE.match(rhs)
+    if not m:
+        return []
+    return [(m.group(1), [int(x) for x in m.group(2).split(",") if x])]
+
+
+class _Instr:
+    __slots__ = ("name", "op", "rhs", "shapes", "operands")
+
+    def __init__(self, name, op, rhs, shapes, operands):
+        self.name, self.op, self.rhs = name, op, rhs
+        self.shapes, self.operands = shapes, operands
+
+
+def _parse_module(hlo: str):
+    comps: Dict[str, List[_Instr]] = {}
+    roots: Dict[str, str] = {}
+    entry: Optional[str] = None
+    cur: Optional[str] = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if not stripped or stripped.startswith("//"):
+            continue
+        is_hdr = ((line.startswith("%") or line.startswith("ENTRY"))
+                  and stripped.endswith("{") and "->" in stripped)
+        if is_hdr:
+            tok = (stripped.split()[1] if stripped.startswith("ENTRY")
+                   else stripped.split()[0])
+            cur = tok.lstrip("%").split("(")[0]
+            comps[cur] = []
+            if stripped.startswith("ENTRY"):
+                entry = cur
+            continue
+        if stripped == "}":
+            continue
+        if cur is None:
+            continue
+        m = _INSTR.match(stripped)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        shapes = _parse_result_shapes(rhs)
+        opm = _OPNAME.match(rhs)
+        op = opm.group(1) if opm else ""
+        paren = rhs.find("(", rhs.find(op) if op else 0)
+        operands = []
+        if paren >= 0:
+            depth, j = 0, paren
+            while j < len(rhs):
+                if rhs[j] == "(":
+                    depth += 1
+                elif rhs[j] == ")":
+                    depth -= 1
+                    if depth == 0:
+                        break
+                j += 1
+            operands = _OPERANDS.findall(rhs[paren:j + 1])
+        comps[cur].append(_Instr(name, op, rhs, shapes, operands))
+        if stripped.startswith("ROOT"):
+            roots[cur] = op
+    return comps, entry, roots
+
+
+def _dot_flops(instr: _Instr, table) -> float:
+    out_elems = 1
+    for _, dims in instr.shapes:
+        for d in dims:
+            out_elems *= d
+    lhs_shape = None
+    for o in instr.operands:
+        if o in table:
+            lhs_shape = table[o]
+            break
+    if lhs_shape is None:
+        return 0.0
+    cdims = _LHS_C.search(instr.rhs)
+    contracted = 1
+    if cdims and cdims.group(1):
+        for ax in cdims.group(1).split(","):
+            ax = int(ax)
+            if ax < len(lhs_shape[1]):
+                contracted *= lhs_shape[1][ax]
+    return 2.0 * out_elems * contracted
+
+
+_PARAM_IDX = re.compile(r"parameter\((\d+)\)")
+
+
+def _make_operand_charger(comps, roots, table):
+    """Returns charge(ins) -> bytes for one op, with fusion introspection:
+    a fusion operand consumed ONLY by dynamic-slice ops inside the callee is
+    charged at the slice size (what the kernel actually reads), not the full
+    buffer — otherwise scan bodies slicing stacked buffers look like they
+    re-read the whole stack every trip."""
+    param_charge_cache: Dict[str, Dict[int, float]] = {}
+
+    def callee_param_charges(callee: str) -> Dict[int, float]:
+        if callee in param_charge_cache:
+            return param_charge_cache[callee]
+        charges: Dict[int, float] = {}
+        instrs = comps.get(callee, [])
+        by_name = {i.name: i for i in instrs}
+        params = {}
+        for i in instrs:
+            if i.op == "parameter":
+                m = _PARAM_IDX.search(i.rhs)
+                if m:
+                    params[i.name] = int(m.group(1))
+        for pname, idx in params.items():
+            consumers = [i for i in instrs if pname in i.operands]
+            if consumers and all(c.op == "dynamic-slice" for c in consumers):
+                charges[idx] = sum(
+                    2.0 * sum(_shape_bytes(*s) for s in c.shapes)
+                    for c in consumers)
+        param_charge_cache[callee] = charges
+        return charges
+
+    def charge(ins: _Instr) -> float:
+        opb = [_shape_bytes(*table[o]) if o in table else 0
+               for o in ins.operands]
+        outb = sum(_shape_bytes(*s) for s in ins.shapes)
+        callee = None
+        if ins.op == "fusion":
+            cm = _CALLS.search(ins.rhs)
+            callee = cm.group(1) if cm else None
+        root_op = roots.get(callee, "") if callee else ""
+        if ins.op == "dynamic-update-slice" or root_op == "dynamic-update-slice":
+            big = max(opb) if opb else 0
+            return 2.0 * max(sum(opb) - big, 0)
+        if ins.op == "dynamic-slice" or root_op == "dynamic-slice":
+            return 2.0 * outb
+        if callee:
+            charges = callee_param_charges(callee)
+            total = outb
+            for i, b in enumerate(opb):
+                total += charges.get(i, b)
+            return total
+        return outb + sum(opb)
+
+    return charge
+
+
+def analyze_hlo(hlo: str) -> dict:
+    comps, entry, roots = _parse_module(hlo)
+    # global symbol table name -> (dtype, dims); per-computation conflicts are
+    # rare post-opt (names suffixed); last writer wins is acceptable.
+    table: Dict[str, Tuple[str, List[int]]] = {}
+    for instrs in comps.values():
+        for ins in instrs:
+            if ins.shapes:
+                table[ins.name] = ins.shapes[0]
+    charge = _make_operand_charger(comps, roots, table)
+
+    memo: Dict[str, dict] = {}
+
+    def comp_cost(cname: str) -> dict:
+        if cname in memo:
+            return dict(memo[cname])
+        total = {"dot_flops": 0.0, "bytes": 0.0,
+                 **{f"coll_{c}": 0.0 for c in HLO_COLLECTIVES},
+                 **{f"count_{c}": 0.0 for c in HLO_COLLECTIVES}}
+        memo[cname] = total            # cycle guard
+        for ins in comps.get(cname, []):
+            op = ins.op
+            if op in _ZERO_COST_OPS or not op:
+                continue
+            if op == "while":
+                trip = 1
+                tm = _TRIP.search(ins.rhs)
+                if tm:
+                    trip = int(tm.group(1))
+                bm, cm = _BODY.search(ins.rhs), _COND.search(ins.rhs)
+                for sub, mult in ((bm, trip), (cm, trip + 1)):
+                    if sub:
+                        sc = comp_cost(sub.group(1))
+                        for k in total:
+                            total[k] += mult * sc[k]
+                continue
+            if op in ("fusion", "call", "conditional", "custom-call",
+                      "reduce", "map", "sort", "scatter", "select-and-scatter"):
+                cm = _CALLS.search(ins.rhs)
+                if cm and cm.group(1) in comps:
+                    sc = comp_cost(cm.group(1))
+                    # fusion internals collapse into one kernel: take FLOPs
+                    # and collectives, NOT the internal bytes
+                    for k in total:
+                        if k != "bytes":
+                            total[k] += sc[k]
+            if op == "dot":
+                total["dot_flops"] += _dot_flops(ins, table)
+            # bytes with in-place-update + fusion slice-introspection
+            # semantics (see _make_operand_charger) — without them, scan
+            # bodies look like they move the whole stacked buffers per trip.
+            total["bytes"] += charge(ins)
+            base = op.replace("-start", "")
+            if base in HLO_COLLECTIVES and not op.endswith("-done"):
+                ob = sum(_shape_bytes(*table[o])
+                         for o in ins.operands if o in table)
+                if ob == 0:
+                    ob = sum(_shape_bytes(*s) for s in ins.shapes)
+                total[f"coll_{base}"] += ob
+                total[f"count_{base}"] += 1
+        memo[cname] = total
+        return dict(total)
+
+    if entry is None:
+        return {"dot_flops": 0.0, "bytes": 0.0, "coll_total": 0.0}
+    out = comp_cost(entry)
+    out["coll_total"] = sum(out[f"coll_{c}"] for c in HLO_COLLECTIVES)
+    out["coll_counts"] = {c: out.pop(f"count_{c}") for c in HLO_COLLECTIVES}
+    return out
+
+
+def bytes_breakdown(hlo: str, top: int = 12):
+    """Trip-weighted bytes per (op, metadata op_name prefix) — the perf-loop
+    profiling view: which ops move the memory term."""
+    comps, entry, roots = _parse_module(hlo)
+    table: Dict[str, Tuple[str, List[int]]] = {}
+    for instrs in comps.values():
+        for ins in instrs:
+            if ins.shapes:
+                table[ins.name] = ins.shapes[0]
+    agg: Dict[str, float] = {}
+    _META = re.compile(r'op_name="([^"]*)"')
+    charge = _make_operand_charger(comps, roots, table)
+
+    def visit(cname: str, weight: float):
+        for ins in comps.get(cname, []):
+            op = ins.op
+            if op in _ZERO_COST_OPS or not op:
+                continue
+            if op == "while":
+                trip = 1
+                tm = _TRIP.search(ins.rhs)
+                if tm:
+                    trip = int(tm.group(1))
+                bm = _BODY.search(ins.rhs)
+                if bm:
+                    visit(bm.group(1), weight * trip)
+                continue
+            b = charge(ins)
+            mm = _META.search(ins.rhs)
+            tag = "/".join(mm.group(1).split("/")[-3:])[-64:] if mm else ""
+            key = f"{op}:{tag}"
+            agg[key] = agg.get(key, 0.0) + weight * b
+
+    if entry:
+        visit(entry, 1.0)
+    return sorted(agg.items(), key=lambda kv: -kv[1])[:top]

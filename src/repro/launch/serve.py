@@ -1,0 +1,61 @@
+"""Serving launcher: build an MPAD-reduced vector index over a corpus and
+serve batched k-NN queries (the paper's deployment shape).
+
+  PYTHONPATH=src python -m repro.launch.serve --corpus 20000 --dim 256 \
+      --target-dim 32 --batches 5
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+from repro.core import MPADConfig
+from repro.data.synthetic import make_clustered
+from repro.search import SearchEngine, ServeConfig, knn_search
+from repro.search.knn import recall_at_k
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--corpus", type=int, default=20000)
+    ap.add_argument("--dim", type=int, default=256)
+    ap.add_argument("--target-dim", type=int, default=32)
+    ap.add_argument("--batch", type=int, default=256)
+    ap.add_argument("--batches", type=int, default=5)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--ivf", action="store_true")
+    args = ap.parse_args()
+
+    key = jax.random.key(0)
+    corpus, _ = make_clustered(key, args.corpus, 1, args.dim, n_clusters=64,
+                               spread=0.4, center_scale=1.5)
+    t0 = time.time()
+    engine = SearchEngine(corpus, ServeConfig(
+        target_dim=args.target_dim, rerank=4 * args.k, use_ivf=args.ivf,
+        mpad=MPADConfig(m=args.target_dim, iters=64, batch_size=2048),
+        fit_sample=4096))
+    print(f"index built in {time.time()-t0:.1f}s "
+          f"({args.dim}->{args.target_dim} dims, ivf={args.ivf})")
+
+    total, rec_sum = 0.0, 0.0
+    for i in range(args.batches):
+        queries = corpus[jax.random.randint(
+            jax.random.fold_in(key, i), (args.batch,), 0, args.corpus)]
+        t0 = time.time()
+        _, ids = engine.search(queries, args.k)
+        jax.block_until_ready(ids)
+        dt = time.time() - t0
+        _, truth = knn_search(queries, corpus, args.k)
+        rec = float(recall_at_k(ids, truth))
+        total += dt
+        rec_sum += rec
+        print(f"batch {i}: {dt*1e3:7.1f} ms  recall@{args.k}={rec:.4f}")
+    print(f"\nmean: {total/args.batches*1e3:.1f} ms/batch "
+          f"({args.batch/(total/args.batches):.0f} qps), "
+          f"recall={rec_sum/args.batches:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""Model zoo: decoder-only LMs (dense + MoE), GIN GNN, recsys rankers and
+two-tower retrieval — the assigned architecture families (DESIGN.md §4)."""

@@ -1,0 +1,45 @@
+"""Sparse embedding ops: JAX has no native EmbeddingBag — built here from
+``jnp.take`` + masking / ``segment_sum`` (kernel-taxonomy §RecSys note).
+
+Tables are row-shardable over the "model" mesh axis (the tables ARE the
+memory in recsys); lookups lower to gathers that XLA SPMD converts into
+index-matched collectives.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["embedding_lookup", "embedding_bag", "hash_bucket"]
+
+
+def embedding_lookup(table: jax.Array, ids: jax.Array) -> jax.Array:
+    """Plain gather: ids (...,) -> (..., D). Negative ids return zeros."""
+    emb = table[jnp.maximum(ids, 0)]
+    return emb * (ids >= 0)[..., None].astype(emb.dtype)
+
+
+def embedding_bag(table: jax.Array, ids: jax.Array, mode: str = "sum"):
+    """EmbeddingBag over fixed-width bags: ids (B, L) with -1 padding.
+
+    mode: sum | mean | max. Returns (B, D).
+    """
+    mask = (ids >= 0)
+    emb = table[jnp.maximum(ids, 0)]                       # (B, L, D)
+    maskf = mask[..., None].astype(emb.dtype)
+    if mode == "sum":
+        return jnp.sum(emb * maskf, axis=1)
+    if mode == "mean":
+        cnt = jnp.maximum(jnp.sum(maskf, axis=1), 1.0)
+        return jnp.sum(emb * maskf, axis=1) / cnt
+    if mode == "max":
+        neg = jnp.where(mask[..., None], emb, -jnp.inf)
+        out = jnp.max(neg, axis=1)
+        return jnp.where(jnp.isfinite(out), out, 0.0)
+    raise ValueError(mode)
+
+
+def hash_bucket(ids: jax.Array, n_buckets: int, salt: int = 0) -> jax.Array:
+    """Multiplicative hashing for open-vocabulary id spaces."""
+    h = (ids.astype(jnp.uint32) + jnp.uint32(salt)) * jnp.uint32(2654435761)
+    return (h % jnp.uint32(n_buckets)).astype(jnp.int32)

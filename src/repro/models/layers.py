@@ -1,0 +1,133 @@
+"""Shared transformer layers: RMSNorm, RoPE, chunked (flash-style) attention
+with GQA + sliding-window support, SwiGLU MLP.
+
+Attention never materializes the full (Sq x Skv) score matrix: it runs an
+online-softmax scan over KV chunks (and over Q chunks when Sq is long) — the
+TPU-native equivalent of FlashAttention expressed in pure JAX so that XLA
+keeps the working set at (q_chunk x kv_chunk) per step (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["rms_norm", "rope", "chunked_attention", "swiglu", "he_init"]
+
+_NEG_INF = -1e30
+
+
+def he_init(key, shape, fan_in, dtype=jnp.float32):
+    return (jax.random.normal(key, shape) / math.sqrt(fan_in)).astype(dtype)
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """Rotary embedding. x: (..., S, H, dh), positions: (S,) or (B, S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = jnp.exp(-jnp.arange(0, half, dtype=jnp.float32)
+                    * (math.log(theta) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs       # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]                             # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1).astype(x.dtype)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    """LLaMA-style gated MLP: down(silu(x@gate) * (x@up))."""
+    g = jax.nn.silu(jnp.einsum("...d,df->...f", x, w_gate))
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    return jnp.einsum("...f,fd->...d", g * u, w_down)
+
+
+def _attn_one_q_chunk(qc, k, v, q_pos_c, kv_pos, window, kv_chunk, scale):
+    """Online-softmax over KV chunks for one query chunk.
+
+    qc: (B, Tq, KV, G, dh); k, v: (B, Skv, KV, dh);
+    q_pos_c: (Tq,), kv_pos: (Skv,) with -1 marking unwritten cache slots.
+    """
+    b, tq, kvh, g, dh = qc.shape
+    skv = k.shape[1]
+    n_kv_chunks = skv // kv_chunk
+    kb = k.reshape(b, n_kv_chunks, kv_chunk, kvh, dh)
+    vb = v.reshape(b, n_kv_chunks, kv_chunk, kvh, dh)
+    kvpb = kv_pos.reshape(n_kv_chunks, kv_chunk)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kc, vc, kpc = inp                                  # (B,C,KV,dh) etc.
+        s = jnp.einsum("bqkgd,bckd->bqkgc", qc.astype(jnp.float32),
+                       kc.astype(jnp.float32)) * scale     # (B,Tq,KV,G,C)
+        ok = (kpc[None, :] <= q_pos_c[:, None]) & (kpc[None, :] >= 0)
+        if window is not None:
+            ok &= (q_pos_c[:, None] - kpc[None, :]) < window
+        s = jnp.where(ok[None, :, None, None, :], s, _NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bqkgc,bckd->bqkgd", p, vc.astype(jnp.float32))
+        acc = acc * corr[..., None] + pv
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((b, tq, kvh, g), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, tq, kvh, g), jnp.float32)
+    a0 = jnp.zeros((b, tq, kvh, g, dh), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0),
+        (kb.swapaxes(0, 1), vb.swapaxes(0, 1), kvpb))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out                                             # (B,Tq,KV,G,dh) f32
+
+
+def chunked_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    q_pos: jax.Array, kv_pos: jax.Array,
+    *, window: Optional[int] = None,
+    q_chunk: int = 512, kv_chunk: int = 1024,
+) -> jax.Array:
+    """Causal GQA attention with bounded working set.
+
+    q: (B, Sq, H, dh); k, v: (B, Skv, KV, dh); H = KV * G.
+    q_pos (Sq,), kv_pos (Skv,): absolute token positions (-1 = invalid slot).
+    Causality (kv_pos <= q_pos) and the optional sliding ``window`` are
+    enforced via positions, which uniformly covers train / prefill / decode
+    with ring-buffer caches.
+    """
+    b, sq, h, dh = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    scale = 1.0 / math.sqrt(dh)
+    qg = q.reshape(b, sq, kvh, g, dh)
+    kv_chunk = min(kv_chunk, k.shape[1])
+    if k.shape[1] % kv_chunk:
+        kv_chunk = math.gcd(kv_chunk, k.shape[1])
+    if sq <= q_chunk:
+        out = _attn_one_q_chunk(qg, k, v, q_pos, kv_pos, window, kv_chunk, scale)
+        return out.reshape(b, sq, h, dh).astype(q.dtype)
+    if sq % q_chunk:
+        q_chunk = math.gcd(q_chunk, sq)
+    nq = sq // q_chunk
+    qb = qg.reshape(b, nq, q_chunk, kvh, g, dh).swapaxes(0, 1)
+    qpb = q_pos.reshape(nq, q_chunk)
+
+    def outer(_, inp):
+        qc, qpc = inp
+        o = _attn_one_q_chunk(qc, k, v, qpc, kv_pos, window, kv_chunk, scale)
+        return None, o
+
+    _, outs = jax.lax.scan(outer, None, (qb, qpb))         # (nq,B,qc,KV,G,dh)
+    out = outs.swapaxes(0, 1).reshape(b, sq, h, dh)
+    return out.astype(q.dtype)

@@ -1,0 +1,502 @@
+"""RecSys architectures: SASRec, DIEN, AutoInt, two-tower retrieval.
+
+All four share the recsys substrate pattern: huge row-shardable embedding
+tables -> feature interaction -> small MLP. Serving shapes return top-k only
+(never a (B, vocab) score matrix). The two-tower `retrieval_cand` path is the
+paper's native integration point: candidates are scored in MPAD-reduced
+space and re-ranked exactly (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .embedding import embedding_bag, embedding_lookup
+from .layers import he_init
+
+__all__ = [
+    "SASRecConfig", "sasrec_init", "sasrec_forward", "sasrec_loss",
+    "sasrec_serve_topk",
+    "DIENConfig", "dien_init", "dien_forward", "dien_loss", "dien_score",
+    "AutoIntConfig", "autoint_init", "autoint_forward", "autoint_loss",
+    "TwoTowerConfig", "twotower_init", "twotower_user", "twotower_item",
+    "twotower_loss", "twotower_retrieve",
+]
+
+
+def _mlp_init(key, dims, dtype):
+    ks = jax.random.split(key, len(dims) - 1)
+    return [{"w": he_init(ks[i], (dims[i], dims[i + 1]), dims[i], dtype),
+             "b": jnp.zeros((dims[i + 1],), dtype)}
+            for i in range(len(dims) - 1)]
+
+
+def _mlp_apply(layers, x, final_act=False):
+    for i, l in enumerate(layers):
+        x = x @ l["w"] + l["b"]
+        if i < len(layers) - 1 or final_act:
+            x = jax.nn.relu(x)
+    return x
+
+
+# ================================================================ SASRec
+
+@dataclasses.dataclass(frozen=True)
+class SASRecConfig:
+    name: str = "sasrec"
+    n_items: int = 100_000
+    embed_dim: int = 50
+    n_blocks: int = 2
+    n_heads: int = 1
+    seq_len: int = 50
+    dropout: float = 0.0
+    dtype: object = jnp.float32
+
+
+def sasrec_init(key, cfg: SASRecConfig):
+    ks = jax.random.split(key, 3 + 6 * cfg.n_blocks)
+    p = {
+        "item_emb": he_init(ks[0], (cfg.n_items, cfg.embed_dim),
+                            cfg.embed_dim, cfg.dtype),
+        "pos_emb": he_init(ks[1], (cfg.seq_len, cfg.embed_dim),
+                           cfg.embed_dim, cfg.dtype),
+        "blocks": [],
+    }
+    d = cfg.embed_dim
+    for i in range(cfg.n_blocks):
+        base = 2 + 6 * i
+        p["blocks"].append({
+            "ln1": jnp.ones((d,), cfg.dtype), "ln2": jnp.ones((d,), cfg.dtype),
+            "wq": he_init(ks[base], (d, d), d, cfg.dtype),
+            "wk": he_init(ks[base + 1], (d, d), d, cfg.dtype),
+            "wv": he_init(ks[base + 2], (d, d), d, cfg.dtype),
+            "w1": he_init(ks[base + 3], (d, d), d, cfg.dtype),
+            "b1": jnp.zeros((d,), cfg.dtype),
+            "w2": he_init(ks[base + 4], (d, d), d, cfg.dtype),
+            "b2": jnp.zeros((d,), cfg.dtype),
+        })
+    p["final_ln"] = jnp.ones((d,), cfg.dtype)
+    return p
+
+
+def _ln(x, g):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-6) * g
+
+
+def sasrec_forward(params, cfg: SASRecConfig, seq):
+    """seq (B, L) item ids (-1 pad). Returns hidden states (B, L, D)."""
+    b, l = seq.shape
+    h = embedding_lookup(params["item_emb"], seq) * jnp.sqrt(
+        jnp.asarray(cfg.embed_dim, cfg.dtype))
+    h = h + params["pos_emb"][None, :l]
+    causal = jnp.tril(jnp.ones((l, l), bool))
+    valid = (seq >= 0)
+    for blk in params["blocks"]:
+        x = _ln(h, blk["ln1"])
+        q, k, v = x @ blk["wq"], x @ blk["wk"], x @ blk["wv"]
+        nh, dh = cfg.n_heads, cfg.embed_dim // cfg.n_heads
+        q = q.reshape(b, l, nh, dh); k = k.reshape(b, l, nh, dh)
+        v = v.reshape(b, l, nh, dh)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.sqrt(float(dh))
+        mask = causal[None, None] & valid[:, None, None, :]
+        s = jnp.where(mask, s, -1e30)
+        a = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", a, v).reshape(b, l, cfg.embed_dim)
+        h = h + o
+        x2 = _ln(h, blk["ln2"])
+        h = h + jax.nn.relu(x2 @ blk["w1"] + blk["b1"]) @ blk["w2"] + blk["b2"]
+    return _ln(h, params["final_ln"]) * valid[..., None]
+
+
+def sasrec_loss(params, cfg: SASRecConfig, batch):
+    """Paper objective: BCE(h_t . e_pos) vs BCE(h_t . e_neg)."""
+    h = sasrec_forward(params, cfg, batch["seq"])          # (B, L, D)
+    epos = embedding_lookup(params["item_emb"], batch["pos"])
+    eneg = embedding_lookup(params["item_emb"], batch["neg"])
+    sp = jnp.sum(h * epos, -1).astype(jnp.float32)
+    sn = jnp.sum(h * eneg, -1).astype(jnp.float32)
+    mask = (batch["pos"] >= 0).astype(jnp.float32)
+    loss = (jax.nn.softplus(-sp) + jax.nn.softplus(sn)) * mask
+    return jnp.sum(loss) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def sasrec_serve_topk(params, cfg: SASRecConfig, seq, k: int = 100,
+                      item_chunk: int = 8192):
+    """Score all items for the last position; blocked running top-k so the
+    (B, V) score matrix is never materialized (serve_bulk: B=262144)."""
+    h = sasrec_forward(params, cfg, seq)[:, -1]            # (B, D)
+    v = params["item_emb"].shape[0]
+    item_chunk = min(item_chunk, v)
+    if v % item_chunk:
+        import math as _m
+        item_chunk = _m.gcd(item_chunk, v)
+    n_chunks = v // item_chunk
+    emb = params["item_emb"].reshape(n_chunks, item_chunk, cfg.embed_dim)
+
+    def body(carry, xs):
+        best_s, best_i, off = carry
+        s = h @ xs.T                                       # (B, chunk)
+        ids = off + jnp.arange(item_chunk)[None, :]
+        cs = jnp.concatenate([best_s, s], axis=1)
+        ci = jnp.concatenate([best_i, jnp.broadcast_to(ids, s.shape)], axis=1)
+        top, sel = jax.lax.top_k(cs, k)
+        return (top, jnp.take_along_axis(ci, sel, axis=1),
+                off + item_chunk), None
+
+    init = (jnp.full((h.shape[0], k), -jnp.inf, h.dtype),
+            jnp.zeros((h.shape[0], k), jnp.int32), jnp.zeros((), jnp.int32))
+    (s, i, _), _ = jax.lax.scan(body, init, emb)
+    return s, i
+
+
+# ================================================================== DIEN
+
+@dataclasses.dataclass(frozen=True)
+class DIENConfig:
+    name: str = "dien"
+    n_items: int = 1_000_000
+    n_cats: int = 10_000
+    embed_dim: int = 18
+    seq_len: int = 100
+    gru_dim: int = 108
+    mlp_dims: Tuple[int, ...] = (200, 80)
+    aux_weight: float = 0.5
+    dtype: object = jnp.float32
+
+
+def _gru_init(key, d_in, d_h, dtype):
+    k1, k2 = jax.random.split(key)
+    return {"wx": he_init(k1, (d_in, 3 * d_h), d_in, dtype),
+            "wh": he_init(k2, (d_h, 3 * d_h), d_h, dtype),
+            "b": jnp.zeros((3 * d_h,), dtype)}
+
+
+def _gru_cell_pre(p, h, xproj, d_h):
+    """GRU step from a PRE-PROJECTED input (xproj = x @ wx + b, computed for
+    all timesteps in one batched matmul before the scan — §Perf dien iter 2:
+    hoists the time-invariant projection out of the sequential loop)."""
+    zs = xproj[..., :2 * d_h] + h @ p["wh"][:, :2 * d_h]
+    r = jax.nn.sigmoid(zs[..., :d_h])
+    z = jax.nn.sigmoid(zs[..., d_h:])
+    # candidate uses reset gate on the hidden contribution
+    cand = jnp.tanh(xproj[..., 2 * d_h:] + (r * h) @ p["wh"][:, 2 * d_h:])
+    return (1.0 - z) * cand + z * h
+
+
+def _gru_cell(p, h, x, d_h):
+    return _gru_cell_pre(p, h, x @ p["wx"] + p["b"], d_h)
+
+
+def dien_init(key, cfg: DIENConfig):
+    ks = jax.random.split(key, 8)
+    e2 = cfg.embed_dim * 2                                 # item + category
+    return {
+        "item_emb": he_init(ks[0], (cfg.n_items, cfg.embed_dim),
+                            cfg.embed_dim, cfg.dtype),
+        "cat_emb": he_init(ks[1], (cfg.n_cats, cfg.embed_dim),
+                           cfg.embed_dim, cfg.dtype),
+        "gru1": _gru_init(ks[2], e2, cfg.gru_dim, cfg.dtype),
+        "att_w": he_init(ks[3], (cfg.gru_dim + e2, 1), cfg.gru_dim, cfg.dtype),
+        "att_proj": he_init(ks[4], (e2, cfg.gru_dim), e2, cfg.dtype),
+        "gru2": _gru_init(ks[5], cfg.gru_dim, cfg.gru_dim, cfg.dtype),
+        "mlp": _mlp_init(ks[6], (cfg.gru_dim + e2 + e2,) + cfg.mlp_dims + (1,),
+                         cfg.dtype),
+        "aux_w": he_init(ks[7], (cfg.gru_dim, e2), cfg.gru_dim, cfg.dtype),
+    }
+
+
+def _hist_embed(params, batch):
+    hi = embedding_lookup(params["item_emb"], batch["hist_items"])
+    hc = embedding_lookup(params["cat_emb"], batch["hist_cats"])
+    return jnp.concatenate([hi, hc], axis=-1)              # (B, L, 2E)
+
+
+def _target_embed(params, items, cats):
+    ti = embedding_lookup(params["item_emb"], items)
+    tc = embedding_lookup(params["cat_emb"], cats)
+    return jnp.concatenate([ti, tc], axis=-1)              # (..., 2E)
+
+
+def dien_interest(params, cfg: DIENConfig, hist):
+    """GRU-1 over history -> interest states (B, L, H). Target-independent.
+
+    The input projection (time-invariant) runs as ONE (B*L, 2E) x (2E, 3H)
+    matmul before the scan; the sequential loop only carries h @ wh.
+    """
+    b = hist.shape[0]
+    h0 = jnp.zeros((b, cfg.gru_dim), cfg.dtype)
+
+    def step(h, x):
+        h = _gru_cell(params["gru1"], h, x, cfg.gru_dim)
+        return h, h
+
+    # NOTE (§Perf dien iters 2-3, both refuted and reverted): (a) hoisting
+    # x@wx out of the scan INCREASES traffic — the projected stream
+    # (B,L,3H=324) is 9x wider than the raw inputs (B,L,2E=36); (b) unroll=2
+    # duplicates slice/update traffic. Plain scan + in-loop projection wins.
+    _, states = jax.lax.scan(step, h0, hist.swapaxes(0, 1))
+    return states.swapaxes(0, 1)                           # (B, L, H)
+
+
+def dien_augru(params, cfg: DIENConfig, states, target, hist_mask):
+    """Attention-gated GRU (AUGRU) over interest states for one target."""
+    proj_t = target @ params["att_proj"]                   # (B, H)
+    att_in = jnp.concatenate(
+        [states, jnp.broadcast_to(target[:, None], states.shape[:2] + (target.shape[-1],))],
+        axis=-1)
+    scores = (att_in @ params["att_w"])[..., 0]            # (B, L)
+    scores = scores + jnp.einsum("blh,bh->bl", states, proj_t)
+    scores = jnp.where(hist_mask, scores, -1e30)
+    att = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(states.dtype)
+    b = states.shape[0]
+    h0 = jnp.zeros((b, cfg.gru_dim), cfg.dtype)
+
+    def step(h, xs):
+        s_t, a_t = xs
+        h_new = _gru_cell(params["gru2"], h, s_t, cfg.gru_dim)
+        h = (1.0 - a_t[:, None]) * h + a_t[:, None] * h_new   # attention gate
+        return h, None
+
+    hT, _ = jax.lax.scan(step, h0, (states.swapaxes(0, 1), att.T))
+    return hT                                              # (B, H)
+
+
+def dien_forward(params, cfg: DIENConfig, batch):
+    """Returns (logit (B,), interest states) for target item/cat."""
+    hist = _hist_embed(params, batch)
+    mask = batch["hist_items"] >= 0
+    states = dien_interest(params, cfg, hist)
+    target = _target_embed(params, batch["target_item"], batch["target_cat"])
+    hT = dien_augru(params, cfg, states, target, mask)
+    feats = jnp.concatenate([hT, target, jnp.sum(hist * mask[..., None], 1)],
+                            axis=-1)
+    return _mlp_apply(params["mlp"], feats)[..., 0], states
+
+
+def dien_loss(params, cfg: DIENConfig, batch):
+    logit, states = dien_forward(params, cfg, batch)
+    bce = jnp.mean(
+        jax.nn.softplus(-logit) * batch["label"]
+        + jax.nn.softplus(logit) * (1.0 - batch["label"]))
+    # DIEN auxiliary loss: h_t should predict behavior e_{t+1} vs negatives
+    hist = _hist_embed(params, batch)
+    neg = _target_embed(params, batch["neg_items"], batch["neg_cats"])
+    proj = states[:, :-1] @ params["aux_w"]                # (B, L-1, 2E)
+    sp = jnp.sum(proj * hist[:, 1:], -1).astype(jnp.float32)
+    sn = jnp.sum(proj * neg[:, 1:], -1).astype(jnp.float32)
+    m = (batch["hist_items"][:, 1:] >= 0).astype(jnp.float32)
+    aux = jnp.sum((jax.nn.softplus(-sp) + jax.nn.softplus(sn)) * m) / \
+        jnp.maximum(jnp.sum(m), 1.0)
+    return bce + cfg.aux_weight * aux
+
+
+def dien_score(params, cfg: DIENConfig, batch):
+    """Bulk scoring: one user history vs n_candidates targets.
+
+    batch: hist_items/cats (1, L); cand_items/cats (C,). Shares the GRU-1
+    pass across candidates; AUGRU is vmapped over candidates.
+    """
+    hist = _hist_embed(params, batch)
+    mask = batch["hist_items"] >= 0
+    states = dien_interest(params, cfg, hist)              # (1, L, H)
+    targets = _target_embed(params, batch["cand_items"], batch["cand_cats"])
+
+    def score_one(tgt):
+        hT = dien_augru(params, cfg, states, tgt[None], mask)
+        feats = jnp.concatenate(
+            [hT, tgt[None], jnp.sum(hist * mask[..., None], 1)], axis=-1)
+        return _mlp_apply(params["mlp"], feats)[0, 0]
+
+    return jax.lax.map(score_one, targets, batch_size=4096)
+
+
+# ================================================================ AutoInt
+
+@dataclasses.dataclass(frozen=True)
+class AutoIntConfig:
+    name: str = "autoint"
+    n_fields: int = 39
+    vocab_per_field: int = 100_000
+    embed_dim: int = 16
+    n_attn_layers: int = 3
+    n_heads: int = 2
+    d_attn: int = 32
+    dtype: object = jnp.float32
+
+
+def autoint_init(key, cfg: AutoIntConfig):
+    ks = jax.random.split(key, 2 + 4 * cfg.n_attn_layers)
+    d_in = cfg.embed_dim
+    p = {"emb": he_init(ks[0], (cfg.n_fields * cfg.vocab_per_field,
+                                cfg.embed_dim), cfg.embed_dim, cfg.dtype),
+         "layers": []}
+    d_out = cfg.n_heads * cfg.d_attn
+    d = d_in
+    for i in range(cfg.n_attn_layers):
+        base = 1 + 4 * i
+        p["layers"].append({
+            "wq": he_init(ks[base], (d, d_out), d, cfg.dtype),
+            "wk": he_init(ks[base + 1], (d, d_out), d, cfg.dtype),
+            "wv": he_init(ks[base + 2], (d, d_out), d, cfg.dtype),
+            "wres": he_init(ks[base + 3], (d, d_out), d, cfg.dtype),
+        })
+        d = d_out
+    p["head"] = he_init(ks[-1], (cfg.n_fields * d, 1), cfg.n_fields * d,
+                        cfg.dtype)
+    return p
+
+
+def autoint_forward(params, cfg: AutoIntConfig, field_ids):
+    """field_ids (B, n_fields) local-per-field ids -> logit (B,)."""
+    offs = jnp.arange(cfg.n_fields) * cfg.vocab_per_field
+    e = embedding_lookup(params["emb"], field_ids + offs[None, :])  # (B,F,E)
+    h = e
+    for lp in params["layers"]:
+        b, f, d = h.shape
+        nh, da = cfg.n_heads, cfg.d_attn
+        q = (h @ lp["wq"]).reshape(b, f, nh, da)
+        k = (h @ lp["wk"]).reshape(b, f, nh, da)
+        v = (h @ lp["wv"]).reshape(b, f, nh, da)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.sqrt(float(da))
+        a = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", a, v).reshape(b, f, nh * da)
+        h = jax.nn.relu(o + h @ lp["wres"])
+    return (h.reshape(h.shape[0], -1) @ params["head"])[..., 0]
+
+
+def autoint_loss(params, cfg: AutoIntConfig, batch):
+    logit = autoint_forward(params, cfg, batch["field_ids"]).astype(jnp.float32)
+    y = batch["label"]
+    return jnp.mean(jax.nn.softplus(-logit) * y + jax.nn.softplus(logit) * (1 - y))
+
+
+def autoint_score_candidates(params, cfg: AutoIntConfig, user_fields,
+                             cand_ids, chunk: int = 8192):
+    """Retrieval scoring: fixed user context (n_fields-1,) x C candidate ids
+    in field 0, evaluated in chunks (C up to 10^6)."""
+
+    def score_chunk(ids):
+        rows = jnp.concatenate(
+            [ids[:, None], jnp.broadcast_to(user_fields[None, :],
+                                            (ids.shape[0],
+                                             cfg.n_fields - 1))], axis=1)
+        return autoint_forward(params, cfg, rows)
+
+    c = cand_ids.shape[0]
+    chunk = min(chunk, c)
+    return jax.lax.map(score_chunk, cand_ids.reshape(-1, chunk)).reshape(-1)
+
+
+# ============================================================== Two-tower
+
+@dataclasses.dataclass(frozen=True)
+class TwoTowerConfig:
+    name: str = "two_tower"
+    n_users: int = 5_000_000
+    n_items: int = 2_000_000
+    n_user_feats: int = 8                  # multi-hot history bag width
+    field_dim: int = 64
+    embed_dim: int = 256
+    tower_dims: Tuple[int, ...] = (1024, 512, 256)
+    n_negatives: int = 8192
+    temperature: float = 0.05
+    dtype: object = jnp.float32
+
+
+def twotower_init(key, cfg: TwoTowerConfig):
+    ks = jax.random.split(key, 4)
+    d_user_in = cfg.field_dim * 2                          # id + history bag
+    d_item_in = cfg.field_dim
+    return {
+        "user_emb": he_init(ks[0], (cfg.n_users, cfg.field_dim),
+                            cfg.field_dim, cfg.dtype),
+        "item_emb": he_init(ks[1], (cfg.n_items, cfg.field_dim),
+                            cfg.field_dim, cfg.dtype),
+        "user_mlp": _mlp_init(ks[2], (d_user_in,) + cfg.tower_dims, cfg.dtype),
+        "item_mlp": _mlp_init(ks[3], (d_item_in,) + cfg.tower_dims, cfg.dtype),
+    }
+
+
+def twotower_user(params, cfg: TwoTowerConfig, user_ids, hist_ids):
+    """user_ids (B,), hist_ids (B, n_user_feats) -> normalized (B, D)."""
+    uid = embedding_lookup(params["user_emb"], user_ids)
+    bag = embedding_bag(params["item_emb"], hist_ids, mode="mean")
+    # history bag uses item table projected into user field space: same dim
+    u = jnp.concatenate([uid, bag], axis=-1)
+    u = _mlp_apply(params["user_mlp"], u)
+    return u / jnp.maximum(jnp.linalg.norm(u, axis=-1, keepdims=True), 1e-6)
+
+
+def twotower_item(params, cfg: TwoTowerConfig, item_ids):
+    it = embedding_lookup(params["item_emb"], item_ids)
+    v = _mlp_apply(params["item_mlp"], it)
+    return v / jnp.maximum(jnp.linalg.norm(v, axis=-1, keepdims=True), 1e-6)
+
+
+def twotower_loss(params, cfg: TwoTowerConfig, batch):
+    """Sampled softmax with logQ correction (Yi et al., RecSys'19).
+
+    batch: user_ids (B,), hist_ids (B, F), pos_items (B,),
+           neg_items (N_neg,), neg_logq (N_neg,) log sampling probabilities.
+    """
+    u = twotower_user(params, cfg, batch["user_ids"], batch["hist_ids"])
+    vp = twotower_item(params, cfg, batch["pos_items"])    # (B, D)
+    vn = twotower_item(params, cfg, batch["neg_items"])    # (N, D)
+    sp = jnp.sum(u * vp, -1) / cfg.temperature             # (B,)
+    sn = (u @ vn.T) / cfg.temperature - batch["neg_logq"][None, :]
+    logits = jnp.concatenate([sp[:, None], sn], axis=1).astype(jnp.float32)
+    return jnp.mean(jax.nn.logsumexp(logits, axis=1) - logits[:, 0])
+
+
+def twotower_retrieve(params, cfg: TwoTowerConfig, batch, k: int = 100,
+                      reducer=None, rerank: int = 0, quantized: bool = False):
+    """Retrieval scoring: one query against (C, D) candidate embeddings.
+
+    ``reducer``: optional (matrix (m,D), mean (D,)) MPAD projection — the
+    paper's technique on the candidate cache: score in m dims, then exactly
+    re-rank the top ``rerank`` in full dims.
+
+    ``quantized``: beyond-paper — additionally store the REDUCED candidate
+    cache as int8 (symmetric per-dim scales): 16x fewer candidate-cache
+    bytes than f32 full-dim, scores on the int8 MXU path; the exact re-rank
+    absorbs the quantization error.
+    """
+    u = twotower_user(params, cfg, batch["user_ids"], batch["hist_ids"])  # (1,D)
+    cand = batch["cand_emb"]                               # (C, D) precomputed
+    if reducer is not None:
+        mat, mean = reducer
+        ur = (u - mean) @ mat.T                            # (1, m)
+        if quantized:
+            # offline-quantized reduced cache: (C, m) int8 + per-dim scales
+            cq, scale = batch["cand_red_q"], batch["cand_scale"]
+            scores_r = (jnp.einsum(
+                "qm,cm->qc", (ur * scale[None, :]).astype(jnp.bfloat16),
+                cq.astype(jnp.bfloat16),
+                preferred_element_type=jnp.float32))[0]    # (C,)
+        else:
+            # offline-reduced cache if provided; else reduce in-step
+            cr = batch.get("cand_red")
+            if cr is None:
+                cr = (cand - mean) @ mat.T
+            scores_r = (ur @ cr.T)[0]                      # (C,) reduced-space
+        n_cand = max(k, rerank)
+        _, pre = jax.lax.top_k(scores_r, n_cand)
+        full = (u @ cand[pre].T)[0]                        # exact re-rank
+        s, loc = jax.lax.top_k(full, k)
+        return s, pre[loc]
+    scores = (u @ cand.T)[0]
+    s, ids = jax.lax.top_k(scores, k)
+    return s, ids
+
+
+def quantize_candidates(cand_red: jax.Array):
+    """Offline int8 quantization of the reduced candidate cache (symmetric,
+    per-dim scales). Returns (int8 (C, m), scales (m,))."""
+    scale = jnp.max(jnp.abs(cand_red), axis=0) / 127.0 + 1e-8
+    q = jnp.clip(jnp.round(cand_red / scale[None, :]), -127, 127)
+    return q.astype(jnp.int8), scale

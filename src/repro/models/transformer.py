@@ -1,0 +1,325 @@
+"""Decoder-only LM supporting the assigned dense + MoE architectures.
+
+Key structural choices (DESIGN.md §5):
+
+* **Run-structured layer stack.** Layers are grouped into contiguous runs of
+  the same attention kind ("global" full-causal vs "local" sliding-window).
+  Each run's parameters are stacked and executed with a rematerialized
+  ``lax.scan`` — compact HLO (one scan body per distinct run shape instead of
+  n_layers copies) and bounded live activations. Uniform archs degenerate to
+  a single run; gemma3's 5:1 local:global pattern produces [5xlocal,
+  1xglobal] blocks, letting local runs carry *window-sized ring-buffer KV
+  caches* while global runs carry full-length caches — this is what makes
+  the 512k-token decode cell fit.
+* **Chunked attention** (``layers.chunked_attention``): flash-style online
+  softmax, never materializes (Sq x Skv).
+* **Chunked cross-entropy**: the (B, S, vocab) logits tensor is never
+  materialized; a scan over sequence chunks computes logits + CE per chunk
+  (vocab up to 262k makes this mandatory).
+* **Position-based masking**: causality, sliding windows and ring-buffer
+  cache validity are all expressed through absolute positions, so train /
+  prefill / decode share one attention code path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import chunked_attention, he_init, rms_norm, rope, swiglu
+from .moe import MoEConfig, init_moe_params, moe_block
+
+__all__ = ["LMConfig", "lm_init_params", "lm_loss", "lm_train_forward",
+           "lm_prefill", "lm_decode_step", "init_cache", "lm_embed",
+           "layer_runs"]
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab: int
+    rope_theta: float = 10000.0
+    rope_theta_local: Optional[float] = None   # gemma3: 10k local / 1M global
+    sliding_window: Optional[int] = None   # window for "local" layers
+    global_every: Optional[int] = None     # every k-th layer global (gemma 5:1 -> 6)
+    moe: Optional[MoEConfig] = None
+    tie_embeddings: bool = True
+    dtype: Any = jnp.float32
+    seq_chunk: int = 1024                  # chunked-CE sequence chunk
+    q_chunk: int = 512
+    kv_chunk: int = 1024
+    remat: bool = True
+    attn_impl: str = "chunked"             # chunked | flash (Pallas kernel)
+
+    @property
+    def vocab_padded(self) -> int:         # TPU-friendly vocab padding
+        return ((self.vocab + 255) // 256) * 256
+
+
+def layer_runs(cfg: LMConfig) -> List[Tuple[str, int]]:
+    """[(kind, length), ...] contiguous runs of same-kind layers."""
+    if cfg.global_every is None:
+        kind = "local" if cfg.sliding_window is not None else "global"
+        return [(kind, cfg.n_layers)]
+    kinds = ["global" if (i % cfg.global_every) == cfg.global_every - 1
+             else "local" for i in range(cfg.n_layers)]
+    runs: List[Tuple[str, int]] = []
+    for k in kinds:
+        if runs and runs[-1][0] == k:
+            runs[-1] = (k, runs[-1][1] + 1)
+        else:
+            runs.append((k, 1))
+    return runs
+
+
+def _init_run_params(key, cfg: LMConfig, length: int):
+    d, h, kv, dh, f = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head,
+                       cfg.d_ff)
+    ks = jax.random.split(key, 8)
+    p = {
+        "ln1": jnp.zeros((length, d), cfg.dtype),
+        "ln2": jnp.zeros((length, d), cfg.dtype),
+        "wq": he_init(ks[0], (length, d, h * dh), d, cfg.dtype),
+        "wk": he_init(ks[1], (length, d, kv * dh), d, cfg.dtype),
+        "wv": he_init(ks[2], (length, d, kv * dh), d, cfg.dtype),
+        "wo": he_init(ks[3], (length, h * dh, d), h * dh, cfg.dtype),
+    }
+    if cfg.moe is None:
+        p.update({
+            "w_gate": he_init(ks[4], (length, d, f), d, cfg.dtype),
+            "w_up": he_init(ks[5], (length, d, f), d, cfg.dtype),
+            "w_down": he_init(ks[6], (length, f, d), f, cfg.dtype),
+        })
+    else:
+        p["moe"] = init_moe_params(ks[7], cfg.moe, d, length, cfg.dtype)
+    return p
+
+
+def lm_init_params(key, cfg: LMConfig):
+    ks = jax.random.split(key, len(layer_runs(cfg)) + 2)
+    params = {
+        "embed": he_init(ks[0], (cfg.vocab_padded, cfg.d_model),
+                         cfg.d_model, cfg.dtype),
+        "final_norm": jnp.zeros((cfg.d_model,), cfg.dtype),
+        "runs": [_init_run_params(ks[2 + i], cfg, length)
+                 for i, (_, length) in enumerate(layer_runs(cfg))],
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = he_init(
+            ks[1], (cfg.d_model, cfg.vocab_padded), cfg.d_model, cfg.dtype)
+    return params
+
+
+# ------------------------------------------------------------- layer bodies
+
+def _qkv(cfg: LMConfig, x, lp, q_pos, window):
+    b, sq, _ = x.shape
+    theta = (cfg.rope_theta_local
+             if (window is not None and cfg.rope_theta_local)
+             else cfg.rope_theta)
+    q = (x @ lp["wq"]).reshape(b, sq, cfg.n_heads, cfg.d_head)
+    k = (x @ lp["wk"]).reshape(b, sq, cfg.n_kv_heads, cfg.d_head)
+    v = (x @ lp["wv"]).reshape(b, sq, cfg.n_kv_heads, cfg.d_head)
+    return (rope(q, q_pos, theta), rope(k, q_pos, theta), v)
+
+
+def _mlp(cfg: LMConfig, h, lp):
+    x2 = rms_norm(h, lp["ln2"])
+    if cfg.moe is None:
+        return h + swiglu(x2, lp["w_gate"], lp["w_up"], lp["w_down"]), \
+            jnp.zeros((), jnp.float32)
+    y, aux = moe_block(x2, lp["moe"], cfg.moe)
+    return h + y, aux
+
+
+def _layer_self(cfg: LMConfig, window, h, lp, q_pos):
+    """Self-contained segment attention (training / prefill).
+
+    Returns (h_out, k, v, aux)."""
+    b, sq, _ = h.shape
+    q, k, v = _qkv(cfg, rms_norm(h, lp["ln1"]), lp, q_pos, window)
+    if cfg.attn_impl == "flash":
+        # Pallas tile-resident kernel (TPU; interpret mode on CPU); the
+        # custom VJP recomputes backward through the chunked path.
+        from repro.kernels.flash_attention import flash_attention
+        attn = flash_attention(q, k, v, window)
+    else:
+        attn = chunked_attention(q, k, v, q_pos, q_pos, window=window,
+                                 q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+    h = h + attn.reshape(b, sq, -1) @ lp["wo"]
+    h, aux = _mlp(cfg, h, lp)
+    return h, k, v, aux
+
+
+def _layer_cached(cfg: LMConfig, window, h, lp, q_pos, ck, cv, kv_pos, slots):
+    """Decode: write this step's K/V into cache slots, attend over cache.
+
+    Returns (h_out, ck, cv)."""
+    b, sq, _ = h.shape
+    q, k, v = _qkv(cfg, rms_norm(h, lp["ln1"]), lp, q_pos, window)
+    ck = ck.at[:, slots].set(k.astype(ck.dtype))
+    cv = cv.at[:, slots].set(v.astype(cv.dtype))
+    attn = chunked_attention(
+        q, ck.astype(q.dtype), cv.astype(q.dtype), q_pos, kv_pos,
+        window=window, q_chunk=cfg.q_chunk, kv_chunk=ck.shape[1])
+    h = h + attn.reshape(b, sq, -1) @ lp["wo"]
+    h, _ = _mlp(cfg, h, lp)
+    return h, ck, cv
+
+
+def _forward_no_cache(cfg: LMConfig, params, h, q_pos):
+    """Training/embedding forward over all runs; no cache."""
+    total_aux = jnp.zeros((), jnp.float32)
+    for ri, (kind, _) in enumerate(layer_runs(cfg)):
+        window = cfg.sliding_window if kind == "local" else None
+
+        def body(h, lp, _w=window):
+            h, _, _, aux = _layer_self(cfg, _w, h, lp, q_pos)
+            return h, aux
+
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        h, auxs = jax.lax.scan(body_fn, h, params["runs"][ri])
+        total_aux = total_aux + jnp.sum(auxs)
+    return h, total_aux
+
+
+def _logits_head(cfg: LMConfig, params, h):
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = h @ head
+    if cfg.vocab_padded != cfg.vocab:       # mask padded vocab tail
+        col = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                       logits.ndim - 1)
+        logits = jnp.where(col < cfg.vocab, logits, -1e30)
+    return logits
+
+
+def lm_loss(params, cfg: LMConfig, tokens, labels):
+    """Mean next-token CE with chunked (never-materialized) logits."""
+    b, s = tokens.shape
+    h = params["embed"][tokens].astype(cfg.dtype)
+    h, aux = _forward_no_cache(cfg, params, h, jnp.arange(s))
+    h = rms_norm(h, params["final_norm"])
+    ck = min(cfg.seq_chunk, s)
+    if s % ck:
+        ck = math.gcd(ck, s)
+    nc = s // ck
+    hc = h.reshape(b, nc, ck, cfg.d_model).swapaxes(0, 1)
+    lc = labels.reshape(b, nc, ck).swapaxes(0, 1)
+
+    def chunk_ce(carry, xs):
+        hcb, lcb = xs
+        logits = _logits_head(cfg, params, hcb).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lcb[..., None], axis=-1)[..., 0]
+        return carry + jnp.sum(lse - gold), None
+
+    chunk_fn = jax.checkpoint(chunk_ce) if cfg.remat else chunk_ce
+    total, _ = jax.lax.scan(chunk_fn, jnp.zeros((), jnp.float32), (hc, lc))
+    loss = total / (b * s)
+    if cfg.moe is not None:
+        loss = loss + cfg.moe.router_aux_weight * aux / cfg.n_layers
+    return loss
+
+
+def lm_train_forward(params, cfg: LMConfig, batch):
+    return lm_loss(params, cfg, batch["tokens"], batch["labels"])
+
+
+# ------------------------------------------------------- serving path
+
+def init_cache(cfg: LMConfig, batch: int, max_len: int, dtype=None):
+    """Per-run KV caches: local runs allocate only the sliding window."""
+    dtype = dtype if dtype is not None else cfg.dtype
+    cache = []
+    for kind, length in layer_runs(cfg):
+        s_run = (min(cfg.sliding_window, max_len)
+                 if kind == "local" and cfg.sliding_window else max_len)
+        shape = (length, batch, s_run, cfg.n_kv_heads, cfg.d_head)
+        cache.append({
+            "k": jnp.zeros(shape, dtype),
+            "v": jnp.zeros(shape, dtype),
+            "pos": jnp.full((s_run,), -1, jnp.int32),
+        })
+    return cache
+
+
+def lm_prefill(params, cfg: LMConfig, tokens, cache):
+    """Process a full prompt (B, S); returns (last-position logits, cache).
+
+    Attention is self-contained within the prompt; caches are written as a
+    side effect (local runs keep only the last ``window`` positions in their
+    ring buffers)."""
+    b, s = tokens.shape
+    h = params["embed"][tokens].astype(cfg.dtype)
+    q_pos = jnp.arange(s)
+    new_cache = []
+    for ri, (kind, _) in enumerate(layer_runs(cfg)):
+        rc = cache[ri]
+        s_run = rc["k"].shape[2]
+        window = cfg.sliding_window if kind == "local" else None
+        n_write = min(s, s_run)
+        src = jnp.arange(s - n_write, s)            # positions written
+        dst = src % s_run                           # ring slots (identity if s<=s_run)
+
+        def body(h, xs, _w=window, _src=src, _dst=dst):
+            lp, (ck, cv) = xs
+            h, k, v, _ = _layer_self(cfg, _w, h, lp, q_pos)
+            ck = ck.at[:, _dst].set(k[:, _src].astype(ck.dtype))
+            cv = cv.at[:, _dst].set(v[:, _src].astype(cv.dtype))
+            return h, (ck, cv)
+
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        h, kv_out = jax.lax.scan(body_fn, h, (params["runs"][ri],
+                                              (rc["k"], rc["v"])))
+        new_pos = rc["pos"].at[dst].set(src)
+        new_cache.append({"k": kv_out[0], "v": kv_out[1], "pos": new_pos})
+    h = rms_norm(h, params["final_norm"])
+    logits = _logits_head(cfg, params, h[:, -1:, :])
+    return logits[:, 0], new_cache
+
+
+def lm_decode_step(params, cfg: LMConfig, token, cur_len, cache):
+    """One decode step: token (B,) at absolute position ``cur_len`` (scalar).
+
+    Returns (logits (B, vocab_padded), new_cache)."""
+    h = params["embed"][token][:, None, :].astype(cfg.dtype)
+    q_pos = jnp.reshape(cur_len, (1,)).astype(jnp.int32)
+    new_cache = []
+    for ri, (kind, _) in enumerate(layer_runs(cfg)):
+        rc = cache[ri]
+        s_run = rc["k"].shape[2]
+        window = cfg.sliding_window if kind == "local" else None
+        slots = (q_pos % s_run) if (kind == "local" and window
+                                    and s_run == window) else q_pos
+        kv_pos = rc["pos"].at[slots].set(q_pos)
+
+        def body(h, xs, _w=window, _kvp=kv_pos, _slots=slots):
+            lp, (ck, cv) = xs
+            h, ck, cv = _layer_cached(cfg, _w, h, lp, q_pos, ck, cv,
+                                      _kvp, _slots)
+            return h, (ck, cv)
+
+        h, kv_out = jax.lax.scan(body, h, (params["runs"][ri],
+                                           (rc["k"], rc["v"])))
+        new_cache.append({"k": kv_out[0], "v": kv_out[1], "pos": kv_pos})
+    h = rms_norm(h, params["final_norm"])
+    logits = _logits_head(cfg, params, h)
+    return logits[:, 0], new_cache
+
+
+def lm_embed(params, cfg: LMConfig, tokens):
+    """Mean-pooled final hidden states — the vector-search integration hook
+    (MPAD compresses these embeddings; DESIGN.md §4)."""
+    h = params["embed"][tokens].astype(cfg.dtype)
+    h, _ = _forward_no_cache(cfg, params, h, jnp.arange(tokens.shape[1]))
+    h = rms_norm(h, params["final_norm"])
+    return h.mean(axis=1)

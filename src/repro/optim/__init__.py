@@ -1,0 +1,8 @@
+from .adamw import AdamWConfig, init_opt_state, adamw_update, make_train_step
+from .compression import (compress_int8, decompress_int8,
+                          ef_compress_update, CompressionState,
+                          init_compression_state)
+
+__all__ = ["AdamWConfig", "init_opt_state", "adamw_update", "make_train_step",
+           "compress_int8", "decompress_int8", "ef_compress_update",
+           "CompressionState", "init_compression_state"]

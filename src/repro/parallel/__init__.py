@@ -1,0 +1,5 @@
+from .sharding import (dp_axes, lm_param_specs, opt_specs, tree_named,
+                       lm_cache_specs, replicate_like)
+
+__all__ = ["dp_axes", "lm_param_specs", "opt_specs", "tree_named",
+           "lm_cache_specs", "replicate_like"]

@@ -1,0 +1,45 @@
+"""Trace-time mesh context: models call ``constrain(x, spec)`` freely; it is
+a no-op unless a mesh is active (smoke tests run unsharded, the dry-run and
+launchers activate the production mesh)."""
+from __future__ import annotations
+
+import contextlib
+from typing import List, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["mesh_context", "active_mesh", "constrain"]
+
+_ACTIVE: List[Mesh] = []
+
+
+@contextlib.contextmanager
+def mesh_context(mesh: Mesh):
+    _ACTIVE.append(mesh)
+    try:
+        yield mesh
+    finally:
+        _ACTIVE.pop()
+
+
+def active_mesh() -> Optional[Mesh]:
+    return _ACTIVE[-1] if _ACTIVE else None
+
+
+def constrain(x, spec: P):
+    """with_sharding_constraint iff a mesh is active and its axes exist."""
+    mesh = active_mesh()
+    if mesh is None:
+        return x
+    flat = []
+    for entry in spec:
+        if entry is None:
+            flat.append(None)
+        elif isinstance(entry, tuple):
+            axes = tuple(a for a in entry if a in mesh.axis_names)
+            flat.append(axes if axes else None)
+        else:
+            flat.append(entry if entry in mesh.axis_names else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*flat)))

@@ -1,0 +1,186 @@
+"""PartitionSpec rule sets per model family (DESIGN.md §5).
+
+Axis conventions:
+  pod   — outer data parallelism across pods (hierarchical gradient reduce)
+  data  — data parallelism within a pod
+  model — tensor / expert / vocab / sequence parallelism
+
+Divisibility rules baked in:
+  * attention projections are sharded on the FUSED (heads*dh) dim — always a
+    multiple of the model-axis size even when head counts (e.g. gemma3's 8)
+    are not;
+  * vocab is padded to a multiple of 256 (LMConfig.vocab_padded);
+  * long KV caches shard their sequence dim over every available axis,
+    short (window) caches stay replicated;
+  * edge lists / candidate sets are padded by configs to device-count
+    multiples (masked in the models).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["dp_axes", "lm_param_specs", "opt_specs", "tree_named",
+           "lm_cache_specs", "replicate_like"]
+
+
+def dp_axes(mesh: Mesh):
+    """The data-parallel axis group: ('pod','data') multi-pod, ('data',) else."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def tree_named(mesh: Mesh, spec_tree: Any) -> Any:
+    """PartitionSpec pytree -> NamedSharding pytree."""
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+def replicate_like(tree: Any) -> Any:
+    return jax.tree.map(lambda _: P(), tree)
+
+
+# -------------------------------------------------------------------- LM
+
+def _run_specs(moe: bool):
+    base = {
+        "ln1": P(None, None),
+        "ln2": P(None, None),
+        "wq": P(None, None, "model"),
+        "wk": P(None, None, "model"),
+        "wv": P(None, None, "model"),
+        "wo": P(None, "model", None),
+    }
+    if moe:
+        base["moe"] = {
+            "router": P(None, None, "model"),
+            "w_gate": P(None, "model", None, None),
+            "w_up": P(None, "model", None, None),
+            "w_down": P(None, "model", None, None),
+        }
+    else:
+        base.update({
+            "w_gate": P(None, None, "model"),
+            "w_up": P(None, None, "model"),
+            "w_down": P(None, "model", None),
+        })
+    return base
+
+
+def lm_param_specs(cfg) -> Any:
+    """Matches the pytree of transformer.lm_init_params."""
+    from repro.models.transformer import layer_runs
+    specs = {
+        "embed": P("model", None),
+        "final_norm": P(None),
+        "runs": [_run_specs(cfg.moe is not None) for _ in layer_runs(cfg)],
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = P(None, "model")
+    return specs
+
+
+def opt_specs(param_specs) -> Any:
+    """Adam moments shard exactly like their parameters."""
+    return {"step": P(),
+            "m": jax.tree.map(lambda s: s, param_specs,
+                              is_leaf=lambda s: isinstance(s, P)),
+            "v": jax.tree.map(lambda s: s, param_specs,
+                              is_leaf=lambda s: isinstance(s, P))}
+
+
+def zero_opt_specs(params_abstract, param_specs, mesh) -> Any:
+    """ZeRO-1-style optimizer-state sharding: each Adam moment additionally
+    shards its first data-divisible unsharded dim over the DP axes. The
+    update all-gathers fresh params over DP (exactly ZeRO-1 traffic) in
+    exchange for an (dp_size)x cut of the f32 moment memory."""
+    dp = dp_axes(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+
+    def moment_spec(leaf, spec):
+        if dp_size == 1:
+            return spec
+        entries = list(spec) + [None] * (len(leaf.shape) - len(spec))
+        for i, (dim, entry) in enumerate(zip(leaf.shape, entries)):
+            if entry is None and dim % dp_size == 0 and dim >= dp_size:
+                entries[i] = dp
+                return P(*entries)
+        return spec
+
+    mom = jax.tree.map(moment_spec, params_abstract, param_specs,
+                       is_leaf=lambda s: isinstance(s, P))
+    return {"step": P(), "m": mom,
+            "v": jax.tree.map(lambda s: s, mom,
+                              is_leaf=lambda s: isinstance(s, P))}
+
+
+def lm_cache_specs(cfg, mesh: Mesh, batch: int, max_len: int) -> Any:
+    """Per-run cache specs: shard batch over dp when divisible; shard long
+    sequences over 'model' (and over everything for single-stream decode)."""
+    from repro.models.transformer import layer_runs
+    dp = dp_axes(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    model_size = mesh.shape.get("model", 1)
+    specs = []
+    for kind, _ in layer_runs(cfg):
+        s_run = (min(cfg.sliding_window, max_len)
+                 if kind == "local" and cfg.sliding_window else max_len)
+        if batch % dp_size == 0 and batch >= dp_size:
+            b_ax, seq_candidates = dp, ("model",)
+        else:
+            b_ax, seq_candidates = None, dp + ("model",)
+        seq_ax = None
+        # shard long sequences; keep short/window caches replicated
+        total = 1
+        for a in seq_candidates:
+            total *= mesh.shape[a]
+        if s_run >= 8192 and s_run % total == 0:
+            seq_ax = seq_candidates
+        elif s_run >= 8192 and s_run % model_size == 0:
+            seq_ax = "model"
+        specs.append({
+            "k": P(None, b_ax, seq_ax, None, None),
+            "v": P(None, b_ax, seq_ax, None, None),
+            "pos": P(None),
+        })
+    return specs
+
+
+# ------------------------------------------------------------------- GNN
+
+def gin_param_specs(params) -> Any:
+    # GIN is tiny (64-d hidden): replicate everything.
+    return replicate_like(params)
+
+
+# ---------------------------------------------------------------- recsys
+
+def sasrec_param_specs(params) -> Any:
+    sp = replicate_like(params)
+    sp["item_emb"] = P("model", None)
+    return sp
+
+
+def dien_param_specs(params) -> Any:
+    sp = replicate_like(params)
+    sp["item_emb"] = P("model", None)
+    sp["cat_emb"] = P("model", None)
+    return sp
+
+
+def autoint_param_specs(params) -> Any:
+    sp = replicate_like(params)
+    sp["emb"] = P("model", None)
+    return sp
+
+
+def twotower_param_specs(params) -> Any:
+    sp = replicate_like(params)
+    sp["user_emb"] = P("model", None)
+    sp["item_emb"] = P("model", None)
+    return sp

@@ -1,0 +1,6 @@
+from .checkpoint import (save_checkpoint, restore_checkpoint,
+                         latest_checkpoint, restore_resharded)
+from .fault import run_with_restarts, FailureInjector
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_checkpoint",
+           "restore_resharded", "run_with_restarts", "FailureInjector"]

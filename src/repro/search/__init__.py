@@ -1,0 +1,13 @@
+"""Vector-search substrate: brute-force k-NN, recall metrics, IVF-Flat ANN
+index, and the batched serving engine that integrates MPAD reduction."""
+from .knn import knn_search, knn_search_blocked, recall_at_k, amk_accuracy
+from .ivf import IVFIndex, build_ivf, ivf_search
+from .pq import PQIndex, build_pq, pq_search, pq_reconstruct
+from .serve import SearchEngine, ServeConfig
+
+__all__ = [
+    "knn_search", "knn_search_blocked", "recall_at_k", "amk_accuracy",
+    "IVFIndex", "build_ivf", "ivf_search",
+    "PQIndex", "build_pq", "pq_search", "pq_reconstruct",
+    "SearchEngine", "ServeConfig",
+]

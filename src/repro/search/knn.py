@@ -1,0 +1,87 @@
+"""Brute-force k-NN and the paper's A_m(k) neighbor-preservation metric.
+
+``knn_search`` is the single-shot exact search (full distance matrix);
+``knn_search_blocked`` streams the database in blocks with a running top-k so
+memory stays O(Q·(k+block)) — the jnp mirror of the Pallas kernel in
+``repro.kernels.knn_topk``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["knn_search", "knn_search_blocked", "recall_at_k", "amk_accuracy"]
+
+
+def _sq_dists(q: jax.Array, x: jax.Array) -> jax.Array:
+    qq = jnp.sum(q * q, axis=-1)[:, None]
+    xx = jnp.sum(x * x, axis=-1)[None, :]
+    return jnp.maximum(qq + xx - 2.0 * (q @ x.T), 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def knn_search(q: jax.Array, x: jax.Array, k: int):
+    """Exact k-NN: returns (dists (Q,k), indices (Q,k)) by L2 distance."""
+    d2 = _sq_dists(q, x)
+    neg, idx = jax.lax.top_k(-d2, k)
+    return jnp.sqrt(jnp.maximum(-neg, 0.0)), idx
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block"))
+def knn_search_blocked(q: jax.Array, x: jax.Array, k: int, block: int = 1024):
+    """Streaming exact k-NN with a running top-k over database blocks."""
+    nq = q.shape[0]
+    n = x.shape[0]
+    pad = (-n) % block
+    if pad:
+        x = jnp.concatenate(
+            [x, jnp.full((pad, x.shape[1]), jnp.inf, x.dtype)], axis=0)
+    n_blocks = x.shape[0] // block
+    xb = x.reshape(n_blocks, block, x.shape[1])
+    qq = jnp.sum(q * q, axis=-1)[:, None]
+
+    def scan_block(carry, xblk):
+        best_d, best_i, offset = carry
+        xx = jnp.sum(xblk * xblk, axis=-1)[None, :]
+        d2 = qq + xx - 2.0 * (q @ xblk.T)                     # (Q, block)
+        d2 = jnp.where(jnp.isfinite(xx), jnp.maximum(d2, 0.0), jnp.inf)
+        idx = offset + jnp.arange(block)[None, :]
+        cand_d = jnp.concatenate([best_d, d2], axis=1)
+        cand_i = jnp.concatenate([best_i, jnp.broadcast_to(idx, d2.shape)], axis=1)
+        neg, sel = jax.lax.top_k(-cand_d, k)
+        return (-neg, jnp.take_along_axis(cand_i, sel, axis=1), offset + block), None
+
+    init = (jnp.full((nq, k), jnp.inf), jnp.zeros((nq, k), jnp.int32),
+            jnp.zeros((), jnp.int32))
+    (best_d, best_i, _), _ = jax.lax.scan(scan_block, init, xb)
+    return jnp.sqrt(jnp.maximum(best_d, 0.0)), best_i
+
+
+def recall_at_k(found: jax.Array, truth: jax.Array) -> jax.Array:
+    """|found ∩ truth| / k per query, averaged. Shapes (Q, k) int."""
+    inter = (found[:, :, None] == truth[:, None, :]).any(axis=2)
+    return jnp.mean(jnp.sum(inter, axis=1) / truth.shape[1])
+
+
+def amk_accuracy(reducer, x_train: jax.Array, y_test: jax.Array, k: int,
+                 block: int | None = None) -> jax.Array:
+    """The paper's A_m(k) (Section 3.2).
+
+    For each test vector y_i: k-NN in the *original* space X vs k-NN of f(y_i)
+    in the *reduced* set f(X); A_m(k) = mean fraction retained.
+    """
+    if block is None:
+        _, truth = knn_search(y_test, x_train, k)
+    else:
+        _, truth = knn_search_blocked(y_test, x_train, k, block=block)
+    xr = reducer(x_train) if callable(reducer) else reducer.transform(x_train)
+    yr = reducer(y_test) if callable(reducer) else reducer.transform(y_test)
+    xr = jnp.asarray(xr, jnp.float32)
+    yr = jnp.asarray(yr, jnp.float32)
+    if block is None:
+        _, found = knn_search(yr, xr, k)
+    else:
+        _, found = knn_search_blocked(yr, xr, k, block=block)
+    return recall_at_k(found, truth)

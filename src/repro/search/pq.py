@@ -1,0 +1,72 @@
+"""Product quantization (Jégou et al., TPAMI'11): the classic complement to
+DR in vector-search memory hierarchies. MPAD reduces dimensionality; PQ
+compresses the residual precision — together: f32 n-dim -> uint8 codes.
+
+Asymmetric distance computation (ADC): per-query distance tables
+(M x n_centroids) against subspace codebooks, then code lookups — no
+decompression of the corpus.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .ivf import kmeans
+
+__all__ = ["PQIndex", "build_pq", "pq_search", "pq_reconstruct"]
+
+
+class PQIndex(NamedTuple):
+    codebooks: jax.Array    # (M, K, dsub)
+    codes: jax.Array        # (N, M) uint8/int32 centroid ids
+
+
+def build_pq(key: jax.Array, x: jax.Array, m_subspaces: int = 8,
+             n_centroids: int = 256, iters: int = 10) -> PQIndex:
+    """Train per-subspace codebooks and encode the corpus."""
+    x = jnp.asarray(x, jnp.float32)
+    n, d = x.shape
+    if d % m_subspaces:
+        raise ValueError(f"dim {d} not divisible by M={m_subspaces}")
+    dsub = d // m_subspaces
+    xs = x.reshape(n, m_subspaces, dsub)
+    cbs, codes = [], []
+    for m in range(m_subspaces):
+        sub = xs[:, m]
+        cb = kmeans(jax.random.fold_in(key, m), sub,
+                    min(n_centroids, n), iters)
+        d2 = (jnp.sum(sub * sub, 1)[:, None]
+              + jnp.sum(cb * cb, 1)[None, :] - 2.0 * sub @ cb.T)
+        cbs.append(cb)
+        codes.append(jnp.argmin(d2, axis=1))
+    return PQIndex(codebooks=jnp.stack(cbs),
+                   codes=jnp.stack(codes, axis=1).astype(jnp.int32))
+
+
+def pq_reconstruct(index: PQIndex) -> jax.Array:
+    """Decode the corpus (for error analysis): (N, D)."""
+    m = index.codebooks.shape[0]
+    parts = [index.codebooks[j][index.codes[:, j]] for j in range(m)]
+    return jnp.concatenate(parts, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def pq_search(index: PQIndex, q: jax.Array, k: int):
+    """ADC top-k: returns (approx dists (Q,k), ids (Q,k))."""
+    q = jnp.asarray(q, jnp.float32)
+    nq, d = q.shape
+    m, kc, dsub = index.codebooks.shape
+    qs = q.reshape(nq, m, dsub)
+    # distance tables: (Q, M, K)
+    tables = (jnp.sum(qs * qs, -1)[:, :, None]
+              + jnp.sum(index.codebooks ** 2, -1)[None]
+              - 2.0 * jnp.einsum("qmd,mkd->qmk", qs, index.codebooks))
+    # score all codes: sum_m tables[q, m, codes[n, m]]
+    d2 = jnp.zeros((nq, index.codes.shape[0]), jnp.float32)
+    for j in range(m):                       # M small (8-16): unrolled
+        d2 = d2 + tables[:, j, :][:, index.codes[:, j]]
+    neg, ids = jax.lax.top_k(-d2, k)
+    return jnp.sqrt(jnp.maximum(-neg, 0.0)), ids

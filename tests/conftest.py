@@ -1,0 +1,10 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here on purpose — smoke tests and
+benches must see 1 device; only launch/dryrun.py forces 512 (and the
+distributed tests spawn subprocesses with their own flags)."""
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.key(0)

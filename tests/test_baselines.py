@@ -1,0 +1,80 @@
+"""Baseline DR methods: correctness properties + OOS transforms."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (fit_isomap, fit_kpca_rbf, fit_mds, fit_pca,
+                        fit_random_projection, fit_umap_lite)
+
+
+@pytest.fixture(scope="module")
+def data():
+    key = jax.random.key(0)
+    centers = jax.random.normal(key, (6, 32)) * 2
+    lab = jax.random.randint(jax.random.fold_in(key, 1), (200,), 0, 6)
+    x = centers[lab] + 0.3 * jax.random.normal(
+        jax.random.fold_in(key, 2), (200, 32))
+    return x[:160], x[160:]
+
+
+def test_pca(data):
+    xtr, xte = data
+    red = fit_pca(xtr, 5)
+    y = red.transform(xte)
+    assert y.shape == (40, 5)
+    # projecting train data reproduces the top singular subspace: variance
+    ytr = red.transform(xtr)
+    v_kept = float(jnp.var(ytr, axis=0).sum())
+    v_tot = float(jnp.var(xtr - xtr.mean(0), axis=0).sum())
+    assert v_kept / v_tot > 0.5
+
+
+def test_random_projection_jl(data):
+    xtr, _ = data
+    red = fit_random_projection(jax.random.key(1), 32, 24)
+    y = red.transform(xtr)
+    d_orig = jnp.linalg.norm(xtr[:20, None] - xtr[None, :20], axis=-1)
+    d_proj = jnp.linalg.norm(y[:20, None] - y[None, :20], axis=-1)
+    iu = jnp.triu_indices(20, 1)
+    ratio = d_proj[iu] / jnp.maximum(d_orig[iu], 1e-6)
+    assert 0.5 < float(jnp.median(ratio)) < 1.5       # JL distortion sanity
+
+
+def test_rp_achlioptas_sparsity():
+    red = fit_random_projection(jax.random.key(2), 100, 10,
+                                kind="achlioptas")
+    x = jnp.eye(100)
+    m = red.transform(x)                               # the matrix itself
+    frac_zero = float(jnp.mean(m == 0.0))
+    assert 0.5 < frac_zero < 0.8                       # 2/3 expected
+
+
+def test_mds_oos(data):
+    xtr, xte = data
+    red = fit_mds(xtr, 4)
+    assert red.transform(xte).shape == (40, 4)
+    assert bool(jnp.all(jnp.isfinite(red.transform(xte))))
+
+
+def test_kpca_and_nystrom(data):
+    xtr, xte = data
+    full = fit_kpca_rbf(xtr, 4)
+    nys = fit_kpca_rbf(xtr, 4, landmarks=80, key=jax.random.key(3))
+    for red in (full, nys):
+        y = red.transform(xte)
+        assert y.shape == (40, 4) and bool(jnp.all(jnp.isfinite(y)))
+
+
+def test_isomap(data):
+    xtr, xte = data
+    red = fit_isomap(xtr, 3, k=8)
+    y = red.transform(xte)
+    assert y.shape == (40, 3) and bool(jnp.all(jnp.isfinite(y)))
+
+
+def test_umap_lite(data):
+    xtr, xte = data
+    red = fit_umap_lite(xtr, 3, epochs=50, key=jax.random.key(4))
+    y = red.transform(xte)
+    assert y.shape == (40, 3) and bool(jnp.all(jnp.isfinite(y)))

@@ -1,0 +1,57 @@
+"""Distributed MPAD: shard_map result parity with single-device (8 fake
+devices in a subprocess so the main pytest process keeps 1 device)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys
+    sys.path.insert(0, "src")
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.core.mpad import MPADConfig, fit_mpad
+    from repro.core.distributed import fit_mpad_sharded, make_phi_dist
+    from repro.core.fast_objective import phi_fast_value_and_grad
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    import functools
+
+    x = jax.random.normal(jax.random.key(0), (256, 24))
+    mesh = jax.make_mesh((2, 4), ("data", "model"),
+                         devices=jax.devices()[:8])
+
+    # 1. one-shot phi value/grad parity
+    w = jax.random.normal(jax.random.key(1), (24,))
+    w = w / jnp.linalg.norm(w)
+    prev = jnp.zeros((3, 24)); mask = jnp.zeros((3,))
+    v1, g1 = phi_fast_value_and_grad(w, x - x.mean(0), prev, mask,
+                                     b=80.0, alpha=25.0)
+    phi_d = make_phi_dist(("data", "model"), 256)
+    f = shard_map(
+        functools.partial(phi_d, b=80.0, alpha=25.0),
+        mesh=mesh, in_specs=(P(), P(("data", "model"), None), P(), P()),
+        out_specs=(P(), P()), check_rep=False)
+    v2, g2 = jax.jit(f)(w, x - x.mean(0), prev, mask)
+    np.testing.assert_allclose(float(v1), float(v2), rtol=1e-5)
+    np.testing.assert_allclose(g1, g2, rtol=1e-3, atol=1e-5)
+    print("PHI_PARITY_OK")
+
+    # 2. end-to-end fit parity (float drift tolerated)
+    cfg = MPADConfig(m=3, iters=16)
+    r1 = fit_mpad(x, cfg)
+    r2 = fit_mpad_sharded(x, cfg, mesh)
+    err = float(jnp.max(jnp.abs(r1.matrix - r2.matrix)))
+    assert err < 0.05, err
+    print("FIT_PARITY_OK", err)
+""")
+
+
+def test_distributed_mpad_parity():
+    out = subprocess.run(
+        [sys.executable, "-c", _SCRIPT], capture_output=True, text=True,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        env=dict(os.environ), timeout=600)
+    assert "PHI_PARITY_OK" in out.stdout, out.stderr[-3000:]
+    assert "FIT_PARITY_OK" in out.stdout, out.stderr[-3000:]

@@ -1,0 +1,145 @@
+"""LM correctness: decode==prefill consistency, chunking invariance, MoE."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.moe import MoEConfig, init_moe_params, moe_block
+from repro.models.transformer import (LMConfig, init_cache, layer_runs,
+                                      lm_decode_step, lm_embed,
+                                      lm_init_params, lm_loss, lm_prefill)
+
+CFG = LMConfig(name="t", n_layers=3, d_model=48, n_heads=4, n_kv_heads=2,
+               d_head=12, d_ff=96, vocab=120, tie_embeddings=False,
+               seq_chunk=8, q_chunk=8, kv_chunk=8)
+GEMMA = LMConfig(name="g", n_layers=7, d_model=32, n_heads=4, n_kv_heads=2,
+                 d_head=8, d_ff=64, vocab=64, sliding_window=6,
+                 global_every=3, rope_theta_local=10_000.0,
+                 seq_chunk=8, q_chunk=8, kv_chunk=8)
+
+
+def _toks(cfg, b, s, seed=0):
+    return jax.random.randint(jax.random.key(seed), (b, s), 0, cfg.vocab)
+
+
+@pytest.mark.parametrize("cfg", [CFG, GEMMA], ids=["dense", "local_global"])
+def test_decode_matches_prefill(cfg):
+    params = lm_init_params(jax.random.key(1), cfg)
+    toks = _toks(cfg, 2, 17)
+    nxt = _toks(cfg, 2, 1, seed=2)[:, 0]
+    cache = init_cache(cfg, 2, 24)
+    _, cache = lm_prefill(params, cfg, toks, cache)
+    ld, _ = lm_decode_step(params, cfg, nxt, jnp.int32(17), cache)
+    full = jnp.concatenate([toks, nxt[:, None]], 1)
+    lf, _ = lm_prefill(params, cfg, full, init_cache(cfg, 2, 24))
+    np.testing.assert_allclose(ld, lf, atol=2e-4)
+
+
+def test_multi_step_decode(dense_cfg=CFG):
+    """Three sequential decode steps == one prefill of the longer seq."""
+    cfg = dense_cfg
+    params = lm_init_params(jax.random.key(1), cfg)
+    toks = _toks(cfg, 1, 9)
+    extra = _toks(cfg, 1, 3, seed=5)[0]
+    cache = init_cache(cfg, 1, 16)
+    _, cache = lm_prefill(params, cfg, toks, cache)
+    for i in range(3):
+        logits, cache = lm_decode_step(params, cfg, extra[i:i + 1],
+                                       jnp.int32(9 + i), cache)
+    full = jnp.concatenate([toks[0], extra])[None, :]
+    lf, _ = lm_prefill(params, cfg, full, init_cache(cfg, 1, 16))
+    np.testing.assert_allclose(logits, lf, atol=2e-4)
+
+
+def test_loss_near_log_vocab_at_init():
+    params = lm_init_params(jax.random.key(1), CFG)
+    toks = _toks(CFG, 4, 32)
+    loss = lm_loss(params, CFG, toks, toks)
+    assert abs(float(loss) - np.log(CFG.vocab)) < 2.0
+
+
+def test_chunk_size_invariance():
+    """seq_chunk / q_chunk / kv_chunk must not change the loss."""
+    params = lm_init_params(jax.random.key(1), CFG)
+    toks = _toks(CFG, 2, 24)
+    l1 = lm_loss(params, CFG, toks, toks)
+    cfg2 = dataclasses.replace(CFG, seq_chunk=24, q_chunk=24, kv_chunk=4)
+    l2 = lm_loss(params, cfg2, toks, toks)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-5)
+
+
+def test_remat_invariance():
+    params = lm_init_params(jax.random.key(1), CFG)
+    toks = _toks(CFG, 2, 16)
+    l1 = lm_loss(params, CFG, toks, toks)
+    l2 = lm_loss(params, dataclasses.replace(CFG, remat=False), CFG and toks,
+                 toks) if False else lm_loss(
+        params, dataclasses.replace(CFG, remat=False), toks, toks)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-5)
+    g1 = jax.grad(lambda p: lm_loss(p, CFG, toks, toks))(params)
+    g2 = jax.grad(lambda p: lm_loss(
+        p, dataclasses.replace(CFG, remat=False), toks, toks))(params)
+    np.testing.assert_allclose(g1["embed"], g2["embed"], atol=1e-5)
+
+
+def test_sliding_window_masks_far_tokens():
+    """Single local layer, window w: logits at the last position must not
+    depend on tokens older than w (multi-layer stacks widen the receptive
+    field to 1 + L*(w-1), so depth must be 1 for a direct mask test)."""
+    cfg = dataclasses.replace(GEMMA, global_every=None, n_layers=1)
+    params = lm_init_params(jax.random.key(1), cfg)
+    toks = _toks(cfg, 1, 16)
+    toks2 = toks.at[0, 0].set((toks[0, 0] + 7) % cfg.vocab)  # distant change
+    l1, _ = lm_prefill(params, cfg, toks, init_cache(cfg, 1, 16))
+    l2, _ = lm_prefill(params, cfg, toks2, init_cache(cfg, 1, 16))
+    np.testing.assert_allclose(l1, l2, atol=1e-5)       # pos 15, window 6
+
+
+def test_vocab_padding_masked():
+    cfg = dataclasses.replace(CFG, vocab=100)           # pads to 256
+    params = lm_init_params(jax.random.key(1), cfg)
+    logits, _ = lm_prefill(params, cfg, _toks(cfg, 1, 8),
+                           init_cache(cfg, 1, 8))
+    assert cfg.vocab_padded == 256
+    assert float(jnp.max(logits[:, cfg.vocab:])) < -1e29
+
+
+def test_lm_embed():
+    params = lm_init_params(jax.random.key(1), CFG)
+    emb = lm_embed(params, CFG, _toks(CFG, 3, 16))
+    assert emb.shape == (3, CFG.d_model)
+    assert bool(jnp.all(jnp.isfinite(emb)))
+
+
+def test_layer_runs_pattern():
+    assert layer_runs(CFG) == [("global", 3)]
+    assert layer_runs(GEMMA) == [("local", 2), ("global", 1), ("local", 2),
+                                 ("global", 1), ("local", 1)]
+
+
+def test_moe_dense_equals_dispatch_no_drop():
+    mc_dense = MoEConfig(n_experts=4, top_k=2, d_ff=16, impl="dense")
+    mc_disp = MoEConfig(n_experts=4, top_k=2, d_ff=16, impl="dispatch",
+                        capacity_factor=8.0)
+    p = init_moe_params(jax.random.key(0), mc_dense, 24, 1, jnp.float32)
+    p1 = jax.tree.map(lambda a: a[0], p)
+    x = jax.random.normal(jax.random.key(1), (2, 10, 24))
+    y1, a1 = moe_block(x, p1, mc_dense)
+    y2, a2 = moe_block(x, p1, mc_disp)
+    np.testing.assert_allclose(y1, y2, atol=1e-5)
+    np.testing.assert_allclose(float(a1), float(a2), rtol=1e-6)
+
+
+def test_moe_capacity_drops_tokens():
+    """With tiny capacity, some tokens pass through un-expert-ed (residual
+    semantics handled by caller); dispatch must stay finite."""
+    mc = MoEConfig(n_experts=2, top_k=2, d_ff=8, impl="dispatch",
+                   capacity_factor=0.1)
+    p = init_moe_params(jax.random.key(0), mc, 12, 1, jnp.float32)
+    p1 = jax.tree.map(lambda a: a[0], p)
+    x = jax.random.normal(jax.random.key(1), (1, 64, 12))
+    y, _ = moe_block(x, p1, mc)
+    assert bool(jnp.all(jnp.isfinite(y)))
+    assert float(jnp.mean(jnp.abs(y))) < float(jnp.mean(jnp.abs(x)))

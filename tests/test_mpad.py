@@ -1,0 +1,74 @@
+"""MPAD trainer behaviour tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import MPADConfig, fit_mpad, transform
+
+
+def _clustered(n=300, d=24, seed=0):
+    key = jax.random.key(seed)
+    centers = jax.random.normal(key, (8, d)) * 2.0
+    lab = jax.random.randint(jax.random.fold_in(key, 1), (n,), 0, 8)
+    return centers[lab] + 0.3 * jax.random.normal(
+        jax.random.fold_in(key, 2), (n, d))
+
+
+def test_objective_improves():
+    x = _clustered()
+    res = fit_mpad(x, MPADConfig(m=4, iters=40))
+    tr = res.objective_trace
+    assert float(tr[0, -1]) > float(tr[0, 0])          # dir 0 improved
+
+
+def test_transform_shapes_and_call():
+    x = _clustered()
+    res = fit_mpad(x, MPADConfig(m=6, iters=8))
+    assert res.matrix.shape == (6, 24)
+    assert transform(res, x).shape == (300, 6)
+    assert res(x[:5]).shape == (5, 6)
+    np.testing.assert_allclose(jnp.linalg.norm(res.matrix, axis=1),
+                               np.ones(6), rtol=1e-4)
+
+
+def test_high_alpha_near_orthogonal():
+    """alpha=10000 'essentially enforces orthogonality' (paper Sec 4.1)."""
+    x = _clustered(seed=3)
+    res = fit_mpad(x, MPADConfig(m=4, alpha=10000.0, iters=60))
+    gram = res.matrix @ res.matrix.T
+    off = gram - jnp.diag(jnp.diag(gram))
+    assert float(jnp.max(jnp.abs(off))) < 0.1
+
+
+def test_backends_agree():
+    x = _clustered(n=200, seed=5)
+    cfg = dict(m=2, iters=10, seed=11)
+    r_fast = fit_mpad(x, MPADConfig(backend="fast", **cfg))
+    r_exact = fit_mpad(x, MPADConfig(backend="exact", **cfg))
+    r_kernel = fit_mpad(x, MPADConfig(backend="kernel", **cfg))
+    np.testing.assert_allclose(r_fast.matrix, r_exact.matrix, atol=2e-3)
+    np.testing.assert_allclose(r_fast.matrix, r_kernel.matrix, atol=2e-3)
+
+
+def test_stochastic_backend_runs():
+    x = _clustered(n=400, seed=7)
+    res = fit_mpad(x, MPADConfig(m=2, iters=12, batch_size=128))
+    assert bool(jnp.all(jnp.isfinite(res.matrix)))
+
+
+def test_validation():
+    x = _clustered()
+    with pytest.raises(ValueError):
+        fit_mpad(x, MPADConfig(m=100))                 # m > n
+    with pytest.raises(ValueError):
+        MPADConfig(m=2, b=0.0)
+    with pytest.raises(ValueError):
+        MPADConfig(m=2, backend="nope")
+
+
+def test_centering():
+    x = _clustered() + 100.0
+    res = fit_mpad(x, MPADConfig(m=2, iters=8, center=True))
+    y = transform(res, x)
+    assert float(jnp.abs(jnp.mean(y))) < 5.0           # offset removed

@@ -1,0 +1,114 @@
+"""Unit tests: paper-faithful objective vs the sorted fast path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (find_quantile_threshold, mu_b_exact_value_and_grad,
+                        mu_b_fast, mu_b_fast_value_and_grad,
+                        num_selected_pairs, orthogonality_penalty,
+                        threshold_stats)
+
+
+def _data(n=200, d=16, seed=0):
+    x = jax.random.normal(jax.random.key(seed), (n, d))
+    w = jax.random.normal(jax.random.key(seed + 1), (d,))
+    return x, w / jnp.linalg.norm(w)
+
+
+@pytest.mark.parametrize("b", [5.0, 25.0, 50.0, 80.0, 100.0])
+def test_exact_matches_fast(b):
+    x, w = _data()
+    ve, ge = mu_b_exact_value_and_grad(w, x, b=b)
+    vf, gf = mu_b_fast_value_and_grad(w, x, b=b)
+    np.testing.assert_allclose(ve, vf, rtol=1e-5, atol=1e-6)
+    # subgradient at the selection boundary: f32 rounding may swap a couple
+    # of boundary pairs in/out of D_b (each contributes ~|x_i-x_j|/K), so
+    # small-b gradients agree to ~1e-3 absolute, not elementwise-exactly.
+    np.testing.assert_allclose(ge, gf, atol=5e-3)
+    cos = float(jnp.dot(ge, gf) /
+                (jnp.linalg.norm(ge) * jnp.linalg.norm(gf) + 1e-12))
+    assert cos > 0.999, cos
+
+
+def test_custom_vjp_matches_autodiff_oracle():
+    x, w = _data(150, 8, seed=3)
+    g1 = jax.grad(lambda w_: mu_b_fast(w_, x, b=70.0))(w)
+    _, g2 = mu_b_exact_value_and_grad(w, x, b=70.0)
+    np.testing.assert_allclose(g1, g2, rtol=1e-3, atol=1e-5)
+
+
+def test_num_selected_pairs():
+    assert num_selected_pairs(100, 100.0) == 100 * 99 // 2
+    assert num_selected_pairs(100, 1e-9) == 1          # never zero
+    assert num_selected_pairs(10, 50.0) == 22
+
+
+def test_quantile_threshold_matches_numpy():
+    """tau converges to the k-th smallest pairwise diff within f32 rounding
+    (the bisection counts via searchsorted(ps, ps - t), whose rounding can
+    differ from direct (p_i - p_j) <= t by 1 ulp at the boundary)."""
+    p = np.asarray(jax.random.normal(jax.random.key(5), (300,)))
+    diffs = np.abs(p[:, None] - p[None, :])[np.triu_indices(300, 1)]
+    for k in [1, 10, 1000, len(diffs)]:
+        tau = float(find_quantile_threshold(jnp.asarray(p), k))
+        kth = float(np.sort(diffs)[k - 1])
+        assert abs(tau - kth) <= 1e-5 * max(abs(kth), 1e-3) + 1e-7, (tau, kth)
+        assert k - 2 <= (diffs <= tau).sum() <= k + 2
+        # tau is tight: clearly below it selects < k pairs
+        assert (diffs <= tau * (1 - 1e-4) - 1e-7).sum() < k
+
+
+def test_threshold_stats_counts():
+    p = jnp.asarray([0.0, 0.1, 0.25, 1.0])
+    st_ = threshold_stats(p, jnp.float32(0.3))
+    # pairs within 0.3: (0,.1) (0,.25) (.1,.25) -> 3
+    assert int(st_.count) == 3
+    np.testing.assert_allclose(float(st_.sum), 0.1 + 0.25 + 0.15, atol=1e-6)
+    # coefficients: c_i = (#below within tau) - (#above within tau)
+    np.testing.assert_allclose(st_.coeff, [-2.0, 0.0, 2.0, 0.0])
+
+
+def test_orthogonality_penalty():
+    w = jnp.array([1.0, 0.0])
+    prev = jnp.array([[0.0, 1.0]])
+    assert float(orthogonality_penalty(w, prev, 5.0)) == 0.0
+    prev2 = jnp.array([[1.0, 0.0], [0.6, 0.8]])
+    np.testing.assert_allclose(
+        float(orthogonality_penalty(w, prev2, 2.0)), 2.0 * (1 + 0.36),
+        rtol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(10, 80), st.floats(10.0, 100.0), st.integers(0, 10**6))
+def test_boundedness_property(n, b, seed):
+    """Paper Sec 3.6: mu_b(w) <= D_max (Cauchy-Schwarz)."""
+    x = jax.random.normal(jax.random.key(seed), (n, 5))
+    w = jax.random.normal(jax.random.key(seed + 1), (5,))
+    w = w / jnp.linalg.norm(w)
+    v, _ = mu_b_fast_value_and_grad(w, x, b=b)
+    d = jnp.sqrt(jnp.sum(
+        (x[:, None, :] - x[None, :, :]) ** 2, -1))
+    assert float(v) <= float(jnp.max(d)) + 1e-4
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10**6))
+def test_mu_monotone_in_b(seed):
+    """Mean of the smallest-b% set is nondecreasing in b."""
+    x = jax.random.normal(jax.random.key(seed), (60, 6))
+    w = jax.random.normal(jax.random.key(seed + 1), (6,))
+    w = w / jnp.linalg.norm(w)
+    vals = [float(mu_b_fast_value_and_grad(w, x, b=b)[0])
+            for b in (10.0, 40.0, 70.0, 100.0)]
+    assert all(vals[i] <= vals[i + 1] + 1e-5 for i in range(len(vals) - 1))
+
+
+def test_rotation_invariance():
+    """mu_b(Rw; RX) == mu_b(w; X) — paper's affine-robustness claim."""
+    x, w = _data(100, 6, seed=7)
+    q, _ = jnp.linalg.qr(jax.random.normal(jax.random.key(9), (6, 6)))
+    v1, _ = mu_b_fast_value_and_grad(w, x, b=80.0)
+    v2, _ = mu_b_fast_value_and_grad(q @ w, x @ q.T, b=80.0)
+    np.testing.assert_allclose(v1, v2, rtol=1e-4)

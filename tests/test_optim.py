@@ -1,0 +1,80 @@
+"""Optimizer + gradient-compression tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import (AdamWConfig, adamw_update, compress_int8,
+                         decompress_int8, ef_compress_update,
+                         init_compression_state, init_opt_state,
+                         make_train_step)
+
+
+def _quadratic_problem():
+    target = jnp.array([1.0, -2.0, 3.0])
+
+    def loss(params, batch):
+        return jnp.sum((params["w"] - target) ** 2)
+
+    return {"w": jnp.zeros(3)}, loss, target
+
+
+def test_adamw_converges_quadratic():
+    params, loss, target = _quadratic_problem()
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=0,
+                      total_steps=500, clip_norm=None)
+    step = jax.jit(make_train_step(loss, cfg))
+    opt = init_opt_state(params)
+    for _ in range(300):
+        l, params, opt = step(params, opt, None)
+    np.testing.assert_allclose(params["w"], target, atol=0.05)
+
+
+def test_clipping_bounds_update():
+    params = {"w": jnp.zeros(4)}
+    grads = {"w": jnp.full(4, 1e6)}
+    cfg = AdamWConfig(lr=0.1, clip_norm=1.0, warmup_steps=0, weight_decay=0.0)
+    new, opt = adamw_update(grads, init_opt_state(params), params, cfg)
+    assert float(jnp.max(jnp.abs(new["w"]))) < 1.0
+
+
+def test_warmup_schedule():
+    from repro.optim.adamw import _schedule
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100)
+    assert float(_schedule(cfg, jnp.int32(5))) == 0.5
+    assert float(_schedule(cfg, jnp.int32(10))) == 1.0
+    assert float(_schedule(cfg, jnp.int32(100))) <= cfg.min_lr_frac + 1e-6
+
+
+def test_int8_roundtrip_error_bounded():
+    x = jax.random.normal(jax.random.key(0), (1000,)) * 10
+    q, s = compress_int8(x)
+    err = jnp.abs(decompress_int8(q, s) - x)
+    assert float(jnp.max(err)) <= float(s) * 0.51 + 1e-6
+
+
+def test_error_feedback_accumulates():
+    """EF: sum of transported grads over steps ~= sum of true grads."""
+    params = {"w": jnp.zeros(8)}
+    state = init_compression_state(params)
+    true_sum = jnp.zeros(8)
+    sent_sum = jnp.zeros(8)
+    for i in range(50):
+        g = {"w": jax.random.normal(jax.random.key(i), (8,)) * 0.01}
+        dec, state = ef_compress_update(g, state)
+        true_sum = true_sum + g["w"]
+        sent_sum = sent_sum + dec["w"]
+    resid = state.error["w"]
+    np.testing.assert_allclose(sent_sum + resid, true_sum, atol=1e-4)
+
+
+def test_compressed_training_converges():
+    params, loss, target = _quadratic_problem()
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=0,
+                      clip_norm=None)
+    opt = init_opt_state(params)
+    cstate = init_compression_state(params)
+    for _ in range(300):
+        g = jax.grad(lambda p: loss(p, None))(params)
+        g, cstate = ef_compress_update(g, cstate)
+        params, opt = adamw_update(g, opt, params, cfg)
+    np.testing.assert_allclose(params["w"], target, atol=0.1)

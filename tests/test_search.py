@@ -1,0 +1,106 @@
+"""Vector-search substrate tests: knn, metrics, IVF, serving engine."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import MPADConfig, Reducer
+from repro.search import (IVFIndex, SearchEngine, ServeConfig, amk_accuracy,
+                          build_ivf, ivf_search, knn_search,
+                          knn_search_blocked)
+from repro.search.knn import recall_at_k
+
+
+def _data(seed=0, n=400, d=24):
+    key = jax.random.key(seed)
+    centers = jax.random.normal(key, (10, d)) * 2
+    lab = jax.random.randint(jax.random.fold_in(key, 1), (n,), 0, 10)
+    return centers[lab] + 0.3 * jax.random.normal(
+        jax.random.fold_in(key, 2), (n, d))
+
+
+def test_blocked_equals_full():
+    x = _data()
+    q = _data(seed=9, n=50)
+    d1, i1 = knn_search(q, x, 10)
+    d2, i2 = knn_search_blocked(q, x, 10, block=128)
+    np.testing.assert_array_equal(np.sort(np.asarray(i1), 1),
+                                  np.sort(np.asarray(i2), 1))
+    np.testing.assert_allclose(d1, d2, atol=1e-4)
+
+
+def test_identity_reducer_perfect_recall():
+    x = _data()
+    y = _data(seed=3, n=60)
+    acc = amk_accuracy(Reducer("id", lambda v: v), x, y, 10)
+    assert float(acc) == 1.0
+
+
+def test_recall_metric():
+    a = jnp.array([[1, 2, 3], [4, 5, 6]])
+    b = jnp.array([[3, 2, 9], [7, 8, 0]])
+    np.testing.assert_allclose(float(recall_at_k(a, b)), (2 / 3 + 0) / 2,
+                               rtol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10**6))
+def test_recall_permutation_invariant(seed):
+    k = 8
+    found = jax.random.permutation(jax.random.key(seed), 20)[:k][None, :]
+    perm = jax.random.permutation(jax.random.key(seed + 1), found[0])[None, :]
+    truth = jax.random.permutation(jax.random.key(seed + 2), 20)[:k][None, :]
+    assert float(recall_at_k(found, truth)) == float(
+        recall_at_k(perm, truth))
+
+
+def test_ivf_full_probe_exact():
+    x = _data(seed=5)
+    q = _data(seed=6, n=40)
+    idx = build_ivf(jax.random.key(0), x, nlist=8)
+    _, truth = knn_search(q, x, 10)
+    _, found = ivf_search(idx, q, 10, nprobe=8)
+    assert float(recall_at_k(found, truth)) == 1.0
+
+
+def test_ivf_partial_probe_reasonable():
+    x = _data(seed=5)
+    q = _data(seed=6, n=40)
+    idx = build_ivf(jax.random.key(0), x, nlist=8)
+    _, truth = knn_search(q, x, 10)
+    _, found = ivf_search(idx, q, 10, nprobe=3)
+    assert float(recall_at_k(found, truth)) > 0.6
+
+
+def test_engine_with_mpad_and_rerank():
+    x = _data(seed=7, n=500)
+    q = _data(seed=8, n=50)
+    _, truth = knn_search(q, x, 10)
+    eng = SearchEngine(x, ServeConfig(
+        target_dim=8, rerank=64,
+        mpad=MPADConfig(m=8, iters=24)))
+    _, found = eng.search(q, 10)
+    assert float(recall_at_k(found, truth)) > 0.8
+
+
+def test_engine_ivf_path():
+    x = _data(seed=7, n=500)
+    q = _data(seed=8, n=50)
+    _, truth = knn_search(q, x, 10)
+    eng = SearchEngine(x, ServeConfig(
+        target_dim=8, rerank=64, use_ivf=True, nlist=16, nprobe=16,
+        mpad=MPADConfig(m=8, iters=24)))
+    _, found = eng.search(q, 10)
+    assert float(recall_at_k(found, truth)) > 0.7
+
+
+def test_engine_pq_path():
+    """MPAD-reduce -> PQ-code -> ADC scan -> exact re-rank."""
+    x = _data(seed=7, n=500)
+    q = _data(seed=8, n=50)
+    _, truth = knn_search(q, x, 10)
+    eng = SearchEngine(x, ServeConfig(
+        target_dim=8, rerank=64, use_pq=True, pq_subspaces=4,
+        pq_centroids=64, mpad=MPADConfig(m=8, iters=24)))
+    _, found = eng.search(q, 10)
+    assert float(recall_at_k(found, truth)) > 0.7

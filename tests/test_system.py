@@ -1,0 +1,71 @@
+"""End-to-end behaviour tests for the paper's system (deliverable (c)):
+the full pipeline — data -> MPAD -> index -> serve — and the paper's
+headline claims on the benchmark protocol (reduced sizes)."""
+import jax
+import jax.numpy as jnp
+
+from repro.core import MPADConfig, fit_mpad, fit_pca, fit_random_projection
+from repro.data.synthetic import make_fasttext_like
+from repro.search import SearchEngine, ServeConfig, amk_accuracy, knn_search
+from repro.search.knn import recall_at_k
+
+
+def _bench_data():
+    return make_fasttext_like(jax.random.key(0), n_train=400, n_test=120)
+
+
+def test_mpad_beats_variance_methods_on_heavy_tailed_data():
+    """The paper's core claim (Fig.1 regime): on embedding-like data with
+    heavy-tailed nuisance dimensions, MPAD preserves k-NN better than
+    variance-driven projections."""
+    xtr, xte = _bench_data()
+    m, k = 30, 10
+    acc_mpad = float(amk_accuracy(
+        fit_mpad(xtr, MPADConfig(m=m, alpha=50.0, b=80.0, iters=80)),
+        xtr, xte, k))
+    acc_pca = float(amk_accuracy(fit_pca(xtr, m), xtr, xte, k))
+    acc_rp = float(amk_accuracy(
+        fit_random_projection(jax.random.key(1), xtr.shape[1], m),
+        xtr, xte, k))
+    assert acc_mpad > acc_pca, (acc_mpad, acc_pca)
+    assert acc_mpad > acc_rp, (acc_mpad, acc_rp)
+
+
+def test_accuracy_increases_with_target_dim():
+    """Paper Fig.3 column 2: A_m(k) grows monotonically-ish with m."""
+    xtr, xte = _bench_data()
+    accs = [float(amk_accuracy(
+        fit_mpad(xtr, MPADConfig(m=m, iters=48)), xtr, xte, 10))
+        for m in (5, 30, 120)]
+    assert accs[0] < accs[-1] + 0.02
+    assert accs[1] <= accs[2] + 0.05
+
+
+def test_end_to_end_serving_pipeline():
+    """corpus -> MPAD fit -> IVF -> batched queries -> rerank -> recall."""
+    key = jax.random.key(0)
+    centers = jax.random.normal(key, (32, 128)) * 2
+    lab = jax.random.randint(jax.random.fold_in(key, 1), (2000,), 0, 32)
+    corpus = centers[lab] + 0.4 * jax.random.normal(
+        jax.random.fold_in(key, 2), (2000, 128))
+    queries = corpus[:64] + 0.05 * jax.random.normal(
+        jax.random.fold_in(key, 3), (64, 128))
+    engine = SearchEngine(corpus, ServeConfig(
+        target_dim=16, rerank=40, use_ivf=True, nlist=32, nprobe=8,
+        mpad=MPADConfig(m=16, iters=32), fit_sample=1024))
+    _, ids = engine.search(queries, 10)
+    _, truth = knn_search(queries, corpus, 10)
+    rec = float(recall_at_k(ids, truth))
+    assert rec > 0.8, rec
+
+
+def test_stochastic_mpad_matches_full_quality():
+    """Beyond-paper stochastic MPAD stays within a few points of full-batch
+    accuracy while touching a fraction of rows per iteration."""
+    xtr, xte = _bench_data()
+    full = float(amk_accuracy(
+        fit_mpad(xtr, MPADConfig(m=20, iters=60)), xtr, xte, 10))
+    stoch = float(amk_accuracy(
+        fit_mpad(xtr, MPADConfig(m=20, iters=60, batch_size=128)),
+        xtr, xte, 10))
+    assert stoch > full - 0.08, (stoch, full)
