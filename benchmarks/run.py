@@ -99,6 +99,45 @@ def bench_serving(rows):
                  f"recall@10={rec:.4f}"))
 
 
+def bench_ivfpq(rows):
+    """IVF-PQ recall/latency sweep (nprobe x pq_subspaces) vs the flat scan
+    on a 16k x 128 clustered corpus — the acceptance grid for the residual
+    index subsystem."""
+    from repro.search import SearchEngine, ServeConfig, knn_search
+    from repro.search.knn import recall_at_k
+    key = jax.random.key(0)
+    centers = jax.random.normal(key, (64, 128)) * 1.5
+    lab = jax.random.randint(jax.random.fold_in(key, 1), (16384,), 0, 64)
+    corpus = centers[lab] + 0.4 * jax.random.normal(
+        jax.random.fold_in(key, 2), (16384, 128))
+    nq = 256
+    queries = corpus[:nq] + 0.05 * jax.random.normal(
+        jax.random.fold_in(key, 3), (nq, 128))
+    _, truth = knn_search(queries, corpus, 10)
+
+    eng_flat = SearchEngine(corpus, ServeConfig(target_dim=None))
+    us_flat = _timeit(eng_flat.search, queries, 10, reps=3)
+    _, found = eng_flat.search(queries, 10)
+    rec_flat = float(recall_at_k(found, truth))
+    rows.append(("serve_flat_dim128_16384x256q", us_flat,
+                 f"recall@10={rec_flat:.4f} us_per_q={us_flat / nq:.1f}"))
+
+    import dataclasses
+    for m in (8, 16):
+        # one build per code budget; nprobe is a query-time knob
+        eng = SearchEngine(corpus, ServeConfig(
+            target_dim=None, rerank=64, index="ivfpq", nlist=256,
+            pq_subspaces=m, pq_centroids=256))
+        for nprobe in (2, 4, 8):
+            eng.config = dataclasses.replace(eng.config, nprobe=nprobe)
+            us = _timeit(eng.search, queries, 10, reps=3)
+            _, found = eng.search(queries, 10)
+            rec = float(recall_at_k(found, truth))
+            rows.append((f"serve_ivfpq_m{m}_nprobe{nprobe}", us,
+                         f"recall@10={rec:.4f} us_per_q={us / nq:.1f} "
+                         f"speedup_vs_flat={us_flat / us:.1f}x"))
+
+
 def roofline_summary(rows):
     art = "benchmarks/artifacts/dryrun"
     if not os.path.isdir(art):
@@ -121,7 +160,8 @@ def roofline_summary(rows):
 def main() -> None:
     rows = []
     for bench in (bench_objective_backends, bench_kernels, bench_fit,
-                  bench_serving, bench_accuracy, roofline_summary):
+                  bench_serving, bench_ivfpq, bench_accuracy,
+                  roofline_summary):
         try:
             bench(rows)
         except Exception as e:                       # keep the harness going

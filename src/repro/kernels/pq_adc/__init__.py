@@ -1,0 +1,11 @@
+from .kernel import pq_adc_gather_topk_pallas, pq_adc_topk_pallas
+from .ops import pq_adc_gather_topk, pq_adc_topk
+from .ref import (pq_adc_gather_scores_ref, pq_adc_gather_topk_ref,
+                  pq_adc_scores_ref, pq_adc_topk_ref)
+
+__all__ = [
+    "pq_adc_topk_pallas", "pq_adc_gather_topk_pallas",
+    "pq_adc_topk", "pq_adc_gather_topk",
+    "pq_adc_scores_ref", "pq_adc_topk_ref",
+    "pq_adc_gather_scores_ref", "pq_adc_gather_topk_ref",
+]

@@ -1,0 +1,64 @@
+"""Pure-jnp oracle for the fused PQ ADC scan: full distance-table lookups
+plus ``lax.top_k``. Used for kernel parity tests and as the semantic spec.
+
+Two variants mirror the two kernel entry points:
+
+* shared codes — one (N, M) code matrix scanned by every query (plain PQ);
+* gathered codes — per-query (C, M) candidate codes plus a per-candidate
+  additive ``base`` term (the IVF-PQ residual decomposition: coarse distance
+  + centroid/codeword cross term; see ``repro.search.ivfpq``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["pq_adc_scores_ref", "pq_adc_topk_ref",
+           "pq_adc_gather_scores_ref", "pq_adc_gather_topk_ref"]
+
+
+def pq_adc_scores_ref(tables: jax.Array, codes: jax.Array) -> jax.Array:
+    """ADC distances, shared codes: out[q, n] = sum_m tables[q, m, codes[n, m]].
+
+    tables (Q, M, K) f32; codes (N, M) int. Returns (Q, N) f32.
+    """
+    m = tables.shape[1]
+    d2 = jnp.zeros((tables.shape[0], codes.shape[0]), jnp.float32)
+    for j in range(m):                       # M small (4-16): unrolled
+        d2 = d2 + tables[:, j, :][:, codes[:, j]]
+    return d2
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def pq_adc_topk_ref(tables: jax.Array, codes: jax.Array, k: int):
+    """Returns (d2 (Q, k) ascending, idx (Q, k)) over the shared code matrix."""
+    d2 = pq_adc_scores_ref(tables, codes)
+    neg, idx = jax.lax.top_k(-d2, k)
+    return -neg, idx
+
+
+def pq_adc_gather_scores_ref(tables: jax.Array, codes: jax.Array,
+                             base: jax.Array) -> jax.Array:
+    """ADC distances, per-query candidate codes:
+
+    out[q, c] = base[q, c] + sum_m tables[q, m, codes[q, c, m]].
+
+    tables (Q, M, K) f32; codes (Q, C, M) int; base (Q, C) f32 (use +inf to
+    mask padded candidates). Returns (Q, C) f32.
+    """
+    m = tables.shape[1]
+    d2 = base.astype(jnp.float32)
+    for j in range(m):
+        d2 = d2 + jnp.take_along_axis(tables[:, j, :], codes[:, :, j], axis=1)
+    return d2
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def pq_adc_gather_topk_ref(tables: jax.Array, codes: jax.Array,
+                           base: jax.Array, k: int):
+    """Returns (d2 (Q, k) ascending, idx (Q, k)); idx is the candidate slot."""
+    d2 = pq_adc_gather_scores_ref(tables, codes, base)
+    neg, idx = jax.lax.top_k(-d2, k)
+    return -neg, idx

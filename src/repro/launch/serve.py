@@ -25,7 +25,11 @@ def main():
     ap.add_argument("--batch", type=int, default=256)
     ap.add_argument("--batches", type=int, default=5)
     ap.add_argument("--k", type=int, default=10)
-    ap.add_argument("--ivf", action="store_true")
+    ap.add_argument("--index", choices=["flat", "ivf", "pq", "ivfpq"],
+                    default="flat")
+    ap.add_argument("--nlist", type=int, default=64)
+    ap.add_argument("--nprobe", type=int, default=8)
+    ap.add_argument("--pq-subspaces", type=int, default=8)
     args = ap.parse_args()
 
     key = jax.random.key(0)
@@ -33,11 +37,13 @@ def main():
                                spread=0.4, center_scale=1.5)
     t0 = time.time()
     engine = SearchEngine(corpus, ServeConfig(
-        target_dim=args.target_dim, rerank=4 * args.k, use_ivf=args.ivf,
+        target_dim=args.target_dim, rerank=4 * args.k, index=args.index,
+        nlist=args.nlist, nprobe=args.nprobe,
+        pq_subspaces=args.pq_subspaces,
         mpad=MPADConfig(m=args.target_dim, iters=64, batch_size=2048),
         fit_sample=4096))
     print(f"index built in {time.time()-t0:.1f}s "
-          f"({args.dim}->{args.target_dim} dims, ivf={args.ivf})")
+          f"({args.dim}->{args.target_dim} dims, index={args.index})")
 
     total, rec_sum = 0.0, 0.0
     for i in range(args.batches):

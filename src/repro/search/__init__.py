@@ -1,13 +1,16 @@
-"""Vector-search substrate: brute-force k-NN, recall metrics, IVF-Flat ANN
-index, and the batched serving engine that integrates MPAD reduction."""
+"""Vector-search substrate: brute-force k-NN, recall metrics, IVF-Flat /
+PQ / IVF-PQ ANN indexes, and the batched serving engine that integrates
+MPAD reduction."""
 from .knn import knn_search, knn_search_blocked, recall_at_k, amk_accuracy
-from .ivf import IVFIndex, build_ivf, ivf_search
+from .ivf import IVFIndex, build_ivf, ivf_search, posting_lists
+from .ivfpq import IVFPQIndex, build_ivfpq, ivfpq_search
 from .pq import PQIndex, build_pq, pq_search, pq_reconstruct
-from .serve import SearchEngine, ServeConfig
+from .serve import INDEX_KINDS, SearchEngine, ServeConfig
 
 __all__ = [
     "knn_search", "knn_search_blocked", "recall_at_k", "amk_accuracy",
-    "IVFIndex", "build_ivf", "ivf_search",
+    "IVFIndex", "build_ivf", "ivf_search", "posting_lists",
+    "IVFPQIndex", "build_ivfpq", "ivfpq_search",
     "PQIndex", "build_pq", "pq_search", "pq_reconstruct",
-    "SearchEngine", "ServeConfig",
+    "SearchEngine", "ServeConfig", "INDEX_KINDS",
 ]

@@ -17,7 +17,14 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-__all__ = ["IVFIndex", "build_ivf", "ivf_search", "kmeans"]
+__all__ = ["IVFIndex", "build_ivf", "ivf_search", "kmeans", "posting_lists",
+           "sq_dists"]
+
+
+def sq_dists(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Unclamped pairwise squared L2: |a|^2 + |b|^2 - 2 a@b^T, shape (A, B)."""
+    return (jnp.sum(a * a, 1)[:, None] + jnp.sum(b * b, 1)[None, :]
+            - 2.0 * a @ b.T)
 
 
 class IVFIndex(NamedTuple):
@@ -34,9 +41,7 @@ def kmeans(key: jax.Array, x: jax.Array, nlist: int, iters: int = 12):
     cent = x[init]
 
     def step(cent, _):
-        d2 = (jnp.sum(x * x, 1)[:, None] + jnp.sum(cent * cent, 1)[None, :]
-              - 2.0 * x @ cent.T)
-        assign = jnp.argmin(d2, axis=1)
+        assign = jnp.argmin(sq_dists(x, cent), axis=1)
         one_hot = jax.nn.one_hot(assign, nlist, dtype=x.dtype)
         counts = one_hot.sum(0)
         sums = one_hot.T @ x
@@ -49,13 +54,11 @@ def kmeans(key: jax.Array, x: jax.Array, nlist: int, iters: int = 12):
     return cent
 
 
-def build_ivf(key: jax.Array, vectors: jax.Array, nlist: int,
-              kmeans_iters: int = 12) -> IVFIndex:
-    vectors = jnp.asarray(vectors, jnp.float32)
-    cent = kmeans(key, vectors, nlist, kmeans_iters)
-    d2 = (jnp.sum(vectors * vectors, 1)[:, None]
-          + jnp.sum(cent * cent, 1)[None, :] - 2.0 * vectors @ cent.T)
-    assign = jnp.argmin(d2, axis=1)                       # (N,)
+def posting_lists(assign: jax.Array, nlist: int) -> jax.Array:
+    """Padded-dense posting lists from a cell assignment.
+
+    Returns (nlist, max_cell) int32 vector ids, -1 = pad; rows are cells.
+    """
     counts = jnp.bincount(assign, length=nlist)
     max_cell = int(counts.max())
     # stable bucket layout: sort ids by (cell, id); row-major fill
@@ -65,7 +68,15 @@ def build_ivf(key: jax.Array, vectors: jax.Array, nlist: int,
     pos = jnp.arange(order.shape[0]) - jnp.searchsorted(
         sorted_cells, sorted_cells, side="left")
     lists = jnp.full((nlist, max_cell), -1, jnp.int32)
-    lists = lists.at[sorted_cells, pos].set(order.astype(jnp.int32))
+    return lists.at[sorted_cells, pos].set(order.astype(jnp.int32))
+
+
+def build_ivf(key: jax.Array, vectors: jax.Array, nlist: int,
+              kmeans_iters: int = 12) -> IVFIndex:
+    vectors = jnp.asarray(vectors, jnp.float32)
+    cent = kmeans(key, vectors, nlist, kmeans_iters)
+    assign = jnp.argmin(sq_dists(vectors, cent), axis=1)  # (N,)
+    lists = posting_lists(assign, nlist)
     return IVFIndex(centroids=cent, lists=lists, vectors=vectors)
 
 
@@ -74,10 +85,11 @@ def ivf_search(index: IVFIndex, q: jax.Array, k: int, nprobe: int = 8):
     """Probe the nprobe nearest cells; returns (dists (Q,k), ids (Q,k))."""
     q = jnp.asarray(q, jnp.float32)
     cent, lists, vecs = index
-    cd2 = (jnp.sum(q * q, 1)[:, None] + jnp.sum(cent * cent, 1)[None, :]
-           - 2.0 * q @ cent.T)
-    _, probe = jax.lax.top_k(-cd2, nprobe)                # (Q, nprobe)
+    _, probe = jax.lax.top_k(-sq_dists(q, cent), nprobe)  # (Q, nprobe)
     cand = lists[probe].reshape(q.shape[0], -1)           # (Q, nprobe*max_cell)
+    if cand.shape[1] < k:   # degenerate probe budget: pad so top_k is legal
+        cand = jnp.pad(cand, ((0, 0), (0, k - cand.shape[1])),
+                       constant_values=-1)
     valid = cand >= 0
     cv = vecs[jnp.maximum(cand, 0)]                       # (Q, C, d)
     d2 = jnp.sum((cv - q[:, None, :]) ** 2, axis=-1)

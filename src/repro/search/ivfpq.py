@@ -1,0 +1,115 @@
+"""IVF-PQ: coarse k-means quantizer + product-quantized **residuals** —
+the classic memory-hierarchy composition for production vector search
+(reduce dims -> coarse-quantize -> PQ-code what the centroid missed).
+
+Layout matches ``ivf.py``: padded-dense posting lists (nlist, max_cell)
+with -1 pads, so probe-scan is gather + masked top-k (TPU-idiomatic, no
+ragged structures on device). Codebooks are trained on residuals
+``x - centroid[assign(x)]`` and shared across cells (standard IVF-ADC).
+
+Scoring uses the exact residual decomposition so the per-query LUT is
+cell-independent — the same (Q, M, K) shape as plain PQ, which is what lets
+the fused ADC kernel serve both index types. With reconstruction
+x̂ = c + r̂, r̂_m = cb[m, code_m]:
+
+  ||q - x̂||² = ||q - c||²                                   (coarse term,
+                                                 already computed to probe)
+             + Σ_m ( ||cb[m,code_m]||² - 2⟨q_m, cb[m,code_m]⟩ )   (query LUT)
+             + 2 Σ_m ⟨c_m, cb[m,code_m]⟩                 (per-id build-time
+                                                          scalar: ``bias``)
+
+No approximation beyond PQ itself: the cross terms are exact.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.pq_adc.ref import pq_adc_gather_scores_ref
+from .ivf import kmeans, posting_lists, sq_dists
+from .pq import build_pq
+
+__all__ = ["IVFPQIndex", "build_ivfpq", "ivfpq_search"]
+
+
+class IVFPQIndex(NamedTuple):
+    centroids: jax.Array    # (nlist, d) coarse quantizer
+    lists: jax.Array        # (nlist, max_cell) int32 vector ids, -1 = pad
+    codebooks: jax.Array    # (M, K, dsub) residual-space PQ codebooks
+    codes: jax.Array        # (N, M) int32 residual codes, id-aligned
+    bias: jax.Array         # (N,) f32: 2·Σ_m ⟨cent[assign]_m, cb[m, code_m]⟩
+
+
+def build_ivfpq(key: jax.Array, vectors: jax.Array, nlist: int,
+                m_subspaces: int = 8, n_centroids: int = 256,
+                kmeans_iters: int = 12, pq_iters: int = 10) -> IVFPQIndex:
+    """Coarse k-means, then per-subspace codebooks on the residuals."""
+    vectors = jnp.asarray(vectors, jnp.float32)
+    n, d = vectors.shape
+    cent = kmeans(key, vectors, nlist, kmeans_iters)
+    assign = jnp.argmin(sq_dists(vectors, cent), axis=1)  # (N,)
+    lists = posting_lists(assign, nlist)
+    residuals = vectors - cent[assign]
+    pq = build_pq(jax.random.fold_in(key, 7), residuals,
+                  m_subspaces, n_centroids, pq_iters)
+    # per-id centroid/codeword cross term (see module docstring)
+    dsub = d // m_subspaces
+    csub = cent[assign].reshape(n, m_subspaces, dsub)     # (N, M, dsub)
+    recon = jnp.take_along_axis(
+        pq.codebooks[None], pq.codes[:, :, None, None], axis=2
+    )[:, :, 0, :]                                         # (N, M, dsub)
+    bias = 2.0 * jnp.sum(csub * recon, axis=(1, 2))       # (N,)
+    return IVFPQIndex(centroids=cent, lists=lists, codebooks=pq.codebooks,
+                      codes=pq.codes, bias=bias.astype(jnp.float32))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "nprobe", "backend", "interpret"))
+def ivfpq_search(index: IVFPQIndex, q: jax.Array, k: int, nprobe: int = 8,
+                 backend: str = "jnp", interpret: bool = True):
+    """Probe ``nprobe`` cells, ADC-score their residual codes, top-k.
+
+    Returns (approx dists (Q, k), ids (Q, k)). ``backend="kernel"`` routes
+    the candidate scoring through the fused Pallas ADC-gather kernel.
+    """
+    if backend not in ("jnp", "kernel"):
+        raise ValueError(f"unknown ADC backend {backend!r}")
+    q = jnp.asarray(q, jnp.float32)
+    cent, lists, cbs, codes, bias = index
+    nq = q.shape[0]
+    m, kc, dsub = cbs.shape
+    # coarse probe: distances to every centroid, keep the nprobe nearest
+    cd2 = sq_dists(q, cent)                               # (Q, nlist)
+    _, probe = jax.lax.top_k(-cd2, nprobe)                # (Q, nprobe)
+    cd2p = jnp.take_along_axis(cd2, probe, axis=1)        # (Q, nprobe)
+    cand = lists[probe].reshape(nq, -1)                   # (Q, nprobe*max_cell)
+    if cand.shape[1] < k:   # degenerate probe budget: pad so top_k is legal
+        cand = jnp.pad(cand, ((0, 0), (0, k - cand.shape[1])),
+                       constant_values=-1)
+    valid = cand >= 0
+    cid = jnp.maximum(cand, 0)
+    # cell-independent query LUT over residual codebooks: (Q, M, K)
+    qs = q.reshape(nq, m, dsub)
+    tables = (jnp.sum(cbs ** 2, -1)[None]
+              - 2.0 * jnp.einsum("qmd,mkd->qmk", qs, cbs))
+    max_cell = lists.shape[1]
+    base = jnp.repeat(cd2p, max_cell, axis=1)
+    base = jnp.pad(base, ((0, 0), (0, cand.shape[1] - base.shape[1])))
+    base = jnp.where(valid, base + bias[cid], jnp.inf)    # mask posting pads
+    ccodes = codes[cid]                                   # (Q, C, M)
+    if backend == "kernel":
+        from repro.kernels.pq_adc import pq_adc_gather_topk_pallas
+        d2, sel = pq_adc_gather_topk_pallas(tables, ccodes, base, k,
+                                            interpret=interpret)
+    else:
+        adc = pq_adc_gather_scores_ref(tables, ccodes, base)
+        neg, sel = jax.lax.top_k(-adc, k)
+        d2 = -neg
+    # the kernel marks unfilled slots sel=-1; don't let them wrap the gather
+    ids = jnp.where(sel >= 0,
+                    jnp.take_along_axis(cand, jnp.maximum(sel, 0), axis=1),
+                    -1)
+    return jnp.sqrt(jnp.maximum(d2, 0.0)), ids

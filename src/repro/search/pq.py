@@ -14,7 +14,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from .ivf import kmeans
+from repro.kernels.pq_adc.ref import pq_adc_scores_ref
+from .ivf import kmeans, sq_dists
 
 __all__ = ["PQIndex", "build_pq", "pq_search", "pq_reconstruct"]
 
@@ -38,10 +39,8 @@ def build_pq(key: jax.Array, x: jax.Array, m_subspaces: int = 8,
         sub = xs[:, m]
         cb = kmeans(jax.random.fold_in(key, m), sub,
                     min(n_centroids, n), iters)
-        d2 = (jnp.sum(sub * sub, 1)[:, None]
-              + jnp.sum(cb * cb, 1)[None, :] - 2.0 * sub @ cb.T)
         cbs.append(cb)
-        codes.append(jnp.argmin(d2, axis=1))
+        codes.append(jnp.argmin(sq_dists(sub, cb), axis=1))
     return PQIndex(codebooks=jnp.stack(cbs),
                    codes=jnp.stack(codes, axis=1).astype(jnp.int32))
 
@@ -53,9 +52,17 @@ def pq_reconstruct(index: PQIndex) -> jax.Array:
     return jnp.concatenate(parts, axis=1)
 
 
-@functools.partial(jax.jit, static_argnames=("k",))
-def pq_search(index: PQIndex, q: jax.Array, k: int):
-    """ADC top-k: returns (approx dists (Q,k), ids (Q,k))."""
+@functools.partial(jax.jit, static_argnames=("k", "backend", "interpret"))
+def pq_search(index: PQIndex, q: jax.Array, k: int, backend: str = "jnp",
+              interpret: bool = True):
+    """ADC top-k: returns (approx dists (Q,k), ids (Q,k)).
+
+    ``backend="jnp"`` scores with vectorized table lookups; ``"kernel"``
+    dispatches the fused Pallas ADC scan (``repro.kernels.pq_adc``),
+    identical semantics, tiled + running top-k on device.
+    """
+    if backend not in ("jnp", "kernel"):
+        raise ValueError(f"unknown ADC backend {backend!r}")
     q = jnp.asarray(q, jnp.float32)
     nq, d = q.shape
     m, kc, dsub = index.codebooks.shape
@@ -64,9 +71,10 @@ def pq_search(index: PQIndex, q: jax.Array, k: int):
     tables = (jnp.sum(qs * qs, -1)[:, :, None]
               + jnp.sum(index.codebooks ** 2, -1)[None]
               - 2.0 * jnp.einsum("qmd,mkd->qmk", qs, index.codebooks))
-    # score all codes: sum_m tables[q, m, codes[n, m]]
-    d2 = jnp.zeros((nq, index.codes.shape[0]), jnp.float32)
-    for j in range(m):                       # M small (8-16): unrolled
-        d2 = d2 + tables[:, j, :][:, index.codes[:, j]]
-    neg, ids = jax.lax.top_k(-d2, k)
+    if backend == "kernel":
+        from repro.kernels.pq_adc import pq_adc_topk_pallas
+        d2, ids = pq_adc_topk_pallas(tables, index.codes, k,
+                                     interpret=interpret)
+        return jnp.sqrt(jnp.maximum(d2, 0.0)), ids
+    neg, ids = jax.lax.top_k(-pq_adc_scores_ref(tables, index.codes), k)
     return jnp.sqrt(jnp.maximum(-neg, 0.0)), ids

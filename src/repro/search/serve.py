@@ -1,18 +1,27 @@
 """Batched vector-search serving engine with MPAD as a first-class feature.
 
 Pipeline (DESIGN.md §2): corpus -> [fit MPAD on a sample] -> reduce corpus ->
-[build IVF over reduced vectors] -> serve batched queries:
-reduce query -> (IVF probe | brute top-C) in reduced space -> exact re-rank of
-the C candidates in the original space -> top-k.
+[build an index over reduced vectors] -> serve batched queries:
+reduce query -> index probe/scan in reduced space -> exact re-rank of the C
+candidates in the original space -> top-k.
 
 The reduced-space scan is where the paper's win lands: score FLOPs and corpus
 bytes scale with m instead of n, and the re-rank restores exactness on the
 short candidate list.
+
+Index layouts (``ServeConfig.index``):
+
+  "flat"   exact scan of the (reduced) vectors
+  "ivf"    k-means coarse quantizer, probe nprobe cells, exact cell scan
+  "pq"     product-quantized vectors, fused ADC scan
+  "ivfpq"  coarse quantizer + PQ-coded residuals, probed ADC scan — the
+           production memory-hierarchy composition
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import Optional
 
 import jax
@@ -20,25 +29,64 @@ import jax.numpy as jnp
 
 from repro.core import MPADConfig, MPADResult, fit_mpad
 from .ivf import IVFIndex, build_ivf, ivf_search
+from .ivfpq import IVFPQIndex, build_ivfpq, ivfpq_search
 from .knn import knn_search
-from .pq import build_pq, pq_search
+from .pq import PQIndex, build_pq, pq_search
 
-__all__ = ["ServeConfig", "SearchEngine"]
+__all__ = ["ServeConfig", "SearchEngine", "INDEX_KINDS"]
+
+INDEX_KINDS = ("flat", "ivf", "pq", "ivfpq")
+_ADC_BACKENDS = ("jnp", "kernel")
 
 
 @dataclasses.dataclass(frozen=True)
 class ServeConfig:
     target_dim: Optional[int] = None     # None = no reduction (full-dim exact)
     rerank: int = 64                     # candidates re-ranked in original space
-    use_ivf: bool = False
-    nlist: int = 64
-    nprobe: int = 8
-    use_pq: bool = False                 # PQ-code the (reduced) vectors
-    pq_subspaces: int = 8
-    pq_centroids: int = 256
+    index: str = "flat"                  # one of INDEX_KINDS
+    nlist: int = 64                      # ivf/ivfpq: coarse cells
+    nprobe: int = 8                      # ivf/ivfpq: cells probed per query
+    pq_subspaces: int = 8                # pq/ivfpq: code bytes per vector
+    pq_centroids: int = 256              # pq/ivfpq: codebook size per subspace
+    pq_backend: str = "jnp"              # ADC scoring: "jnp" | "kernel"
+    pq_interpret: bool = True            # kernel backend: Pallas interpret
+    #                                      mode (set False on real TPU)
     mpad: Optional[MPADConfig] = None    # defaults derived from target_dim
     fit_sample: int = 2048               # rows used to fit the projection
     seed: int = 0
+    # deprecated boolean index spec (pre-``index=``); shimmed in __post_init__
+    use_ivf: Optional[bool] = None
+    use_pq: Optional[bool] = None
+
+    def __post_init__(self):
+        if self.use_ivf and self.use_pq:
+            raise ValueError(
+                "use_ivf=True with use_pq=True is ambiguous (the old engine "
+                "silently built IVF only); request the composition explicitly "
+                "with ServeConfig(index='ivfpq').")
+        if self.use_ivf or self.use_pq:
+            if self.index != "flat":
+                raise ValueError(
+                    "pass either index= or the deprecated use_ivf/use_pq "
+                    "booleans, not both")
+            warnings.warn(
+                "ServeConfig(use_ivf=/use_pq=) is deprecated; use "
+                "ServeConfig(index='ivf'|'pq'|'ivfpq')", DeprecationWarning,
+                stacklevel=3)
+            object.__setattr__(
+                self, "index", "ivf" if self.use_ivf else "pq")
+            # clear the booleans so dataclasses.replace() on a shimmed
+            # config doesn't re-trip the either/or check above
+            object.__setattr__(self, "use_ivf", None)
+            object.__setattr__(self, "use_pq", None)
+        if self.index not in INDEX_KINDS:
+            raise ValueError(
+                f"unknown index kind {self.index!r}; expected one of "
+                f"{INDEX_KINDS}")
+        if self.pq_backend not in _ADC_BACKENDS:
+            raise ValueError(
+                f"unknown pq_backend {self.pq_backend!r}; expected one of "
+                f"{_ADC_BACKENDS}")
 
 
 class SearchEngine:
@@ -63,14 +111,19 @@ class SearchEngine:
         else:
             self.reducer = None
             self.reduced = self.corpus
-        self.index: Optional[IVFIndex] = None
-        self.pq = None
-        if config.use_ivf:
-            self.index = build_ivf(
+        self.ivf: Optional[IVFIndex] = None
+        self.pq: Optional[PQIndex] = None
+        self.ivfpq: Optional[IVFPQIndex] = None
+        if config.index == "ivf":
+            self.ivf = build_ivf(
                 jax.random.fold_in(key, 1), self.reduced, config.nlist)
-        elif config.use_pq:
+        elif config.index == "pq":
             self.pq = build_pq(jax.random.fold_in(key, 2), self.reduced,
                                config.pq_subspaces, config.pq_centroids)
+        elif config.index == "ivfpq":
+            self.ivfpq = build_ivfpq(
+                jax.random.fold_in(key, 3), self.reduced, config.nlist,
+                config.pq_subspaces, config.pq_centroids)
 
     def search(self, queries: jax.Array, k: int):
         """Returns (dists (Q,k), ids (Q,k)); distances in the original space
@@ -78,12 +131,20 @@ class SearchEngine:
         cfg = self.config
         queries = jnp.asarray(queries, jnp.float32)
         qr = self.reducer(queries) if self.reducer is not None else queries
-        approximate = self.reducer is not None or self.pq is not None
+        # lossy scoring (reduction and/or PQ codes) -> over-retrieve + re-rank
+        approximate = (self.reducer is not None
+                       or cfg.index in ("pq", "ivfpq"))
         n_cand = max(k, cfg.rerank if approximate else k)
-        if self.index is not None:
-            _, cand = ivf_search(self.index, qr, n_cand, cfg.nprobe)
-        elif self.pq is not None:
-            _, cand = pq_search(self.pq, qr, n_cand)
+        if cfg.index == "ivf":
+            _, cand = ivf_search(self.ivf, qr, n_cand, cfg.nprobe)
+        elif cfg.index == "pq":
+            _, cand = pq_search(self.pq, qr, n_cand,
+                                backend=cfg.pq_backend,
+                                interpret=cfg.pq_interpret)
+        elif cfg.index == "ivfpq":
+            _, cand = ivfpq_search(self.ivfpq, qr, n_cand, cfg.nprobe,
+                                   backend=cfg.pq_backend,
+                                   interpret=cfg.pq_interpret)
         else:
             _, cand = knn_search(qr, self.reduced, n_cand)
         return _exact_rerank(queries, self.corpus, cand, k)
@@ -91,8 +152,10 @@ class SearchEngine:
 
 @functools.partial(jax.jit, static_argnames=("k",))
 def _exact_rerank(queries, corpus, cand, k):
-    cv = corpus[cand]                                    # (Q, C, n)
+    cv = corpus[jnp.maximum(cand, 0)]                    # (Q, C, n)
     d2 = jnp.sum((cv - queries[:, None, :]) ** 2, axis=-1)
+    # -1 pads (under-filled probes) must never displace real candidates
+    d2 = jnp.where(cand >= 0, d2, jnp.inf)
     neg, sel = jax.lax.top_k(-d2, k)
     ids = jnp.take_along_axis(cand, sel, axis=1)
     return jnp.sqrt(jnp.maximum(-neg, 0.0)), ids

@@ -1,8 +1,86 @@
 """Shared fixtures. NOTE: no XLA_FLAGS here on purpose — smoke tests and
 benches must see 1 device; only launch/dryrun.py forces 512 (and the
-distributed tests spawn subprocesses with their own flags)."""
+distributed tests spawn subprocesses with their own flags).
+
+Also installs a fallback ``hypothesis`` stub when the real package is not
+available, so the property-test modules still collect and run: ``@given``
+degrades to a seeded deterministic sweep over a handful of examples drawn
+from the declared strategies (no shrinking, no database — just coverage).
+"""
+import random
+import sys
+import types
+
 import jax
 import pytest
+
+
+def _install_hypothesis_stub():
+    try:
+        import hypothesis  # noqa: F401  (the real thing wins if present)
+        return
+    except ImportError:
+        pass
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rnd):
+            return self._draw(rnd)
+
+    def integers(lo, hi):
+        return _Strategy(lambda r: r.randint(lo, hi))
+
+    def floats(lo, hi, **_kw):
+        return _Strategy(lambda r: r.uniform(lo, hi))
+
+    def sampled_from(seq):
+        items = list(seq)
+        return _Strategy(lambda r: r.choice(items))
+
+    def booleans():
+        return _Strategy(lambda r: bool(r.getrandbits(1)))
+
+    _DEFAULT_EXAMPLES = 5
+
+    def given(*strats):
+        def deco(fn):
+            def wrapper():
+                rnd = random.Random(0)
+                for _ in range(min(wrapper._max_examples, 10)):
+                    fn(*(s.example(rnd) for s in strats))
+            wrapper.__name__ = fn.__name__
+            wrapper.__qualname__ = getattr(fn, "__qualname__", fn.__name__)
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            wrapper._max_examples = _DEFAULT_EXAMPLES
+            wrapper.pytestmark = list(getattr(fn, "pytestmark", []))
+            return wrapper
+        return deco
+
+    def settings(max_examples=_DEFAULT_EXAMPLES, **_kw):
+        def deco(fn):
+            if hasattr(fn, "_max_examples"):
+                fn._max_examples = max_examples
+            return fn
+        return deco
+
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    strategies = types.ModuleType("hypothesis.strategies")
+    strategies.integers = integers
+    strategies.floats = floats
+    strategies.sampled_from = sampled_from
+    strategies.booleans = booleans
+    mod.strategies = strategies
+    mod.__stub__ = True
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = strategies
+
+
+_install_hypothesis_stub()
 
 
 @pytest.fixture(scope="session")

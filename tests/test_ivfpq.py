@@ -1,0 +1,208 @@
+"""IVF-PQ residual index tests: build invariants, residual-coding recall
+advantage over plain PQ, backend agreement, the ServeConfig index spec, and
+the engine end-to-end path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.synthetic import make_clustered
+from repro.search import (SearchEngine, ServeConfig, build_ivfpq, build_pq,
+                          ivfpq_search, knn_search, pq_search)
+from repro.search.knn import recall_at_k
+
+
+def _corpus(n=2000, nq=64, d=64, seed=0):
+    return make_clustered(jax.random.key(seed), n, nq, d, n_clusters=24,
+                          spread=0.35, center_scale=1.5)
+
+
+def test_build_layout_invariants():
+    x, _ = _corpus(n=500, d=32)
+    idx = build_ivfpq(jax.random.key(1), x, nlist=8, m_subspaces=4,
+                      n_centroids=32)
+    nlist, max_cell = idx.lists.shape
+    assert nlist == 8
+    ids = np.asarray(idx.lists)
+    valid = ids[ids >= 0]
+    # every vector appears exactly once across the posting lists
+    np.testing.assert_array_equal(np.sort(valid), np.arange(x.shape[0]))
+    assert idx.codes.shape == (x.shape[0], 4)
+    assert idx.bias.shape == (x.shape[0],)
+    assert int(idx.codes.min()) >= 0 and int(idx.codes.max()) < 32
+
+
+def test_full_probe_matches_reconstruction_distance():
+    """With every cell probed, ivfpq distances must equal the exact L2
+    distance to the PQ reconstruction (centroid + decoded residual) — the
+    decomposition in ivfpq.py is exact, not an approximation."""
+    x, q = _corpus(n=400, nq=16, d=32)
+    idx = build_ivfpq(jax.random.key(1), x, nlist=4, m_subspaces=4,
+                      n_centroids=32)
+    d_found, ids = ivfpq_search(idx, q, 5, nprobe=4)
+    # reconstruct the corpus: assigned centroid + decoded residual
+    cent, lists = np.asarray(idx.centroids), np.asarray(idx.lists)
+    cell_of = np.empty(x.shape[0], np.int64)
+    for c in range(lists.shape[0]):
+        members = lists[c][lists[c] >= 0]
+        cell_of[members] = c
+    cbs, codes = np.asarray(idx.codebooks), np.asarray(idx.codes)
+    m, _, dsub = cbs.shape
+    recon = cent[cell_of] + np.concatenate(
+        [cbs[j][codes[:, j]] for j in range(m)], axis=1)
+    d_exact = np.linalg.norm(
+        recon[np.asarray(ids)] - np.asarray(q)[:, None, :], axis=-1)
+    np.testing.assert_allclose(np.asarray(d_found), d_exact, atol=1e-3)
+
+
+def test_ivfpq_recall_at_least_pq_at_equal_budget():
+    """Residual coding spends the same code bytes on much smaller vectors,
+    so full-probe IVF-PQ recall must be >= plain PQ recall."""
+    x, q = _corpus()
+    _, truth = knn_search(q, x, 10)
+    m, kc = 8, 64
+    ivfpq = build_ivfpq(jax.random.key(1), x, nlist=16, m_subspaces=m,
+                        n_centroids=kc)
+    pq = build_pq(jax.random.key(1), x, m_subspaces=m, n_centroids=kc)
+    _, found_i = ivfpq_search(ivfpq, q, 10, nprobe=16)
+    _, found_p = pq_search(pq, q, 10)
+    rec_i = float(recall_at_k(found_i, truth))
+    rec_p = float(recall_at_k(found_p, truth))
+    assert rec_i >= rec_p, (rec_i, rec_p)
+
+
+def test_partial_probe_reasonable():
+    x, q = _corpus()
+    _, truth = knn_search(q, x, 10)
+    idx = build_ivfpq(jax.random.key(1), x, nlist=16, m_subspaces=8,
+                      n_centroids=64)
+    _, full = ivfpq_search(idx, q, 10, nprobe=16)
+    _, part = ivfpq_search(idx, q, 10, nprobe=4)
+    rec_full = float(recall_at_k(full, truth))
+    rec_part = float(recall_at_k(part, truth))
+    assert rec_part > 0.5 * rec_full, (rec_part, rec_full)
+
+
+def test_backend_kernel_matches_jnp():
+    x, q = _corpus(n=800, nq=32)
+    idx = build_ivfpq(jax.random.key(1), x, nlist=8, m_subspaces=8,
+                      n_centroids=64)
+    d_j, _ = ivfpq_search(idx, q, 10, nprobe=4, backend="jnp")
+    d_k, _ = ivfpq_search(idx, q, 10, nprobe=4, backend="kernel")
+    np.testing.assert_allclose(np.asarray(d_k), np.asarray(d_j), atol=1e-4)
+
+
+def test_engine_ivfpq_end_to_end_recall():
+    """reduce -> coarse-probe -> residual ADC -> exact re-rank >= 0.9."""
+    x, q = _corpus(n=4000, nq=64, d=64, seed=7)
+    _, truth = knn_search(q, x, 10)
+    eng = SearchEngine(x, ServeConfig(
+        target_dim=None, rerank=64, index="ivfpq", nlist=32, nprobe=16,
+        pq_subspaces=8, pq_centroids=128))
+    _, found = eng.search(q, 10)
+    rec = float(recall_at_k(found, truth))
+    assert rec >= 0.9, rec
+
+
+def test_engine_ivfpq_kernel_backend():
+    x, q = _corpus(n=1000, nq=32)
+    _, truth = knn_search(q, x, 10)
+    eng = SearchEngine(x, ServeConfig(
+        target_dim=None, rerank=48, index="ivfpq", nlist=16, nprobe=8,
+        pq_subspaces=8, pq_centroids=64, pq_backend="kernel"))
+    _, found = eng.search(q, 10)
+    assert float(recall_at_k(found, truth)) > 0.7
+
+
+# --- ServeConfig index spec ------------------------------------------------
+
+def test_serveconfig_rejects_unknown_index():
+    with pytest.raises(ValueError, match="index kind"):
+        ServeConfig(index="hnsw")
+    with pytest.raises(ValueError, match="pq_backend"):
+        ServeConfig(pq_backend="triton")
+
+
+def test_serveconfig_conflicting_booleans_raise():
+    with pytest.raises(ValueError, match="ivfpq"):
+        ServeConfig(use_ivf=True, use_pq=True)
+
+
+def test_serveconfig_boolean_shim_maps_and_warns():
+    with pytest.warns(DeprecationWarning):
+        cfg = ServeConfig(use_ivf=True)
+    assert cfg.index == "ivf"
+    with pytest.warns(DeprecationWarning):
+        cfg = ServeConfig(use_pq=True)
+    assert cfg.index == "pq"
+    # explicit False is not a selection
+    assert ServeConfig(use_ivf=False, use_pq=False).index == "flat"
+
+
+def test_serveconfig_boolean_plus_index_rejected():
+    with pytest.raises(ValueError, match="not both"):
+        ServeConfig(index="ivf", use_pq=True)
+
+
+def test_serveconfig_shimmed_config_survives_replace():
+    import dataclasses
+    with pytest.warns(DeprecationWarning):
+        cfg = ServeConfig(use_ivf=True)
+    cfg2 = dataclasses.replace(cfg, nprobe=16)      # must not re-trip shim
+    assert cfg2.index == "ivf" and cfg2.nprobe == 16
+
+
+# --- degenerate probe budgets -----------------------------------------------
+
+def test_small_probe_budget_pads_instead_of_crashing():
+    """nprobe*max_cell < k must yield -1/inf padding, not a trace error."""
+    x = jax.random.normal(jax.random.key(0), (24, 16))
+    idx = build_ivfpq(jax.random.key(1), x, nlist=8, m_subspaces=4,
+                      n_centroids=16)
+    k = idx.lists.shape[1] + 5                      # k > one cell's capacity
+    d, i = ivfpq_search(idx, x[:3], k, nprobe=1)
+    assert d.shape == (3, k) and i.shape == (3, k)
+    pad = np.asarray(i) < 0
+    assert np.isinf(np.asarray(d)[pad]).all()       # pads carry inf distance
+
+
+def test_kernel_backend_unfilled_slots_stay_minus_one():
+    """When finite candidates < k, the kernel's sel=-1 slots must surface as
+    id -1 (like the jnp backend), not wrap-around duplicates of real ids."""
+    x = jax.random.normal(jax.random.key(5), (24, 16))
+    idx = build_ivfpq(jax.random.key(6), x, nlist=8, m_subspaces=4,
+                      n_centroids=16)
+    k = idx.lists.shape[1] + 5
+    d_j, i_j = ivfpq_search(idx, x[:3], k, nprobe=1, backend="jnp")
+    d_k, i_k = ivfpq_search(idx, x[:3], k, nprobe=1, backend="kernel")
+    i_j, i_k = np.asarray(i_j), np.asarray(i_k)
+    np.testing.assert_array_equal(i_j < 0, i_k < 0)
+    for row_j, row_k in zip(i_j, i_k):
+        np.testing.assert_array_equal(np.sort(row_j[row_j >= 0]),
+                                      np.sort(row_k[row_k >= 0]))
+        real = row_k[row_k >= 0]
+        assert len(set(real.tolist())) == len(real)      # no duplicates
+
+
+def test_ivf_small_probe_budget_pads_instead_of_crashing():
+    from repro.search import build_ivf, ivf_search
+    x = jax.random.normal(jax.random.key(0), (24, 16))
+    idx = build_ivf(jax.random.key(1), x, nlist=8)
+    k = idx.lists.shape[1] + 5
+    d, i = ivf_search(idx, x[:3], k, nprobe=1)
+    assert d.shape == (3, k)
+    assert np.isinf(np.asarray(d)[np.asarray(i) < 0]).all()
+
+
+def test_rerank_never_promotes_pad_ids():
+    """Under-filled probes: -1 pads must not displace real candidates in the
+    engine's exact re-rank (they used to negative-index corpus[-1])."""
+    x = jax.random.normal(jax.random.key(2), (64, 16))
+    eng = SearchEngine(x, ServeConfig(index="ivfpq", nlist=16, nprobe=1,
+                                      pq_subspaces=4, pq_centroids=16,
+                                      rerank=4))
+    d, ids = eng.search(x[:8], 3)
+    ids, d = np.asarray(ids), np.asarray(d)
+    # any pad that survives must rank strictly after every real candidate
+    assert (np.isinf(d[ids < 0])).all()
+    assert np.isfinite(d[ids >= 0]).all()
