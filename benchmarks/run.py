@@ -8,9 +8,17 @@ Prints ``name,us_per_call,derived`` CSV rows. Fast subset by default
   fig3_ablation.py   — Fig.3 single-parameter ablations
   table3_scaling.py  — Table 3 runtime scaling vs N
   roofline.py        — §Roofline terms per dry-run cell
+
+``--json [PATH]`` additionally writes ``BENCH_serve.json`` — the serving
+perf trajectory (p50/p95 per query batch, QPS, recall@10 per index kind x
+lut_dtype, plus the fused-vs-staged pipeline speedup); the CSV output is
+unchanged. ``--fast`` runs only the serving + kernel subset (CI budget).
 """
 from __future__ import annotations
 
+import argparse
+import functools
+import json
 import os
 import time
 
@@ -26,6 +34,23 @@ def _timeit(f, *args, reps=5, **kw):
         out = f(*args, **kw)
     jax.block_until_ready(out)
     return (time.time() - t0) / reps * 1e6          # us
+
+
+def _timeit_dist(f, *args, reps=9, **kw):
+    """Per-call wall times (us), warmed; for percentile reporting."""
+    out = f(*args, **kw)
+    jax.block_until_ready(out)
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = f(*args, **kw)
+        jax.block_until_ready(out)
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return sorted(ts)
+
+
+def _pctl(ts, p):
+    return ts[min(len(ts) - 1, int(round(p / 100 * (len(ts) - 1))))]
 
 
 def bench_objective_backends(rows):
@@ -138,6 +163,130 @@ def bench_ivfpq(rows):
                          f"speedup_vs_flat={us_flat / us:.1f}x"))
 
 
+# --- one-program serving trajectory (BENCH_serve.json) -----------------------
+
+@functools.partial(jax.jit, static_argnames=("k", "nprobe"))
+def _prepr_ivfpq_search(cent, lists, cbs, codes, bias, q, k, nprobe):
+    """The pre-PR-2 per-stage scan, pinned: einsum tables + scattered
+    ``codes[cid]``/``bias[cid]`` gathers + per-subspace lookup loop. Kept
+    verbatim so BENCH_serve.json's ``staged_vs_fused`` rows keep measuring
+    against the same baseline as the repo evolves."""
+    nq = q.shape[0]
+    m, kc, dsub = cbs.shape
+    cd2 = (jnp.sum(q * q, 1)[:, None] + jnp.sum(cent * cent, 1)[None, :]
+           - 2.0 * q @ cent.T)
+    _, probe = jax.lax.top_k(-cd2, nprobe)
+    cd2p = jnp.take_along_axis(cd2, probe, axis=1)
+    cand = lists[probe].reshape(nq, -1)
+    valid = cand >= 0
+    cid = jnp.maximum(cand, 0)
+    qs = q.reshape(nq, m, dsub)
+    tables = (jnp.sum(cbs ** 2, -1)[None]
+              - 2.0 * jnp.einsum("qmd,mkd->qmk", qs, cbs))
+    base = jnp.repeat(cd2p, lists.shape[1], axis=1)
+    base = jnp.where(valid, base + bias[cid], jnp.inf)
+    ccodes = codes[cid]
+    d2 = base
+    for j in range(m):
+        d2 = d2 + jnp.take_along_axis(tables[:, j, :], ccodes[:, :, j],
+                                      axis=1)
+    neg, sel = jax.lax.top_k(-d2, k)
+    ids = jnp.where(sel >= 0,
+                    jnp.take_along_axis(cand, jnp.maximum(sel, 0), axis=1),
+                    -1)
+    return jnp.sqrt(jnp.maximum(-neg, 0.0)), ids
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _prepr_rerank(queries, corpus, cand, k):
+    cv = corpus[jnp.maximum(cand, 0)]
+    d2 = jnp.sum((cv - queries[:, None, :]) ** 2, axis=-1)
+    d2 = jnp.where(cand >= 0, d2, jnp.inf)
+    neg, sel = jax.lax.top_k(-d2, k)
+    return (jnp.sqrt(jnp.maximum(-neg, 0.0)),
+            jnp.take_along_axis(cand, sel, axis=1))
+
+
+def bench_serve_fused(rows, json_doc=None, fast=False):
+    """The serving perf trajectory: p50/p95 us per query batch, QPS and
+    recall@10 per index kind x lut_dtype on the 16k x 128 grid, plus the
+    one-program engine vs the pre-PR per-stage pipeline (the PR-2
+    acceptance row: >= 2x QPS at recall@10 >= 0.9)."""
+    import dataclasses
+    from repro.search import SearchEngine, ServeConfig, knn_search
+    from repro.search.knn import recall_at_k
+    n, dim, nq, k = 16384, 128, 256, 10
+    key = jax.random.key(0)
+    centers = jax.random.normal(key, (64, dim)) * 1.5
+    lab = jax.random.randint(jax.random.fold_in(key, 1), (n,), 0, 64)
+    corpus = centers[lab] + 0.4 * jax.random.normal(
+        jax.random.fold_in(key, 2), (n, dim))
+    queries = corpus[:nq] + 0.05 * jax.random.normal(
+        jax.random.fold_in(key, 3), (nq, dim))
+    _, truth = knn_search(queries, corpus, k)
+    base_cfg = dict(target_dim=None, rerank=64, nlist=256, nprobe=8,
+                    pq_subspaces=16, pq_centroids=256)
+    grid = [("ivfpq", ("f32", "bf16", "int8"))]
+    if not fast:
+        grid = [("flat", ("f32",)), ("ivf", ("f32",)),
+                ("pq", ("f32", "bf16", "int8"))] + grid
+    reps = 5 if fast else 9
+    doc_rows = []
+    for index, luts in grid:
+        eng = SearchEngine(corpus, ServeConfig(index=index, **base_cfg))
+        for lut in luts:
+            eng.config = dataclasses.replace(eng.config, lut_dtype=lut)
+            ts = _timeit_dist(eng.search, queries, k, reps=reps)
+            p50, p95 = _pctl(ts, 50), _pctl(ts, 95)
+            _, found = eng.search(queries, k)
+            rec = float(recall_at_k(found, truth))
+            qps = nq / (p50 * 1e-6)
+            rows.append((f"serve_fused_{index}_lut_{lut}", p50,
+                         f"recall@10={rec:.4f} p95_us={p95:.0f} "
+                         f"qps={qps:.0f}"))
+            doc_rows.append(dict(index=index, lut_dtype=lut, batch=nq,
+                                 p50_us=round(p50, 1), p95_us=round(p95, 1),
+                                 us_per_query_p50=round(p50 / nq, 2),
+                                 qps=round(qps), recall_at_10=round(rec, 4)))
+        if index == "ivfpq":
+            # staged baseline: pre-PR pipeline = separate scan + re-rank
+            # programs over the same index arrays
+            idx = eng.state.ivfpq
+            eng.config = dataclasses.replace(eng.config, lut_dtype="f32")
+
+            def staged(q, k):
+                _, cand = _prepr_ivfpq_search(
+                    idx.centroids, idx.lists, idx.codebooks, idx.codes,
+                    idx.bias, q, base_cfg["rerank"], base_cfg["nprobe"])
+                return _prepr_rerank(q, eng.state.corpus, cand, k)
+
+            staged_rows = []
+            for b in (64, nq):
+                ts_s = _timeit_dist(staged, queries[:b], k, reps=reps)
+                ts_f = _timeit_dist(eng.search, queries[:b], k, reps=reps)
+                p50_s, p50_f = _pctl(ts_s, 50), _pctl(ts_f, 50)
+                _, f_s = staged(queries[:b], k)
+                _, f_f = eng.search(queries[:b], k)
+                rec_s = float(recall_at_k(f_s, truth[:b]))
+                rec_f = float(recall_at_k(f_f, truth[:b]))
+                speedup = p50_s / p50_f
+                rows.append((f"serve_staged_vs_fused_ivfpq_b{b}", p50_f,
+                             f"staged_us={p50_s:.0f} speedup={speedup:.2f}x "
+                             f"recall_fused={rec_f:.4f}"))
+                staged_rows.append(dict(
+                    index="ivfpq", batch=b, staged_p50_us=round(p50_s, 1),
+                    fused_p50_us=round(p50_f, 1),
+                    speedup=round(speedup, 2),
+                    staged_recall_at_10=round(rec_s, 4),
+                    fused_recall_at_10=round(rec_f, 4)))
+            if json_doc is not None:
+                json_doc["staged_vs_fused"] = staged_rows
+    if json_doc is not None:
+        json_doc["rows"] = doc_rows
+        json_doc["config"] = dict(corpus=n, dim=dim, batch=nq, k=k,
+                                  **base_cfg)
+
+
 def roofline_summary(rows):
     art = "benchmarks/artifacts/dryrun"
     if not os.path.isdir(art):
@@ -157,18 +306,46 @@ def roofline_summary(rows):
                      0.0, f"frac={best['roofline_frac']:.3f}"))
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", nargs="?", const="BENCH_serve.json",
+                    default=None, metavar="PATH",
+                    help="also write the serving trajectory JSON "
+                         "(default path: BENCH_serve.json)")
+    ap.add_argument("--fast", action="store_true",
+                    help="CI subset: kernels + the fused serving bench only")
+    args = ap.parse_args(argv)
     rows = []
-    for bench in (bench_objective_backends, bench_kernels, bench_fit,
-                  bench_serving, bench_ivfpq, bench_accuracy,
-                  roofline_summary):
+    json_doc = {"schema": "qpad.bench_serve.v1",
+                "created_unix": round(time.time())} if args.json else None
+    benches = ((bench_kernels,) if args.fast
+               else (bench_objective_backends, bench_kernels, bench_fit,
+                     bench_serving, bench_ivfpq, bench_accuracy,
+                     roofline_summary))
+    for bench in benches:
         try:
             bench(rows)
         except Exception as e:                       # keep the harness going
             rows.append((bench.__name__, -1.0, f"ERROR:{type(e).__name__}"))
+    serve_err = None
+    try:
+        bench_serve_fused(rows, json_doc=json_doc, fast=args.fast)
+    except Exception as e:
+        serve_err = e
+        rows.append(("bench_serve_fused", -1.0, f"ERROR:{type(e).__name__}"))
     print("\nname,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(json_doc, f, indent=2)
+        print(f"\nwrote {args.json}")
+        if serve_err is not None:
+            # the serving trajectory is the CI regression gate: a truncated
+            # BENCH_serve.json must fail the job, not upload silently
+            raise SystemExit(
+                f"bench_serve_fused failed ({serve_err!r}); "
+                f"{args.json} is incomplete")
 
 
 if __name__ == "__main__":

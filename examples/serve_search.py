@@ -74,14 +74,28 @@ def main():
     jax.block_until_ready(ids_pq)
     t_ivfpq = time.time() - t0
 
+    # same index, int8-quantized ADC lookup tables (4x LUT memory cut);
+    # lut_dtype is a query-time knob, so the engine is reused as-is
+    import dataclasses
+    eng_pq.config = dataclasses.replace(eng_pq.config, lut_dtype="int8")
+    d, ids_pq8 = eng_pq.search(queries, args.k)   # warm up / compile
+    jax.block_until_ready(ids_pq8)
+    t0 = time.time()
+    d, ids_pq8 = eng_pq.search(queries, args.k)
+    jax.block_until_ready(ids_pq8)
+    t_ivfpq8 = time.time() - t0
+
     rec = float(recall_at_k(ids, truth))
     rec_pq = float(recall_at_k(ids_pq, truth))
+    rec_pq8 = float(recall_at_k(ids_pq8, truth))
     print(f"\nfull-dim exact : {t_full*1e3:7.1f} ms/batch  recall@{args.k}="
           f"{float(recall_at_k(ids_full, truth)):.4f}")
     print(f"MPAD {args.dim}->{args.target_dim} + IVF + rerank:"
           f" {t_mpad*1e3:7.1f} ms/batch  recall@{args.k}={rec:.4f}")
     print(f"MPAD {args.dim}->{args.target_dim} + IVF-PQ + rerank:"
           f" {t_ivfpq*1e3:7.1f} ms/batch  recall@{args.k}={rec_pq:.4f}")
+    print(f"MPAD {args.dim}->{args.target_dim} + IVF-PQ int8 LUT + rerank:"
+          f" {t_ivfpq8*1e3:7.1f} ms/batch  recall@{args.k}={rec_pq8:.4f}")
     m_sub = args.target_dim // 2
     print(f"bytes/vector: {args.dim*4} -> {args.target_dim*4} (reduced) -> "
           f"{m_sub} logical ivfpq code bytes "

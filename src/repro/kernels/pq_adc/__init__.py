@@ -1,4 +1,5 @@
 from .kernel import pq_adc_gather_topk_pallas, pq_adc_topk_pallas
+from .lut import LUT_DTYPES, dequantize_lut, lut_error_bound, quantize_lut
 from .ops import pq_adc_gather_topk, pq_adc_topk
 from .ref import (pq_adc_gather_scores_ref, pq_adc_gather_topk_ref,
                   pq_adc_scores_ref, pq_adc_topk_ref)
@@ -8,4 +9,5 @@ __all__ = [
     "pq_adc_topk", "pq_adc_gather_topk",
     "pq_adc_scores_ref", "pq_adc_topk_ref",
     "pq_adc_gather_scores_ref", "pq_adc_gather_topk_ref",
+    "LUT_DTYPES", "quantize_lut", "dequantize_lut", "lut_error_bound",
 ]

@@ -17,17 +17,27 @@ as ``knn_topk`` (no in-kernel sort on Mosaic).
 Grid (Q/BQ, N/BN), database axis fastest-varying; the top-k block for each
 query tile is revisited and updated across database tiles.
 
+Quantized LUTs (``lut_dtype``, see ``lut.py``): tables enter the kernel in
+f32, bf16, or int8. bf16 contracts on the bf16 MXU path with f32
+accumulation; int8 contracts int8 x int8 -> int32 and one per-query f32
+``scale`` multiply (an extra (BQ, 1) input block) restores the distance
+unit after the M subspaces accumulate — the integer partial sums are exact,
+so the only error is the table rounding itself. VMEM for the tables drops
+2x / 4x accordingly.
+
 Two entry points share the merge:
 
 * ``pq_adc_topk_pallas``       — shared (N, M) codes, plain-PQ scan;
 * ``pq_adc_gather_topk_pallas``— per-query (C, M) candidate codes plus a
   per-candidate additive ``base`` (the IVF-PQ residual decomposition). The
   lookup here is per-query, so the one-hot contraction runs on the VPU
-  ((BQ, BN, K) masked sum) — block defaults are smaller to bound VMEM.
+  ((BQ, BN, K) masked sum — int32 select/add for int8) — block defaults are
+  smaller to bound VMEM.
 
 Layout notes: codes enter the shared kernel transposed (M, N) so a subspace
 row slice is a native (1, BN) lane vector; VMEM at defaults
-(BQ=128, BN=512, M=16, K=256): tables 2 MiB + onehot 0.5 MiB + d2 0.25 MiB.
+(BQ=128, BN=512, M=16, K=256): tables 2 MiB f32 / 1 MiB bf16 / 0.5 MiB int8
++ onehot 0.5 MiB + d2 0.25 MiB.
 """
 from __future__ import annotations
 
@@ -36,6 +46,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from .lut import quantize_lut
 
 _INF = float("inf")
 _BIGI = 2**31 - 1
@@ -61,18 +73,31 @@ def _merge_topk(work, gj, bd, bi, k):
     return bd, bi
 
 
-def _adc_kernel(n_total, k, t_ref, c_ref, best_d_ref, best_i_ref):
+def _adc_kernel(n_total, k, lut_dtype, t_ref, *refs):
+    if lut_dtype == "int8":
+        s_ref, c_ref, best_d_ref, best_i_ref = refs
+    else:
+        (c_ref, best_d_ref, best_i_ref), s_ref = refs, None
     j = pl.program_id(1)
-    tables = t_ref[...].astype(jnp.float32)                  # (BQ, M, K)
+    tables = t_ref[...]                                      # (BQ, M, K)
     bq, m, kc = tables.shape
     bn = c_ref.shape[1]
     cent = jax.lax.broadcasted_iota(jnp.int32, (kc, bn), 0)
-    d2 = jnp.zeros((bq, bn), jnp.float32)
-    for sub in range(m):                                     # M static: unroll
-        onehot = (c_ref[sub:sub + 1, :] == cent).astype(jnp.float32)
-        d2 = d2 + jax.lax.dot_general(
-            tables[:, sub, :], onehot, (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32)              # MXU (BQ,K)@(K,BN)
+    if lut_dtype == "int8":
+        acc = jnp.zeros((bq, bn), jnp.int32)
+        for sub in range(m):                                 # M static: unroll
+            onehot = (c_ref[sub:sub + 1, :] == cent).astype(jnp.int8)
+            acc = acc + jax.lax.dot_general(
+                tables[:, sub, :], onehot, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.int32)            # int8 MXU path
+        d2 = acc.astype(jnp.float32) * s_ref[...]            # (BQ,BN)*(BQ,1)
+    else:
+        d2 = jnp.zeros((bq, bn), jnp.float32)
+        for sub in range(m):                                 # M static: unroll
+            onehot = (c_ref[sub:sub + 1, :] == cent).astype(tables.dtype)
+            d2 = d2 + jax.lax.dot_general(
+                tables[:, sub, :], onehot, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)          # MXU (BQ,K)@(K,BN)
     gj = j * bn + jax.lax.broadcasted_iota(jnp.int32, (bq, bn), 1)
     work = jnp.where(gj < n_total, d2, _INF)
 
@@ -86,30 +111,38 @@ def _adc_kernel(n_total, k, t_ref, c_ref, best_d_ref, best_i_ref):
     best_i_ref[...] = bi
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("k", "block_q", "block_n", "interpret"))
+@functools.partial(jax.jit, static_argnames=("k", "block_q", "block_n",
+                                             "interpret", "lut_dtype"))
 def pq_adc_topk_pallas(tables: jax.Array, codes: jax.Array, k: int,
                        block_q: int = 128, block_n: int = 512,
-                       interpret: bool = True):
+                       interpret: bool = True, lut_dtype: str = "f32"):
     """Fused ADC scan over a shared code matrix.
 
-    tables (Q, M, K) f32; codes (N, M) int. Returns (d2 (Q, k) ascending,
-    idx (Q, k) int32 ids into the code matrix).
+    tables (Q, M, K) f32 (quantized internally per ``lut_dtype``);
+    codes (N, M) int. Returns (d2 (Q, k) ascending, idx (Q, k) int32 ids
+    into the code matrix).
     """
     nq, m, kc = tables.shape
     n = codes.shape[0]
+    qt, scale = quantize_lut(tables, lut_dtype)
     pad_q = (-nq) % block_q
     pad_n = (-n) % block_n
-    tp = jnp.pad(tables, ((0, pad_q), (0, 0), (0, 0))) if pad_q else tables
+    tp = jnp.pad(qt, ((0, pad_q), (0, 0), (0, 0))) if pad_q else qt
     cp = jnp.pad(codes, ((0, pad_n), (0, 0))) if pad_n else codes
     grid = (tp.shape[0] // block_q, cp.shape[0] // block_n)
+    inputs = [tp, cp.T.astype(jnp.int32)]
+    in_specs = [
+        pl.BlockSpec((block_q, m, kc), lambda i, j: (i, 0, 0)),
+        pl.BlockSpec((m, block_n), lambda i, j: (0, j)),
+    ]
+    if lut_dtype == "int8":
+        sp = jnp.pad(scale, (0, pad_q)) if pad_q else scale
+        inputs.insert(1, sp[:, None].astype(jnp.float32))
+        in_specs.insert(1, pl.BlockSpec((block_q, 1), lambda i, j: (i, 0)))
     bd, bi = pl.pallas_call(
-        functools.partial(_adc_kernel, n, k),
+        functools.partial(_adc_kernel, n, k, lut_dtype),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_q, m, kc), lambda i, j: (i, 0, 0)),
-            pl.BlockSpec((m, block_n), lambda i, j: (0, j)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((block_q, k), lambda i, j: (i, 0)),
             pl.BlockSpec((block_q, k), lambda i, j: (i, 0)),
@@ -119,24 +152,39 @@ def pq_adc_topk_pallas(tables: jax.Array, codes: jax.Array, k: int,
             jax.ShapeDtypeStruct((tp.shape[0], k), jnp.int32),
         ],
         interpret=interpret,
-    )(tp.astype(jnp.float32), cp.T.astype(jnp.int32))
+    )(*inputs)
     bd, bi = bd[:nq], bi[:nq]
     order = jnp.argsort(bd, axis=1)                          # ascending sort
     return (jnp.take_along_axis(bd, order, axis=1),
             jnp.take_along_axis(bi, order, axis=1))
 
 
-def _adc_gather_kernel(c_total, k, t_ref, c_ref, base_ref,
-                       best_d_ref, best_i_ref):
+def _adc_gather_kernel(c_total, k, lut_dtype, t_ref, *refs):
+    if lut_dtype == "int8":
+        s_ref, c_ref, base_ref, best_d_ref, best_i_ref = refs
+    else:
+        (c_ref, base_ref, best_d_ref, best_i_ref), s_ref = refs, None
     j = pl.program_id(1)
-    tables = t_ref[...].astype(jnp.float32)                  # (BQ, M, K)
+    tables = t_ref[...]                                      # (BQ, M, K)
     bq, m, kc = tables.shape
     bn = c_ref.shape[1]
-    d2 = base_ref[...].astype(jnp.float32)                   # (BQ, BN)
     cent = jax.lax.broadcasted_iota(jnp.int32, (bq, bn, kc), 2)
-    for sub in range(m):                                     # M static: unroll
-        onehot = (c_ref[:, :, sub][:, :, None] == cent).astype(jnp.float32)
-        d2 = d2 + jnp.sum(tables[:, sub, :][:, None, :] * onehot, axis=2)
+    if lut_dtype == "int8":
+        ti = tables.astype(jnp.int32)
+        acc = jnp.zeros((bq, bn), jnp.int32)
+        for sub in range(m):                                 # M static: unroll
+            hit = c_ref[:, :, sub][:, :, None] == cent
+            acc = acc + jnp.sum(
+                jnp.where(hit, ti[:, sub, :][:, None, :], 0), axis=2)
+        lut = acc.astype(jnp.float32) * s_ref[...]           # (BQ,BN)*(BQ,1)
+    else:
+        tf = tables.astype(jnp.float32)
+        lut = jnp.zeros((bq, bn), jnp.float32)
+        for sub in range(m):                                 # M static: unroll
+            onehot = (c_ref[:, :, sub][:, :, None] == cent
+                      ).astype(jnp.float32)
+            lut = lut + jnp.sum(tf[:, sub, :][:, None, :] * onehot, axis=2)
+    d2 = base_ref[...].astype(jnp.float32) + lut
     gj = j * bn + jax.lax.broadcasted_iota(jnp.int32, (bq, bn), 1)
     work = jnp.where(gj < c_total, d2, _INF)
 
@@ -150,34 +198,42 @@ def _adc_gather_kernel(c_total, k, t_ref, c_ref, base_ref,
     best_i_ref[...] = bi
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("k", "block_q", "block_n", "interpret"))
+@functools.partial(jax.jit, static_argnames=("k", "block_q", "block_n",
+                                             "interpret", "lut_dtype"))
 def pq_adc_gather_topk_pallas(tables: jax.Array, codes: jax.Array,
                               base: jax.Array, k: int,
                               block_q: int = 8, block_n: int = 256,
-                              interpret: bool = True):
+                              interpret: bool = True, lut_dtype: str = "f32"):
     """Fused ADC scan over per-query gathered candidate codes.
 
-    tables (Q, M, K) f32; codes (Q, C, M) int; base (Q, C) f32 additive term
-    (+inf masks padded candidates). Returns (d2 (Q, k) ascending, idx (Q, k)
+    tables (Q, M, K) f32 (quantized internally per ``lut_dtype``);
+    codes (Q, C, M) int; base (Q, C) f32 additive term (+inf masks padded
+    candidates; never quantized). Returns (d2 (Q, k) ascending, idx (Q, k)
     int32 candidate-slot ids in [0, C)).
     """
     nq, m, kc = tables.shape
     c = codes.shape[1]
+    qt, scale = quantize_lut(tables, lut_dtype)
     pad_q = (-nq) % block_q
     pad_c = (-c) % block_n
-    tp = jnp.pad(tables, ((0, pad_q), (0, 0), (0, 0))) if pad_q else tables
+    tp = jnp.pad(qt, ((0, pad_q), (0, 0), (0, 0))) if pad_q else qt
     cp = jnp.pad(codes, ((0, pad_q), (0, pad_c), (0, 0)))
     bp = jnp.pad(base, ((0, pad_q), (0, pad_c)), constant_values=_INF)
     grid = (tp.shape[0] // block_q, cp.shape[1] // block_n)
+    inputs = [tp, cp.astype(jnp.int32), bp.astype(jnp.float32)]
+    in_specs = [
+        pl.BlockSpec((block_q, m, kc), lambda i, j: (i, 0, 0)),
+        pl.BlockSpec((block_q, block_n, m), lambda i, j: (i, j, 0)),
+        pl.BlockSpec((block_q, block_n), lambda i, j: (i, j)),
+    ]
+    if lut_dtype == "int8":
+        sp = jnp.pad(scale, (0, pad_q)) if pad_q else scale
+        inputs.insert(1, sp[:, None].astype(jnp.float32))
+        in_specs.insert(1, pl.BlockSpec((block_q, 1), lambda i, j: (i, 0)))
     bd, bi = pl.pallas_call(
-        functools.partial(_adc_gather_kernel, c, k),
+        functools.partial(_adc_gather_kernel, c, k, lut_dtype),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_q, m, kc), lambda i, j: (i, 0, 0)),
-            pl.BlockSpec((block_q, block_n, m), lambda i, j: (i, j, 0)),
-            pl.BlockSpec((block_q, block_n), lambda i, j: (i, j)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((block_q, k), lambda i, j: (i, 0)),
             pl.BlockSpec((block_q, k), lambda i, j: (i, 0)),
@@ -187,7 +243,7 @@ def pq_adc_gather_topk_pallas(tables: jax.Array, codes: jax.Array,
             jax.ShapeDtypeStruct((tp.shape[0], k), jnp.int32),
         ],
         interpret=interpret,
-    )(tp.astype(jnp.float32), cp.astype(jnp.int32), bp.astype(jnp.float32))
+    )(*inputs)
     bd, bi = bd[:nq], bi[:nq]
     order = jnp.argsort(bd, axis=1)
     return (jnp.take_along_axis(bd, order, axis=1),

@@ -1,0 +1,85 @@
+"""Quantized ADC lookup tables: f32 -> bf16 / int8 per-query tables.
+
+The per-query distance tables (Q, M, K) are the only f32 state the fused
+ADC kernels keep resident in VMEM, so narrowing them cuts the kernel's
+working set 2x (bf16) or 4x (int8) and moves the one-hot contraction onto
+the low-precision MXU paths (bf16 x bf16 -> f32, int8 x int8 -> int32).
+
+int8 uses **per-query symmetric** quantization: one scale per query over
+its whole (M, K) table, ``scale = max|t| / 127``, so the integer partial
+sums accumulate exactly in int32 and a single f32 multiply at the end
+restores the distance unit. The absolute error per table entry is at most
+``scale / 2``, hence at most ``M * scale / 2`` per ADC distance — the bound
+asserted by the error tests in ``tests/test_pq_adc.py``.
+
+bf16 needs no scale (it is a rounding of the same dynamic range); the
+returned scale is 1 so both quantized formats share one calling convention.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["LUT_DTYPES", "center_lut", "quantize_lut", "dequantize_lut",
+           "lut_error_bound"]
+
+LUT_DTYPES = ("f32", "bf16", "int8")
+
+
+def center_lut(tables: jax.Array):
+    """Split tables into a zero-mean part plus a per-query constant.
+
+    Returns (tables - rowmean, const (Q,)) with ``const = sum_m rowmean`` —
+    the ADC sum of the centered tables plus ``const`` equals the original
+    sum exactly, but per-query ranking ignores ``const``, so quantizing only
+    the centered part roughly halves the dynamic range the int8/bf16 grid
+    has to cover. Callers keep ``const`` in f32 and add it after top-k.
+    """
+    rowmean = jnp.mean(tables, axis=-1)                   # (Q, M)
+    return tables - rowmean[..., None], jnp.sum(rowmean, axis=-1)
+
+_JNP_DTYPE = {"f32": jnp.float32, "bf16": jnp.bfloat16, "int8": jnp.int8}
+
+
+def quantize_lut(tables: jax.Array, lut_dtype: str):
+    """(Q, M, K) f32 tables -> (qtables, scale (Q,) f32).
+
+    ``qtables`` dtype follows ``lut_dtype``; ``scale`` is all-ones except
+    for int8 (per-query symmetric scale, strictly positive).
+    """
+    if lut_dtype not in LUT_DTYPES:
+        raise ValueError(
+            f"unknown lut_dtype {lut_dtype!r}; expected one of {LUT_DTYPES}")
+    tables = jnp.asarray(tables, jnp.float32)
+    ones = jnp.ones(tables.shape[:1], jnp.float32)
+    if lut_dtype == "f32":
+        return tables, ones
+    if lut_dtype == "bf16":
+        return tables.astype(jnp.bfloat16), ones
+    amax = jnp.max(jnp.abs(tables), axis=(1, 2))          # (Q,)
+    # floor well above the subnormal range: XLA flushes denormals to zero,
+    # and a zero scale would NaN the dequantized 0/0 tables
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.round(tables / scale[:, None, None])
+    return jnp.clip(q, -127, 127).astype(jnp.int8), scale
+
+
+def dequantize_lut(qtables: jax.Array, scale: jax.Array) -> jax.Array:
+    """Inverse of ``quantize_lut`` up to rounding: (Q, M, K) f32."""
+    return qtables.astype(jnp.float32) * scale[:, None, None]
+
+
+def lut_error_bound(tables: jax.Array, lut_dtype: str) -> jax.Array:
+    """Per-query upper bound on |quantized ADC score - f32 ADC score|.
+
+    int8: M * scale / 2 per summed table entry. bf16: relative rounding of
+    each entry (2^-8) summed over M. f32: zero.
+    """
+    tables = jnp.asarray(tables, jnp.float32)
+    m = tables.shape[1]
+    amax = jnp.max(jnp.abs(tables), axis=(1, 2))
+    if lut_dtype == "f32":
+        return jnp.zeros_like(amax)
+    if lut_dtype == "bf16":
+        return m * amax * 2.0 ** -8
+    return m * (jnp.maximum(amax, 1e-12) / 127.0) / 2.0

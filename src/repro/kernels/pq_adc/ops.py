@@ -9,24 +9,26 @@ import jax.numpy as jnp
 from .kernel import pq_adc_gather_topk_pallas, pq_adc_topk_pallas
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("k", "block_q", "block_n", "interpret"))
+@functools.partial(jax.jit, static_argnames=("k", "block_q", "block_n",
+                                             "interpret", "lut_dtype"))
 def pq_adc_topk(tables: jax.Array, codes: jax.Array, k: int, *,
                 block_q: int = 128, block_n: int = 512,
-                interpret: bool = True):
+                interpret: bool = True, lut_dtype: str = "f32"):
     """Top-k ADC over shared codes: (dists (Q,k), idx (Q,k)), sqrt'd."""
     d2, idx = pq_adc_topk_pallas(tables, codes, k, block_q=block_q,
-                                 block_n=block_n, interpret=interpret)
+                                 block_n=block_n, interpret=interpret,
+                                 lut_dtype=lut_dtype)
     return jnp.sqrt(jnp.maximum(d2, 0.0)), idx
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("k", "block_q", "block_n", "interpret"))
+@functools.partial(jax.jit, static_argnames=("k", "block_q", "block_n",
+                                             "interpret", "lut_dtype"))
 def pq_adc_gather_topk(tables: jax.Array, codes: jax.Array, base: jax.Array,
                        k: int, *, block_q: int = 8, block_n: int = 256,
-                       interpret: bool = True):
+                       interpret: bool = True, lut_dtype: str = "f32"):
     """Top-k ADC over per-query candidates: (dists (Q,k), slot idx (Q,k))."""
     d2, idx = pq_adc_gather_topk_pallas(tables, codes, base, k,
                                         block_q=block_q, block_n=block_n,
-                                        interpret=interpret)
+                                        interpret=interpret,
+                                        lut_dtype=lut_dtype)
     return jnp.sqrt(jnp.maximum(d2, 0.0)), idx

@@ -7,6 +7,12 @@ Two variants mirror the two kernel entry points:
 * gathered codes — per-query (C, M) candidate codes plus a per-candidate
   additive ``base`` term (the IVF-PQ residual decomposition: coarse distance
   + centroid/codeword cross term; see ``repro.search.ivfpq``).
+
+Every entry takes ``lut_dtype`` (see ``lut.py``): the oracle quantizes the
+f32 tables exactly as the kernels do, then scores with the **dequantized**
+f32 tables — so ref and kernel agree up to f32 summation order, and the
+quantization error itself is part of the spec (bounded by
+``lut_error_bound``).
 """
 from __future__ import annotations
 
@@ -15,15 +21,25 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from .lut import dequantize_lut, quantize_lut
+
 __all__ = ["pq_adc_scores_ref", "pq_adc_topk_ref",
            "pq_adc_gather_scores_ref", "pq_adc_gather_topk_ref"]
 
 
-def pq_adc_scores_ref(tables: jax.Array, codes: jax.Array) -> jax.Array:
+def _lut_tables(tables: jax.Array, lut_dtype: str) -> jax.Array:
+    if lut_dtype == "f32":
+        return jnp.asarray(tables, jnp.float32)
+    return dequantize_lut(*quantize_lut(tables, lut_dtype))
+
+
+def pq_adc_scores_ref(tables: jax.Array, codes: jax.Array,
+                      lut_dtype: str = "f32") -> jax.Array:
     """ADC distances, shared codes: out[q, n] = sum_m tables[q, m, codes[n, m]].
 
     tables (Q, M, K) f32; codes (N, M) int. Returns (Q, N) f32.
     """
+    tables = _lut_tables(tables, lut_dtype)
     m = tables.shape[1]
     d2 = jnp.zeros((tables.shape[0], codes.shape[0]), jnp.float32)
     for j in range(m):                       # M small (4-16): unrolled
@@ -31,34 +47,41 @@ def pq_adc_scores_ref(tables: jax.Array, codes: jax.Array) -> jax.Array:
     return d2
 
 
-@functools.partial(jax.jit, static_argnames=("k",))
-def pq_adc_topk_ref(tables: jax.Array, codes: jax.Array, k: int):
+@functools.partial(jax.jit, static_argnames=("k", "lut_dtype"))
+def pq_adc_topk_ref(tables: jax.Array, codes: jax.Array, k: int,
+                    lut_dtype: str = "f32"):
     """Returns (d2 (Q, k) ascending, idx (Q, k)) over the shared code matrix."""
-    d2 = pq_adc_scores_ref(tables, codes)
+    d2 = pq_adc_scores_ref(tables, codes, lut_dtype)
     neg, idx = jax.lax.top_k(-d2, k)
     return -neg, idx
 
 
 def pq_adc_gather_scores_ref(tables: jax.Array, codes: jax.Array,
-                             base: jax.Array) -> jax.Array:
+                             base: jax.Array,
+                             lut_dtype: str = "f32") -> jax.Array:
     """ADC distances, per-query candidate codes:
 
     out[q, c] = base[q, c] + sum_m tables[q, m, codes[q, c, m]].
 
     tables (Q, M, K) f32; codes (Q, C, M) int; base (Q, C) f32 (use +inf to
-    mask padded candidates). Returns (Q, C) f32.
+    mask padded candidates; ``base`` is never quantized). Returns (Q, C) f32.
+
+    The M per-subspace lookups are fused into ONE flattened gather over the
+    (Q, M*K) tables (flat index ``m*K + code``) — identical semantics to the
+    per-subspace loop, ~1.2x faster on CPU as the scoring backend.
     """
-    m = tables.shape[1]
-    d2 = base.astype(jnp.float32)
-    for j in range(m):
-        d2 = d2 + jnp.take_along_axis(tables[:, j, :], codes[:, :, j], axis=1)
-    return d2
+    tables = _lut_tables(tables, lut_dtype)
+    nq, m, kc = tables.shape
+    c = codes.shape[1]
+    flat_idx = (codes + jnp.arange(m) * kc).reshape(nq, c * m)
+    lut = jnp.take_along_axis(tables.reshape(nq, m * kc), flat_idx, axis=1)
+    return base.astype(jnp.float32) + lut.reshape(nq, c, m).sum(-1)
 
 
-@functools.partial(jax.jit, static_argnames=("k",))
+@functools.partial(jax.jit, static_argnames=("k", "lut_dtype"))
 def pq_adc_gather_topk_ref(tables: jax.Array, codes: jax.Array,
-                           base: jax.Array, k: int):
+                           base: jax.Array, k: int, lut_dtype: str = "f32"):
     """Returns (d2 (Q, k) ascending, idx (Q, k)); idx is the candidate slot."""
-    d2 = pq_adc_gather_scores_ref(tables, codes, base)
+    d2 = pq_adc_gather_scores_ref(tables, codes, base, lut_dtype)
     neg, idx = jax.lax.top_k(-d2, k)
     return -neg, idx

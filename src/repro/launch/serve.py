@@ -30,6 +30,14 @@ def main():
     ap.add_argument("--nlist", type=int, default=64)
     ap.add_argument("--nprobe", type=int, default=8)
     ap.add_argument("--pq-subspaces", type=int, default=8)
+    ap.add_argument("--lut-dtype", choices=["f32", "bf16", "int8"],
+                    default="f32",
+                    help="ADC lookup-table precision (pq/ivfpq)")
+    ap.add_argument("--pq-backend", choices=["jnp", "kernel"], default="jnp",
+                    help="ADC scoring backend (kernel = fused Pallas scan)")
+    ap.add_argument("--query-bucket", type=int, default=64,
+                    help="min padded query-batch size; ragged batches round "
+                         "up to powers of two and share compilations")
     args = ap.parse_args()
 
     key = jax.random.key(0)
@@ -40,10 +48,13 @@ def main():
         target_dim=args.target_dim, rerank=4 * args.k, index=args.index,
         nlist=args.nlist, nprobe=args.nprobe,
         pq_subspaces=args.pq_subspaces,
+        lut_dtype=args.lut_dtype, pq_backend=args.pq_backend,
+        query_bucket=args.query_bucket,
         mpad=MPADConfig(m=args.target_dim, iters=64, batch_size=2048),
         fit_sample=4096))
     print(f"index built in {time.time()-t0:.1f}s "
-          f"({args.dim}->{args.target_dim} dims, index={args.index})")
+          f"({args.dim}->{args.target_dim} dims, index={args.index}, "
+          f"lut={args.lut_dtype})")
 
     total, rec_sum = 0.0, 0.0
     for i in range(args.batches):

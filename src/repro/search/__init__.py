@@ -2,15 +2,17 @@
 PQ / IVF-PQ ANN indexes, and the batched serving engine that integrates
 MPAD reduction."""
 from .knn import knn_search, knn_search_blocked, recall_at_k, amk_accuracy
-from .ivf import IVFIndex, build_ivf, ivf_search, posting_lists
+from .ivf import IVFIndex, build_ivf, ivf_search, posting_lists, probe_cells
 from .ivfpq import IVFPQIndex, build_ivfpq, ivfpq_search
 from .pq import PQIndex, build_pq, pq_search, pq_reconstruct
-from .serve import INDEX_KINDS, SearchEngine, ServeConfig
+from .serve import (EngineState, INDEX_KINDS, SearchEngine, ServeConfig,
+                    exact_rerank, search_fn)
 
 __all__ = [
     "knn_search", "knn_search_blocked", "recall_at_k", "amk_accuracy",
-    "IVFIndex", "build_ivf", "ivf_search", "posting_lists",
+    "IVFIndex", "build_ivf", "ivf_search", "posting_lists", "probe_cells",
     "IVFPQIndex", "build_ivfpq", "ivfpq_search",
     "PQIndex", "build_pq", "pq_search", "pq_reconstruct",
-    "SearchEngine", "ServeConfig", "INDEX_KINDS",
+    "SearchEngine", "ServeConfig", "EngineState", "search_fn",
+    "exact_rerank", "INDEX_KINDS",
 ]

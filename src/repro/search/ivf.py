@@ -17,8 +17,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-__all__ = ["IVFIndex", "build_ivf", "ivf_search", "kmeans", "posting_lists",
-           "sq_dists"]
+__all__ = ["IVFIndex", "build_ivf", "ivf_scan", "ivf_search", "kmeans",
+           "posting_lists", "probe_cells", "sq_dists"]
 
 
 def sq_dists(a: jax.Array, b: jax.Array) -> jax.Array:
@@ -80,16 +80,33 @@ def build_ivf(key: jax.Array, vectors: jax.Array, nlist: int,
     return IVFIndex(centroids=cent, lists=lists, vectors=vectors)
 
 
-@functools.partial(jax.jit, static_argnames=("k", "nprobe"))
-def ivf_search(index: IVFIndex, q: jax.Array, k: int, nprobe: int = 8):
-    """Probe the nprobe nearest cells; returns (dists (Q,k), ids (Q,k))."""
+def probe_cells(centroids: jax.Array, lists: jax.Array, q: jax.Array,
+                nprobe: int, min_cand: int):
+    """Shared coarse-probe: nearest ``nprobe`` cells' posting lists.
+
+    Returns (probe (Q, nprobe) int32 cell ids, cand (Q, C) int32 vector ids
+    with -1 pads, coarse_d2 (Q, nprobe) squared distances to the probed
+    centroids, in probe order). ``cand`` is right-padded with -1 up to
+    ``min_cand`` so a downstream top-k of that size is always legal
+    (degenerate probe budgets). Pure/unjitted so callers can inline it into
+    larger fused programs; ``probe`` lets them gather any cell-major
+    per-vector payload (codes, bias, vectors) with contiguous row gathers.
+    """
+    cd2 = sq_dists(q, centroids)                          # (Q, nlist)
+    _, probe = jax.lax.top_k(-cd2, nprobe)                # (Q, nprobe)
+    cd2p = jnp.take_along_axis(cd2, probe, axis=1)        # (Q, nprobe)
+    cand = lists[probe].reshape(q.shape[0], -1)           # (Q, nprobe*max_cell)
+    if cand.shape[1] < min_cand:
+        cand = jnp.pad(cand, ((0, 0), (0, min_cand - cand.shape[1])),
+                       constant_values=-1)
+    return probe, cand, cd2p
+
+
+def ivf_scan(index: IVFIndex, q: jax.Array, k: int, nprobe: int = 8):
+    """Unjitted ``ivf_search`` core (inlineable into fused programs)."""
     q = jnp.asarray(q, jnp.float32)
     cent, lists, vecs = index
-    _, probe = jax.lax.top_k(-sq_dists(q, cent), nprobe)  # (Q, nprobe)
-    cand = lists[probe].reshape(q.shape[0], -1)           # (Q, nprobe*max_cell)
-    if cand.shape[1] < k:   # degenerate probe budget: pad so top_k is legal
-        cand = jnp.pad(cand, ((0, 0), (0, k - cand.shape[1])),
-                       constant_values=-1)
+    _, cand, _ = probe_cells(cent, lists, q, nprobe, k)
     valid = cand >= 0
     cv = vecs[jnp.maximum(cand, 0)]                       # (Q, C, d)
     d2 = jnp.sum((cv - q[:, None, :]) ** 2, axis=-1)
@@ -97,3 +114,9 @@ def ivf_search(index: IVFIndex, q: jax.Array, k: int, nprobe: int = 8):
     neg, sel = jax.lax.top_k(-d2, k)
     ids = jnp.take_along_axis(cand, sel, axis=1)
     return jnp.sqrt(jnp.maximum(-neg, 0.0)), ids
+
+
+@functools.partial(jax.jit, static_argnames=("k", "nprobe"))
+def ivf_search(index: IVFIndex, q: jax.Array, k: int, nprobe: int = 8):
+    """Probe the nprobe nearest cells; returns (dists (Q,k), ids (Q,k))."""
+    return ivf_scan(index, q, k, nprobe)

@@ -28,11 +28,12 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.pq_adc.lut import center_lut
 from repro.kernels.pq_adc.ref import pq_adc_gather_scores_ref
-from .ivf import kmeans, posting_lists, sq_dists
-from .pq import build_pq
+from .ivf import kmeans, posting_lists, probe_cells, sq_dists
+from .pq import _check_adc_args, build_pq
 
-__all__ = ["IVFPQIndex", "build_ivfpq", "ivfpq_search"]
+__all__ = ["IVFPQIndex", "build_ivfpq", "ivfpq_scan", "ivfpq_search"]
 
 
 class IVFPQIndex(NamedTuple):
@@ -41,6 +42,12 @@ class IVFPQIndex(NamedTuple):
     codebooks: jax.Array    # (M, K, dsub) residual-space PQ codebooks
     codes: jax.Array        # (N, M) int32 residual codes, id-aligned
     bias: jax.Array         # (N,) f32: 2·Σ_m ⟨cent[assign]_m, cb[m, code_m]⟩
+    # cell-major serving mirrors of codes/bias: probe-time access becomes
+    # nprobe contiguous row-block gathers instead of |cand| scattered ones
+    codes_cell: jax.Array   # (nlist, max_cell, M) uint8 (int32 if K > 256)
+    bias_cell: jax.Array    # (nlist, max_cell) f32, 0 on pads
+    lut_w: jax.Array        # (d, M*K) block-diagonal -2*codebook projection
+    cbnorm: jax.Array       # (M, K) residual codeword squared norms
 
 
 def build_ivfpq(key: jax.Array, vectors: jax.Array, nlist: int,
@@ -62,50 +69,55 @@ def build_ivfpq(key: jax.Array, vectors: jax.Array, nlist: int,
         pq.codebooks[None], pq.codes[:, :, None, None], axis=2
     )[:, :, 0, :]                                         # (N, M, dsub)
     bias = 2.0 * jnp.sum(csub * recon, axis=(1, 2))       # (N,)
+    lid = jnp.maximum(lists, 0)
+    code_dt = jnp.uint8 if pq.codebooks.shape[1] <= 256 else jnp.int32
     return IVFPQIndex(centroids=cent, lists=lists, codebooks=pq.codebooks,
-                      codes=pq.codes, bias=bias.astype(jnp.float32))
+                      codes=pq.codes, bias=bias.astype(jnp.float32),
+                      codes_cell=pq.codes[lid].astype(code_dt),
+                      bias_cell=jnp.where(lists >= 0, bias[lid], 0.0
+                                          ).astype(jnp.float32),
+                      lut_w=pq.lut_w, cbnorm=pq.cbnorm)
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("k", "nprobe", "backend", "interpret"))
-def ivfpq_search(index: IVFPQIndex, q: jax.Array, k: int, nprobe: int = 8,
-                 backend: str = "jnp", interpret: bool = True):
-    """Probe ``nprobe`` cells, ADC-score their residual codes, top-k.
-
-    Returns (approx dists (Q, k), ids (Q, k)). ``backend="kernel"`` routes
-    the candidate scoring through the fused Pallas ADC-gather kernel.
-    """
-    if backend not in ("jnp", "kernel"):
-        raise ValueError(f"unknown ADC backend {backend!r}")
+def ivfpq_scan(index: IVFPQIndex, q: jax.Array, k: int, nprobe: int = 8,
+               backend: str = "jnp", interpret: bool = True,
+               lut_dtype: str = "f32"):
+    """Unjitted ``ivfpq_search`` core (inlineable into fused programs)."""
+    _check_adc_args(backend, lut_dtype)
     q = jnp.asarray(q, jnp.float32)
-    cent, lists, cbs, codes, bias = index
     nq = q.shape[0]
-    m, kc, dsub = cbs.shape
+    m, kc, dsub = index.codebooks.shape
     # coarse probe: distances to every centroid, keep the nprobe nearest
-    cd2 = sq_dists(q, cent)                               # (Q, nlist)
-    _, probe = jax.lax.top_k(-cd2, nprobe)                # (Q, nprobe)
-    cd2p = jnp.take_along_axis(cd2, probe, axis=1)        # (Q, nprobe)
-    cand = lists[probe].reshape(nq, -1)                   # (Q, nprobe*max_cell)
-    if cand.shape[1] < k:   # degenerate probe budget: pad so top_k is legal
-        cand = jnp.pad(cand, ((0, 0), (0, k - cand.shape[1])),
-                       constant_values=-1)
-    valid = cand >= 0
-    cid = jnp.maximum(cand, 0)
-    # cell-independent query LUT over residual codebooks: (Q, M, K)
-    qs = q.reshape(nq, m, dsub)
-    tables = (jnp.sum(cbs ** 2, -1)[None]
-              - 2.0 * jnp.einsum("qmd,mkd->qmk", qs, cbs))
-    max_cell = lists.shape[1]
-    base = jnp.repeat(cd2p, max_cell, axis=1)
-    base = jnp.pad(base, ((0, 0), (0, cand.shape[1] - base.shape[1])))
-    base = jnp.where(valid, base + bias[cid], jnp.inf)    # mask posting pads
-    ccodes = codes[cid]                                   # (Q, C, M)
+    probe, cand, cd2p = probe_cells(index.centroids, index.lists, q,
+                                    nprobe, k)            # (Q,P),(Q,C),(Q,P)
+    # cell-independent query LUT over residual codebooks: (Q, M, K), ONE
+    # dense matmul via the build-time block-diagonal factorization.
+    # Only this LUT is quantized under lut_dtype; the coarse distance +
+    # cross-term ``base`` stays f32 (it is O(1) memory, not a table).
+    tables = index.cbnorm[None] + (q @ index.lut_w).reshape(nq, m, kc)
+    # candidate codes + bias through the cell-major mirrors: nprobe
+    # contiguous (max_cell, M) row blocks per query, no scattered gather
+    max_cell = index.lists.shape[1]
+    ccodes = index.codes_cell[probe].reshape(nq, -1, m).astype(jnp.int32)
+    base = (jnp.repeat(cd2p, max_cell, axis=1)
+            + index.bias_cell[probe].reshape(nq, -1))     # (Q, P*max_cell)
+    short = cand.shape[1] - base.shape[1]                 # degenerate budget
+    if short:
+        ccodes = jnp.pad(ccodes, ((0, 0), (0, short), (0, 0)))
+        base = jnp.pad(base, ((0, 0), (0, short)))
+    base = jnp.where(cand >= 0, base, jnp.inf)            # mask posting pads
+    if lut_dtype != "f32":
+        # fold the table row means into the f32 base (``center_lut``): the
+        # quantized grid then only has to cover the candidate-varying part
+        tables, offs = center_lut(tables)
+        base = base + offs[:, None]                       # inf pads stay inf
     if backend == "kernel":
         from repro.kernels.pq_adc import pq_adc_gather_topk_pallas
         d2, sel = pq_adc_gather_topk_pallas(tables, ccodes, base, k,
-                                            interpret=interpret)
+                                            interpret=interpret,
+                                            lut_dtype=lut_dtype)
     else:
-        adc = pq_adc_gather_scores_ref(tables, ccodes, base)
+        adc = pq_adc_gather_scores_ref(tables, ccodes, base, lut_dtype)
         neg, sel = jax.lax.top_k(-adc, k)
         d2 = -neg
     # the kernel marks unfilled slots sel=-1; don't let them wrap the gather
@@ -113,3 +125,17 @@ def ivfpq_search(index: IVFPQIndex, q: jax.Array, k: int, nprobe: int = 8,
                     jnp.take_along_axis(cand, jnp.maximum(sel, 0), axis=1),
                     -1)
     return jnp.sqrt(jnp.maximum(d2, 0.0)), ids
+
+
+@functools.partial(jax.jit, static_argnames=("k", "nprobe", "backend",
+                                             "interpret", "lut_dtype"))
+def ivfpq_search(index: IVFPQIndex, q: jax.Array, k: int, nprobe: int = 8,
+                 backend: str = "jnp", interpret: bool = True,
+                 lut_dtype: str = "f32"):
+    """Probe ``nprobe`` cells, ADC-score their residual codes, top-k.
+
+    Returns (approx dists (Q, k), ids (Q, k)). ``backend="kernel"`` routes
+    the candidate scoring through the fused Pallas ADC-gather kernel;
+    ``lut_dtype`` quantizes the per-query residual LUT on either backend.
+    """
+    return ivfpq_scan(index, q, k, nprobe, backend, interpret, lut_dtype)

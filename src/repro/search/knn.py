@@ -12,7 +12,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
-__all__ = ["knn_search", "knn_search_blocked", "recall_at_k", "amk_accuracy"]
+__all__ = ["knn_scan", "knn_search", "knn_search_blocked", "recall_at_k",
+           "amk_accuracy"]
 
 
 def _sq_dists(q: jax.Array, x: jax.Array) -> jax.Array:
@@ -21,12 +22,26 @@ def _sq_dists(q: jax.Array, x: jax.Array) -> jax.Array:
     return jnp.maximum(qq + xx - 2.0 * (q @ x.T), 0.0)
 
 
+def knn_scan(q: jax.Array, x: jax.Array, k: int):
+    """Unjitted ``knn_search`` core (inlineable into fused programs).
+
+    Tolerates k > N (a candidate budget above the corpus size): the short
+    rows are right-padded with (-1, inf), matching the IVF pad convention.
+    """
+    d2 = _sq_dists(q, x)
+    k_eff = min(k, x.shape[0])
+    neg, idx = jax.lax.top_k(-d2, k_eff)
+    if k_eff < k:
+        neg = jnp.pad(neg, ((0, 0), (0, k - k_eff)),
+                      constant_values=-jnp.inf)
+        idx = jnp.pad(idx, ((0, 0), (0, k - k_eff)), constant_values=-1)
+    return jnp.sqrt(jnp.maximum(-neg, 0.0)), idx
+
+
 @functools.partial(jax.jit, static_argnames=("k",))
 def knn_search(q: jax.Array, x: jax.Array, k: int):
     """Exact k-NN: returns (dists (Q,k), indices (Q,k)) by L2 distance."""
-    d2 = _sq_dists(q, x)
-    neg, idx = jax.lax.top_k(-d2, k)
-    return jnp.sqrt(jnp.maximum(-neg, 0.0)), idx
+    return knn_scan(q, x, k)
 
 
 @functools.partial(jax.jit, static_argnames=("k", "block"))

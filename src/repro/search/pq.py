@@ -4,7 +4,9 @@ compresses the residual precision — together: f32 n-dim -> uint8 codes.
 
 Asymmetric distance computation (ADC): per-query distance tables
 (M x n_centroids) against subspace codebooks, then code lookups — no
-decompression of the corpus.
+decompression of the corpus. ``lut_dtype`` quantizes the tables themselves
+(f32 -> bf16/int8, see ``repro.kernels.pq_adc.lut``) for a 2-4x LUT memory
+cut on both scoring backends.
 """
 from __future__ import annotations
 
@@ -14,15 +16,37 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.pq_adc.lut import LUT_DTYPES, center_lut
 from repro.kernels.pq_adc.ref import pq_adc_scores_ref
 from .ivf import kmeans, sq_dists
 
-__all__ = ["PQIndex", "build_pq", "pq_search", "pq_reconstruct"]
+__all__ = ["PQIndex", "build_pq", "lut_projection", "pq_scan", "pq_search",
+           "pq_reconstruct"]
 
 
 class PQIndex(NamedTuple):
     codebooks: jax.Array    # (M, K, dsub)
     codes: jax.Array        # (N, M) uint8/int32 centroid ids
+    lut_w: jax.Array        # (d, M*K) block-diagonal -2*codebook projection
+    cbnorm: jax.Array       # (M, K) per-codeword squared norms
+
+
+def lut_projection(codebooks: jax.Array):
+    """Build-time table factorization: (lut_w (d, M*K), cbnorm (M, K)).
+
+    The candidate-varying part of the per-query ADC tables is
+    ``||cb||^2 - 2<q_m, cb[m,k]>``; with ``lut_w`` block-diagonal
+    (block m = -2 * cb[m].T) it becomes ``cbnorm + (q @ lut_w).reshape``
+    — ONE dense matmul per batch instead of a batched einsum over
+    subspaces, which is what lets XLA fuse table construction with the
+    upstream projection in the one-program serving path.
+    """
+    m, kc, dsub = codebooks.shape
+    w = jnp.zeros((m * dsub, m * kc), jnp.float32)
+    for j in range(m):                                    # M small: unrolled
+        w = w.at[j * dsub:(j + 1) * dsub, j * kc:(j + 1) * kc].set(
+            -2.0 * codebooks[j].T)
+    return w, jnp.sum(codebooks ** 2, -1)
 
 
 def build_pq(key: jax.Array, x: jax.Array, m_subspaces: int = 8,
@@ -41,8 +65,11 @@ def build_pq(key: jax.Array, x: jax.Array, m_subspaces: int = 8,
                     min(n_centroids, n), iters)
         cbs.append(cb)
         codes.append(jnp.argmin(sq_dists(sub, cb), axis=1))
-    return PQIndex(codebooks=jnp.stack(cbs),
-                   codes=jnp.stack(codes, axis=1).astype(jnp.int32))
+    cbs = jnp.stack(cbs)
+    lut_w, cbnorm = lut_projection(cbs)
+    return PQIndex(codebooks=cbs,
+                   codes=jnp.stack(codes, axis=1).astype(jnp.int32),
+                   lut_w=lut_w, cbnorm=cbnorm)
 
 
 def pq_reconstruct(index: PQIndex) -> jax.Array:
@@ -52,29 +79,55 @@ def pq_reconstruct(index: PQIndex) -> jax.Array:
     return jnp.concatenate(parts, axis=1)
 
 
-@functools.partial(jax.jit, static_argnames=("k", "backend", "interpret"))
+def _check_adc_args(backend: str, lut_dtype: str):
+    if backend not in ("jnp", "kernel"):
+        raise ValueError(f"unknown ADC backend {backend!r}")
+    if lut_dtype not in LUT_DTYPES:
+        raise ValueError(
+            f"unknown lut_dtype {lut_dtype!r}; expected one of {LUT_DTYPES}")
+
+
+def pq_scan(index: PQIndex, q: jax.Array, k: int, backend: str = "jnp",
+            interpret: bool = True, lut_dtype: str = "f32"):
+    """Unjitted ``pq_search`` core (inlineable into fused programs).
+
+    Only the candidate-varying table part (||cb||^2 - 2<q, cb>) goes through
+    the (possibly quantized) scan; the per-query constants — ||q||^2 and,
+    when quantizing, the table row means (``center_lut``) — stay in f32 and
+    are added back after top-k, so they cost no quantization range and
+    cannot perturb the ranking.
+    """
+    _check_adc_args(backend, lut_dtype)
+    q = jnp.asarray(q, jnp.float32)
+    m, kc, dsub = index.codebooks.shape
+    tables = (index.cbnorm[None]
+              + (q @ index.lut_w).reshape(q.shape[0], m, kc))
+    const = jnp.sum(q * q, axis=1)                        # (Q,) ||q||^2
+    if lut_dtype != "f32":
+        tables, offs = center_lut(tables)
+        const = const + offs
+    if backend == "kernel":
+        from repro.kernels.pq_adc import pq_adc_topk_pallas
+        d2, ids = pq_adc_topk_pallas(tables, index.codes, k,
+                                     interpret=interpret,
+                                     lut_dtype=lut_dtype)
+    else:
+        scores = pq_adc_scores_ref(tables, index.codes, lut_dtype)
+        neg, ids = jax.lax.top_k(-scores, k)
+        d2 = -neg
+    return jnp.sqrt(jnp.maximum(d2 + const[:, None], 0.0)), ids
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "backend", "interpret", "lut_dtype"))
 def pq_search(index: PQIndex, q: jax.Array, k: int, backend: str = "jnp",
-              interpret: bool = True):
+              interpret: bool = True, lut_dtype: str = "f32"):
     """ADC top-k: returns (approx dists (Q,k), ids (Q,k)).
 
     ``backend="jnp"`` scores with vectorized table lookups; ``"kernel"``
     dispatches the fused Pallas ADC scan (``repro.kernels.pq_adc``),
-    identical semantics, tiled + running top-k on device.
+    identical semantics, tiled + running top-k on device. ``lut_dtype``
+    quantizes the per-query tables (both backends score through the same
+    quantization, so they stay parity oracles of each other).
     """
-    if backend not in ("jnp", "kernel"):
-        raise ValueError(f"unknown ADC backend {backend!r}")
-    q = jnp.asarray(q, jnp.float32)
-    nq, d = q.shape
-    m, kc, dsub = index.codebooks.shape
-    qs = q.reshape(nq, m, dsub)
-    # distance tables: (Q, M, K)
-    tables = (jnp.sum(qs * qs, -1)[:, :, None]
-              + jnp.sum(index.codebooks ** 2, -1)[None]
-              - 2.0 * jnp.einsum("qmd,mkd->qmk", qs, index.codebooks))
-    if backend == "kernel":
-        from repro.kernels.pq_adc import pq_adc_topk_pallas
-        d2, ids = pq_adc_topk_pallas(tables, index.codes, k,
-                                     interpret=interpret)
-        return jnp.sqrt(jnp.maximum(d2, 0.0)), ids
-    neg, ids = jax.lax.top_k(-pq_adc_scores_ref(tables, index.codes), k)
-    return jnp.sqrt(jnp.maximum(-neg, 0.0)), ids
+    return pq_scan(index, q, k, backend, interpret, lut_dtype)

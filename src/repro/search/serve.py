@@ -1,4 +1,4 @@
-"""Batched vector-search serving engine with MPAD as a first-class feature.
+"""Batched vector-search serving engine: a functional one-program core.
 
 Pipeline (DESIGN.md §2): corpus -> [fit MPAD on a sample] -> reduce corpus ->
 [build an index over reduced vectors] -> serve batched queries:
@@ -9,6 +9,29 @@ The reduced-space scan is where the paper's win lands: score FLOPs and corpus
 bytes scale with m instead of n, and the re-rank restores exactness on the
 short candidate list.
 
+Serving architecture
+--------------------
+
+The engine is split into a **pytree of arrays** and a **pure function**:
+
+* ``EngineState`` — an immutable pytree holding the re-rank corpus, the
+  (optional) MPAD projection, and exactly one built index (flat / IVF / PQ /
+  IVF-PQ). Being a pytree, it shards, donates, and serialises like any other
+  jax state.
+* ``search_fn(state, queries, k, *, index, nprobe, rerank, backend,
+  interpret, lut_dtype)`` — the whole query pipeline (project -> probe ->
+  ADC/flat scan -> dedup'd masked re-rank gather -> final top-k) as one
+  traceable function. Jitted, it compiles to a **single XLA program**: no
+  Python dispatch or host syncs between stages.
+
+``SearchEngine`` is a thin stateful wrapper: it builds ``EngineState`` once,
+owns a per-engine ``jax.jit(search_fn)`` whose cache is keyed by
+``(index kind + knobs, k, query bucket)``, and pads incoming query batches
+up to power-of-two buckets (floored at ``ServeConfig.query_bucket``) so
+ragged traffic reuses compilations — batch sizes {1, 7, 64} all run the one
+program compiled for bucket 64. ``SearchEngine.compile_count`` exposes the
+cache size for regression tests.
+
 Index layouts (``ServeConfig.index``):
 
   "flat"   exact scan of the (reduced) vectors
@@ -16,27 +39,33 @@ Index layouts (``ServeConfig.index``):
   "pq"     product-quantized vectors, fused ADC scan
   "ivfpq"  coarse quantizer + PQ-coded residuals, probed ADC scan — the
            production memory-hierarchy composition
+
+``ServeConfig.lut_dtype`` ("f32" | "bf16" | "int8") quantizes the per-query
+ADC lookup tables of the pq/ivfpq scans (see ``repro.kernels.pq_adc.lut``).
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 import warnings
-from typing import Optional
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import MPADConfig, MPADResult, fit_mpad
-from .ivf import IVFIndex, build_ivf, ivf_search
-from .ivfpq import IVFPQIndex, build_ivfpq, ivfpq_search
-from .knn import knn_search
-from .pq import PQIndex, build_pq, pq_search
+from repro.kernels.pq_adc.lut import LUT_DTYPES
+from .ivf import IVFIndex, build_ivf, ivf_scan
+from .ivfpq import IVFPQIndex, build_ivfpq, ivfpq_scan
+from .knn import knn_scan
+from .pq import PQIndex, build_pq, pq_scan
 
-__all__ = ["ServeConfig", "SearchEngine", "INDEX_KINDS"]
+__all__ = ["ServeConfig", "SearchEngine", "EngineState", "search_fn",
+           "exact_rerank", "INDEX_KINDS"]
 
 INDEX_KINDS = ("flat", "ivf", "pq", "ivfpq")
 _ADC_BACKENDS = ("jnp", "kernel")
+_SEARCH_STATICS = ("k", "index", "nprobe", "rerank", "backend", "interpret",
+                   "lut_dtype")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -51,6 +80,9 @@ class ServeConfig:
     pq_backend: str = "jnp"              # ADC scoring: "jnp" | "kernel"
     pq_interpret: bool = True            # kernel backend: Pallas interpret
     #                                      mode (set False on real TPU)
+    lut_dtype: str = "f32"               # ADC LUT precision: f32 | bf16 | int8
+    query_bucket: int = 64               # min padded query-batch size; ragged
+    #                                      batches round up to powers of two
     mpad: Optional[MPADConfig] = None    # defaults derived from target_dim
     fit_sample: int = 2048               # rows used to fit the projection
     seed: int = 0
@@ -87,75 +119,204 @@ class ServeConfig:
             raise ValueError(
                 f"unknown pq_backend {self.pq_backend!r}; expected one of "
                 f"{_ADC_BACKENDS}")
+        if self.lut_dtype not in LUT_DTYPES:
+            raise ValueError(
+                f"unknown lut_dtype {self.lut_dtype!r}; expected one of "
+                f"{LUT_DTYPES}")
+        if self.query_bucket < 1:
+            raise ValueError("query_bucket must be >= 1")
+
+
+class EngineState(NamedTuple):
+    """Everything ``search_fn`` needs, as one immutable pytree.
+
+    Exactly one of (``reduced``, ``ivf``, ``pq``, ``ivfpq``) is non-None —
+    the built index — plus the original-space corpus for the exact re-rank
+    and the (optional) MPAD projection as raw arrays.
+    """
+    corpus: jax.Array                              # (N, D) re-rank space
+    proj: Optional[Tuple[jax.Array, jax.Array]]    # (matrix (m,D), mean (D,))
+    reduced: Optional[jax.Array]                   # flat: (N, m) scan vectors
+    ivf: Optional[IVFIndex]
+    pq: Optional[PQIndex]
+    ivfpq: Optional[IVFPQIndex]
+
+
+def exact_rerank(queries: jax.Array, corpus: jax.Array, cand: jax.Array,
+                 k: int):
+    """Re-score candidate ids in the original space; top-k of the survivors.
+
+    ``cand`` (Q, C) may contain -1 pads and duplicate ids (over-retrieval
+    across probes): duplicates are collapsed to -1 first (sort + neighbor
+    compare), then a single masked gather pulls each surviving row once and
+    pads/dups are held out of the top-k with +inf.
+    """
+    cand = jnp.sort(cand, axis=1)                        # pads (-1) sort first
+    dup = jnp.concatenate(
+        [jnp.zeros_like(cand[:, :1], bool), cand[:, 1:] == cand[:, :-1]],
+        axis=1)
+    cand = jnp.where(dup, -1, cand)
+    valid = cand >= 0
+    cv = jnp.take(corpus, jnp.where(valid, cand, 0), axis=0)   # (Q, C, D)
+    d2 = jnp.sum((cv - queries[:, None, :]) ** 2, axis=-1)
+    d2 = jnp.where(valid, d2, jnp.inf)
+    neg, sel = jax.lax.top_k(-d2, k)
+    ids = jnp.take_along_axis(cand, sel, axis=1)
+    return jnp.sqrt(jnp.maximum(-neg, 0.0)), ids
+
+
+def search_fn(state: EngineState, queries: jax.Array, k: int, *,
+              index: str = "flat", nprobe: int = 8, rerank: int = 64,
+              backend: str = "jnp", interpret: bool = True,
+              lut_dtype: str = "f32"):
+    """The entire query pipeline as one pure traceable function.
+
+    project -> probe/scan (per ``index``) -> exact re-rank -> top-k.
+    Jitted (``jax.jit(search_fn, static_argnames=_SEARCH_STATICS)``) this is
+    a single XLA program; every per-query op is row-independent, so padded
+    query rows never perturb real results. Returns (dists (Q,k), ids (Q,k));
+    distances in the original space when re-ranking is active, else in the
+    serving (reduced) space.
+    """
+    queries = jnp.asarray(queries, jnp.float32)
+    if state.proj is not None:
+        matrix, mean = state.proj
+        qr = (queries - mean) @ matrix.T
+    else:
+        qr = queries
+    # lossy scoring (reduction and/or PQ codes) -> over-retrieve + re-rank
+    approximate = state.proj is not None or index in ("pq", "ivfpq")
+    n_cand = max(k, rerank) if approximate else k
+    if index == "ivf":
+        _, cand = ivf_scan(state.ivf, qr, n_cand, nprobe)
+    elif index == "pq":
+        _, cand = pq_scan(state.pq, qr, n_cand, backend=backend,
+                          interpret=interpret, lut_dtype=lut_dtype)
+    elif index == "ivfpq":
+        _, cand = ivfpq_scan(state.ivfpq, qr, n_cand, nprobe,
+                             backend=backend, interpret=interpret,
+                             lut_dtype=lut_dtype)
+    else:
+        base = state.reduced if state.reduced is not None else state.corpus
+        _, cand = knn_scan(qr, base, n_cand)
+    return exact_rerank(queries, state.corpus, cand, k)
+
+
+def _bucket(nq: int, floor: int) -> int:
+    """Smallest power-of-two >= nq, floored at ``floor``."""
+    return max(floor, 1 << max(nq - 1, 0).bit_length())
 
 
 class SearchEngine:
-    """Build once over a corpus; serve batched k-NN queries."""
+    """Build once over a corpus; serve batched k-NN queries.
+
+    Thin wrapper over the functional core: ``__init__`` builds
+    ``self.state`` (an ``EngineState``), ``search`` pads the batch to its
+    bucket and calls the engine-owned jitted ``search_fn``. Mutating
+    ``self.config`` (e.g. ``dataclasses.replace(..., nprobe=16)``) is
+    supported — knob changes re-key the jit cache, not the state.
+    """
 
     def __init__(self, corpus: jax.Array, config: ServeConfig):
         self.config = config
-        self.corpus = jnp.asarray(corpus, jnp.float32)
-        n, dim = self.corpus.shape
+        corpus = jnp.asarray(corpus, jnp.float32)
+        n, dim = corpus.shape
         key = jax.random.key(config.seed)
         if config.target_dim is not None:
             mcfg = config.mpad or MPADConfig(
                 m=config.target_dim, b=80.0, alpha=25.0, iters=48,
                 seed=config.seed)
-            sample = self.corpus
+            sample = corpus
             if config.fit_sample < n:
                 rows = jax.random.choice(
                     key, n, (config.fit_sample,), replace=False)
-                sample = self.corpus[rows]
+                sample = corpus[rows]
             self.reducer: Optional[MPADResult] = fit_mpad(sample, mcfg)
-            self.reduced = self.reducer(self.corpus)
+            reduced = self.reducer(corpus)
+            proj = (self.reducer.matrix, self.reducer.mean)
         else:
             self.reducer = None
-            self.reduced = self.corpus
-        self.ivf: Optional[IVFIndex] = None
-        self.pq: Optional[PQIndex] = None
-        self.ivfpq: Optional[IVFPQIndex] = None
+            reduced = corpus
+            proj = None
+        ivf = pq = ivfpq = None
         if config.index == "ivf":
-            self.ivf = build_ivf(
-                jax.random.fold_in(key, 1), self.reduced, config.nlist)
+            ivf = build_ivf(
+                jax.random.fold_in(key, 1), reduced, config.nlist)
         elif config.index == "pq":
-            self.pq = build_pq(jax.random.fold_in(key, 2), self.reduced,
-                               config.pq_subspaces, config.pq_centroids)
+            pq = build_pq(jax.random.fold_in(key, 2), reduced,
+                          config.pq_subspaces, config.pq_centroids)
         elif config.index == "ivfpq":
-            self.ivfpq = build_ivfpq(
-                jax.random.fold_in(key, 3), self.reduced, config.nlist,
+            ivfpq = build_ivfpq(
+                jax.random.fold_in(key, 3), reduced, config.nlist,
                 config.pq_subspaces, config.pq_centroids)
+        self.state = EngineState(
+            corpus=corpus, proj=proj,
+            reduced=reduced if config.index == "flat" else None,
+            ivf=ivf, pq=pq, ivfpq=ivfpq)
+        self._reduced = reduced      # back-compat view for every index kind
+        # engine-owned jit: a fresh closure gives this engine its own
+        # compilation cache (jax shares caches for identical function
+        # objects), keyed by (statics, query bucket)
+        def _engine_search_fn(state, queries, k, **kw):
+            return search_fn(state, queries, k, **kw)
+        self._program = jax.jit(_engine_search_fn,
+                                static_argnames=_SEARCH_STATICS)
+
+    # back-compat array views into the state pytree
+    @property
+    def corpus(self) -> jax.Array:
+        return self.state.corpus
+
+    @property
+    def reduced(self) -> jax.Array:
+        return self._reduced
+
+    @property
+    def ivf(self) -> Optional[IVFIndex]:
+        return self.state.ivf
+
+    @property
+    def pq(self) -> Optional[PQIndex]:
+        return self.state.pq
+
+    @property
+    def ivfpq(self) -> Optional[IVFPQIndex]:
+        return self.state.ivfpq
+
+    @property
+    def compile_count(self) -> int:
+        """Number of compiled (statics, bucket) variants this engine holds."""
+        try:
+            return int(self._program._cache_size())
+        except AttributeError as e:     # private jax hook; fail loudly if
+            raise RuntimeError(          # an unpinned jax drops it
+                "jax no longer exposes PjitFunction._cache_size(); "
+                "SearchEngine.compile_count needs a replacement hook"
+            ) from e
 
     def search(self, queries: jax.Array, k: int):
         """Returns (dists (Q,k), ids (Q,k)); distances in the original space
-        when re-ranking is active, else in the serving (reduced) space."""
+        when re-ranking is active, else in the serving (reduced) space.
+
+        One device program per call: the batch is zero-padded up to its
+        power-of-two bucket (>= ``config.query_bucket``) so every batch size
+        in a bucket reuses the same compilation, then sliced back to Q rows.
+        """
         cfg = self.config
         queries = jnp.asarray(queries, jnp.float32)
-        qr = self.reducer(queries) if self.reducer is not None else queries
-        # lossy scoring (reduction and/or PQ codes) -> over-retrieve + re-rank
-        approximate = (self.reducer is not None
-                       or cfg.index in ("pq", "ivfpq"))
-        n_cand = max(k, cfg.rerank if approximate else k)
-        if cfg.index == "ivf":
-            _, cand = ivf_search(self.ivf, qr, n_cand, cfg.nprobe)
-        elif cfg.index == "pq":
-            _, cand = pq_search(self.pq, qr, n_cand,
-                                backend=cfg.pq_backend,
-                                interpret=cfg.pq_interpret)
-        elif cfg.index == "ivfpq":
-            _, cand = ivfpq_search(self.ivfpq, qr, n_cand, cfg.nprobe,
-                                   backend=cfg.pq_backend,
-                                   interpret=cfg.pq_interpret)
-        else:
-            _, cand = knn_search(qr, self.reduced, n_cand)
-        return _exact_rerank(queries, self.corpus, cand, k)
-
-
-@functools.partial(jax.jit, static_argnames=("k",))
-def _exact_rerank(queries, corpus, cand, k):
-    cv = corpus[jnp.maximum(cand, 0)]                    # (Q, C, n)
-    d2 = jnp.sum((cv - queries[:, None, :]) ** 2, axis=-1)
-    # -1 pads (under-filled probes) must never displace real candidates
-    d2 = jnp.where(cand >= 0, d2, jnp.inf)
-    neg, sel = jax.lax.top_k(-d2, k)
-    ids = jnp.take_along_axis(cand, sel, axis=1)
-    return jnp.sqrt(jnp.maximum(-neg, 0.0)), ids
+        nq = queries.shape[0]
+        bucket = _bucket(nq, cfg.query_bucket)
+        if bucket != nq:
+            queries = jnp.pad(queries, ((0, bucket - nq), (0, 0)))
+        # normalize knobs the index kind can't observe so flipping them
+        # (e.g. lut_dtype on a flat engine) never re-keys the jit cache
+        probed = cfg.index in ("ivf", "ivfpq")
+        coded = cfg.index in ("pq", "ivfpq")
+        d, ids = self._program(
+            self.state, queries, k, index=cfg.index,
+            nprobe=cfg.nprobe if probed else 0,
+            rerank=cfg.rerank,
+            backend=cfg.pq_backend if coded else "jnp",
+            interpret=cfg.pq_interpret if coded else True,
+            lut_dtype=cfg.lut_dtype if coded else "f32")
+        return d[:nq], ids[:nq]

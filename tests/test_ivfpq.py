@@ -114,6 +114,36 @@ def test_engine_ivfpq_kernel_backend():
     assert float(recall_at_k(found, truth)) > 0.7
 
 
+# --- quantized LUT path ------------------------------------------------------
+
+@pytest.mark.parametrize("lut_dtype", ["bf16", "int8"])
+def test_ivfpq_backends_agree_per_lut_dtype(lut_dtype):
+    x, q = _corpus(n=800, nq=32)
+    idx = build_ivfpq(jax.random.key(1), x, nlist=8, m_subspaces=8,
+                      n_centroids=64)
+    d_j, _ = ivfpq_search(idx, q, 10, nprobe=4, lut_dtype=lut_dtype)
+    d_k, _ = ivfpq_search(idx, q, 10, nprobe=4, backend="kernel",
+                          lut_dtype=lut_dtype)
+    np.testing.assert_allclose(np.asarray(d_k), np.asarray(d_j), atol=1e-3)
+
+
+def test_engine_ivfpq_int8_lut_recall_floor():
+    """End-to-end acceptance: ivfpq + lut_dtype="int8" + exact re-rank must
+    hold recall@10 within 0.01 of the f32 LUT path — the re-rank absorbs the
+    table rounding as long as the true neighbors stay in the candidate set."""
+    x, q = _corpus(n=4000, nq=64, d=64, seed=7)
+    _, truth = knn_search(q, x, 10)
+    recs = {}
+    for lut in ("f32", "int8"):
+        eng = SearchEngine(x, ServeConfig(
+            target_dim=None, rerank=64, index="ivfpq", nlist=32, nprobe=16,
+            pq_subspaces=8, pq_centroids=128, lut_dtype=lut))
+        _, found = eng.search(q, 10)
+        recs[lut] = float(recall_at_k(found, truth))
+    assert recs["int8"] >= recs["f32"] - 0.01, recs
+    assert recs["f32"] >= 0.9, recs
+
+
 # --- ServeConfig index spec ------------------------------------------------
 
 def test_serveconfig_rejects_unknown_index():

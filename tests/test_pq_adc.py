@@ -5,9 +5,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.pq_adc import (pq_adc_gather_topk_pallas,
+from repro.kernels.pq_adc import (dequantize_lut, lut_error_bound,
+                                  pq_adc_gather_topk_pallas,
                                   pq_adc_gather_topk_ref, pq_adc_scores_ref,
-                                  pq_adc_topk_pallas, pq_adc_topk_ref)
+                                  pq_adc_topk_pallas, pq_adc_topk_ref,
+                                  quantize_lut)
 from repro.search.pq import build_pq, pq_search
 
 
@@ -65,6 +67,86 @@ def test_masked_pads_never_surface():
     assert np.isfinite(np.asarray(d_k)).all()
     np.testing.assert_array_equal(np.sort(np.asarray(i_k), axis=1),
                                   np.broadcast_to(np.asarray(keep), (nq, 4)))
+
+
+# --- quantized LUT path (lut_dtype="bf16" | "int8") -------------------------
+
+@pytest.mark.parametrize("lut_dtype,atol", [("bf16", 1e-2), ("int8", 1e-3)])
+def test_shared_kernel_quantized_matches_ref(lut_dtype, atol):
+    """Kernel and ref score through the same quantized tables, so they must
+    agree up to f32 summation order — the quantization error itself cancels."""
+    tables, codes = _tables_codes(jax.random.key(7), 33, 500, 8, 64)
+    tables = tables * 5.0
+    d_ref, _ = pq_adc_topk_ref(tables, codes, 10, lut_dtype=lut_dtype)
+    d_k, i_k = pq_adc_topk_pallas(tables, codes, 10, block_q=8, block_n=128,
+                                  lut_dtype=lut_dtype)
+    np.testing.assert_allclose(np.asarray(d_k), np.asarray(d_ref), atol=atol)
+    scores = np.asarray(pq_adc_scores_ref(tables, codes, lut_dtype))
+    picked = np.take_along_axis(scores, np.asarray(i_k), axis=1)
+    np.testing.assert_allclose(picked, np.asarray(d_ref), atol=atol)
+
+
+@pytest.mark.parametrize("lut_dtype,atol", [("bf16", 1e-2), ("int8", 1e-3)])
+def test_gather_kernel_quantized_matches_ref(lut_dtype, atol):
+    key = jax.random.key(8)
+    tables = jax.random.uniform(jax.random.fold_in(key, 0), (9, 8, 64)) * 5.0
+    codes = jax.random.randint(jax.random.fold_in(key, 1), (9, 200, 8), 0, 64)
+    base = jax.random.uniform(jax.random.fold_in(key, 2), (9, 200))
+    base = base.at[:, -5:].set(jnp.inf)
+    d_ref, _ = pq_adc_gather_topk_ref(tables, codes, base, 12,
+                                      lut_dtype=lut_dtype)
+    d_k, _ = pq_adc_gather_topk_pallas(tables, codes, base, 12, block_q=4,
+                                       block_n=64, lut_dtype=lut_dtype)
+    np.testing.assert_allclose(np.asarray(d_k), np.asarray(d_ref), atol=atol)
+
+
+def test_int8_scale_round_trip():
+    """quantize -> dequantize must stay within scale/2 per entry, scales are
+    strictly positive, and the int8 grid is fully symmetric (|q| <= 127)."""
+    tables = jax.random.normal(jax.random.key(9), (12, 8, 64)) * 7.0
+    qt, scale = quantize_lut(tables, "int8")
+    assert qt.dtype == jnp.int8
+    assert float(jnp.min(scale)) > 0.0
+    assert int(jnp.max(jnp.abs(qt.astype(jnp.int32)))) <= 127
+    rt = dequantize_lut(qt, scale)
+    err = jnp.abs(rt - tables)
+    assert float(jnp.max(err - scale[:, None, None] / 2)) <= 1e-6
+    # degenerate all-zero table: scale must not collapse to 0/NaN
+    qt0, scale0 = quantize_lut(jnp.zeros((2, 4, 8)), "int8")
+    assert float(jnp.min(scale0)) > 0.0
+    assert not np.isnan(np.asarray(dequantize_lut(qt0, scale0))).any()
+
+
+@pytest.mark.parametrize("lut_dtype", ["bf16", "int8"])
+def test_quantized_scores_within_error_bound(lut_dtype):
+    """|quantized ADC score - f32 ADC score| <= lut_error_bound per query."""
+    tables, codes = _tables_codes(jax.random.key(10), 16, 300, 8, 32)
+    tables = (tables - 0.5) * 9.0
+    s_f32 = np.asarray(pq_adc_scores_ref(tables, codes))
+    s_q = np.asarray(pq_adc_scores_ref(tables, codes, lut_dtype))
+    bound = np.asarray(lut_error_bound(tables, lut_dtype))[:, None]
+    assert (np.abs(s_q - s_f32) <= bound + 1e-5).all()
+
+
+@pytest.mark.parametrize("lut_dtype", ["f32", "bf16", "int8"])
+def test_pq_search_backends_agree_per_lut_dtype(lut_dtype):
+    """jnp and kernel backends are parity oracles at every LUT precision."""
+    key = jax.random.key(11)
+    x = jax.random.normal(jax.random.fold_in(key, 0), (600, 32))
+    q = jax.random.normal(jax.random.fold_in(key, 1), (40, 32))
+    idx = build_pq(jax.random.fold_in(key, 2), x, m_subspaces=4,
+                   n_centroids=64)
+    d_j, _ = pq_search(idx, q, 10, backend="jnp", lut_dtype=lut_dtype)
+    d_k, _ = pq_search(idx, q, 10, backend="kernel", lut_dtype=lut_dtype)
+    np.testing.assert_allclose(np.asarray(d_k), np.asarray(d_j), atol=1e-3)
+
+
+def test_pq_search_rejects_unknown_lut_dtype():
+    key = jax.random.key(12)
+    x = jax.random.normal(key, (200, 16))
+    idx = build_pq(key, x, m_subspaces=4, n_centroids=32)
+    with pytest.raises(ValueError, match="lut_dtype"):
+        pq_search(idx, x[:4], 5, lut_dtype="fp4")
 
 
 def test_pq_search_kernel_backend_matches_jnp():
