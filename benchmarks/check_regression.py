@@ -1,0 +1,94 @@
+"""CI bench regression gate: fail when serving perf or recall regresses.
+
+Compares a freshly generated ``BENCH_serve.json`` (``benchmarks.run --fast
+--json``) against the committed baseline and exits non-zero when, on the
+gated row (batch-256 ivfpq, f32 LUT by default):
+
+* QPS drops by more than ``--max-qps-drop`` (fractional, default 0.20), or
+* recall@10 drops by more than ``--max-recall-drop`` (absolute, 0.02).
+
+A missing gated row in the FRESH file is itself a failure (the bench
+silently lost coverage); a missing row in the BASELINE only warns, so the
+gate can be introduced onto older baselines without a flag day.
+
+The QPS compare is machine-absolute: refresh the committed baseline from a
+CI artifact when runner hardware shifts, or widen ``--max-qps-drop`` if the
+fleet is heterogeneous (recall@10 is hardware-independent either way).
+
+  python benchmarks/check_regression.py BASELINE.json FRESH.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+GATED = dict(index="ivfpq", lut_dtype="f32", batch=256)
+
+
+def find_row(doc: dict, **sel):
+    for row in doc.get("rows", []):
+        if all(row.get(k) == v for k, v in sel.items()):
+            return row
+    return None
+
+
+def check(baseline: dict, fresh: dict, max_qps_drop: float = 0.20,
+          max_recall_drop: float = 0.02):
+    """Returns (failures, report_lines); empty failures == gate passes."""
+    failures, report = [], []
+    base = find_row(baseline, **GATED)
+    new = find_row(fresh, **GATED)
+    sel = " ".join(f"{k}={v}" for k, v in GATED.items())
+    if new is None:
+        failures.append(f"fresh bench is missing the gated row ({sel})")
+        return failures, report
+    if base is None:
+        report.append(f"baseline has no gated row ({sel}); skipping compare")
+        return failures, report
+    qps_drop = 1.0 - new["qps"] / base["qps"] if base["qps"] else 0.0
+    rec_drop = base["recall_at_10"] - new["recall_at_10"]
+    report.append(f"qps    : {base['qps']} -> {new['qps']} "
+                  f"(drop {qps_drop:+.1%}, limit {max_qps_drop:.0%})")
+    report.append(f"recall : {base['recall_at_10']:.4f} -> "
+                  f"{new['recall_at_10']:.4f} (drop {rec_drop:+.4f}, "
+                  f"limit {max_recall_drop})")
+    if qps_drop > max_qps_drop:
+        failures.append(
+            f"QPS regression on {sel}: {base['qps']} -> {new['qps']} "
+            f"({qps_drop:.1%} > {max_qps_drop:.0%})")
+    if rec_drop > max_recall_drop:
+        failures.append(
+            f"recall@10 regression on {sel}: {base['recall_at_10']:.4f} -> "
+            f"{new['recall_at_10']:.4f} (drop {rec_drop:.4f} > "
+            f"{max_recall_drop})")
+    return failures, report
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline", help="committed BENCH_serve.json")
+    ap.add_argument("fresh", help="freshly generated BENCH_serve.json")
+    ap.add_argument("--max-qps-drop", type=float, default=0.20,
+                    help="max fractional QPS drop (default 0.20)")
+    ap.add_argument("--max-recall-drop", type=float, default=0.02,
+                    help="max absolute recall@10 drop (default 0.02)")
+    args = ap.parse_args(argv)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    failures, report = check(baseline, fresh, args.max_qps_drop,
+                             args.max_recall_drop)
+    for line in report:
+        print(line)
+    if failures:
+        for msg in failures:
+            print(f"REGRESSION: {msg}", file=sys.stderr)
+        return 1
+    print("bench regression gate: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

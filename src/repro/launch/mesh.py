@@ -11,9 +11,31 @@ import; real deployments get the same shapes from the TPU topology.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
 
-__all__ = ["make_production_mesh"]
+__all__ = ["make_production_mesh", "make_serving_mesh"]
+
+
+def make_serving_mesh(shards: int | None = None, axis: str = "data"):
+    """1-D data-parallel mesh for sharded serving: the first ``shards``
+    devices (default: all) under a single ``axis`` name.
+
+    CPU dry-runs / CI simulate the fleet with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` set before the
+    first jax device query; real deployments get the shape from the
+    accelerator topology.
+    """
+    devices = jax.devices()
+    if shards is None:
+        shards = len(devices)
+    if shards < 1:
+        raise ValueError("shards must be >= 1")
+    if len(devices) < shards:
+        raise RuntimeError(
+            f"need {shards} devices for a serving mesh, have "
+            f"{len(devices)} — set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={shards} "
+            "before the first jax device use")
+    return jax.make_mesh((shards,), (axis,), devices=devices[:shards])
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -28,5 +50,9 @@ def make_production_mesh(*, multi_pod: bool = False):
             f"need {n} devices for mesh {shape}, have {len(jax.devices())} — "
             "set XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
             "importing jax (see launch/dryrun.py)")
-    return jax.make_mesh(shape, axes, devices=devices,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    try:                              # AxisType landed after jax 0.4.x;
+        from jax.sharding import AxisType   # Auto matches its old default
+        kw = {"axis_types": (AxisType.Auto,) * len(axes)}
+    except ImportError:
+        kw = {}
+    return jax.make_mesh(shape, axes, devices=devices, **kw)

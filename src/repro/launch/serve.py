@@ -3,21 +3,20 @@ serve batched k-NN queries (the paper's deployment shape).
 
   PYTHONPATH=src python -m repro.launch.serve --corpus 20000 --dim 256 \
       --target-dim 32 --batches 5
+
+Sharded serving: ``--shards N`` partitions the engine state over an N-way
+data mesh (``--mesh host`` simulates the N devices on CPU — useful for
+dry-runs; it must run before jax touches its backend, which this launcher
+guarantees by setting XLA_FLAGS before the first jax call).
 """
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
-import jax
 
-from repro.core import MPADConfig
-from repro.data.synthetic import make_clustered
-from repro.search import SearchEngine, ServeConfig, knn_search
-from repro.search.knn import recall_at_k
-
-
-def main():
+def _parse_args():
     ap = argparse.ArgumentParser()
     ap.add_argument("--corpus", type=int, default=20000)
     ap.add_argument("--dim", type=int, default=256)
@@ -38,7 +37,31 @@ def main():
     ap.add_argument("--query-bucket", type=int, default=64,
                     help="min padded query-batch size; ragged batches round "
                          "up to powers of two and share compilations")
-    args = ap.parse_args()
+    ap.add_argument("--shards", type=int, default=0,
+                    help="partition EngineState over this many devices "
+                         "(data-parallel sharded serving; 0 = single-device)")
+    ap.add_argument("--mesh", choices=["device", "host"], default="device",
+                    help="mesh device source: 'device' = the real jax "
+                         "devices; 'host' = simulate --shards CPU devices "
+                         "via --xla_force_host_platform_device_count")
+    return ap.parse_args()
+
+
+def main():
+    args = _parse_args()
+    if args.shards and args.mesh == "host":
+        # must land before jax initializes its backend (first device use)
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={args.shards}")
+
+    import jax
+
+    from repro.core import MPADConfig
+    from repro.data.synthetic import make_clustered
+    from repro.launch.mesh import make_serving_mesh
+    from repro.search import SearchEngine, ServeConfig, knn_search
+    from repro.search.knn import recall_at_k
 
     key = jax.random.key(0)
     corpus, _ = make_clustered(key, args.corpus, 1, args.dim, n_clusters=64,
@@ -55,6 +78,12 @@ def main():
     print(f"index built in {time.time()-t0:.1f}s "
           f"({args.dim}->{args.target_dim} dims, index={args.index}, "
           f"lut={args.lut_dtype})")
+    if args.shards:
+        mesh = make_serving_mesh(args.shards)
+        engine.shard(mesh)
+        print(f"engine sharded over mesh {dict(mesh.shape)} "
+              f"({args.corpus} rows -> ~{-(-args.corpus // args.shards)} "
+              "per shard)")
 
     total, rec_sum = 0.0, 0.0
     for i in range(args.batches):

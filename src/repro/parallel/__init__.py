@@ -1,5 +1,9 @@
-from .sharding import (dp_axes, lm_param_specs, opt_specs, tree_named,
-                       lm_cache_specs, replicate_like)
+from .context import active_mesh, constrain, mesh_context, require_mesh
+from .engine import shard_engine
+from .sharding import (dp_axes, engine_state_specs, lm_param_specs,
+                       opt_specs, tree_named, lm_cache_specs, replicate_like)
 
-__all__ = ["dp_axes", "lm_param_specs", "opt_specs", "tree_named",
-           "lm_cache_specs", "replicate_like"]
+__all__ = ["active_mesh", "constrain", "mesh_context", "require_mesh",
+           "shard_engine", "dp_axes", "engine_state_specs",
+           "lm_param_specs", "opt_specs", "tree_named", "lm_cache_specs",
+           "replicate_like"]

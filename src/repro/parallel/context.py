@@ -9,7 +9,7 @@ from typing import List, Optional
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-__all__ = ["mesh_context", "active_mesh", "constrain"]
+__all__ = ["mesh_context", "active_mesh", "constrain", "require_mesh"]
 
 _ACTIVE: List[Mesh] = []
 
@@ -25,6 +25,20 @@ def mesh_context(mesh: Mesh):
 
 def active_mesh() -> Optional[Mesh]:
     return _ACTIVE[-1] if _ACTIVE else None
+
+
+def require_mesh(what: str = "this operation") -> Mesh:
+    """The active mesh, or a clear error naming the caller.
+
+    For APIs that need a mesh but accept ``mesh=None`` as "use the
+    context's" (e.g. ``SearchEngine.shard()``, ``shard_engine``).
+    """
+    mesh = active_mesh()
+    if mesh is None:
+        raise RuntimeError(
+            f"{what} needs a device mesh: pass mesh= explicitly or activate "
+            "one with repro.parallel.context.mesh_context(...)")
+    return mesh
 
 
 def constrain(x, spec: P):

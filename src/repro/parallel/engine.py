@@ -1,0 +1,94 @@
+"""``shard_engine``: partition a serving ``EngineState`` across a mesh.
+
+The data-parallel layout pass of sharded serving (DESIGN: one shard = one
+slice of the database axis):
+
+* **row-major leaves** — corpus rows, flat scan vectors, plain-PQ code rows
+  — are padded to a device-count multiple and split along dim 0 (pad rows
+  carry global ids >= ``n_real`` and are masked out of every scan);
+* **cell-major leaves** — IVF / IVF-PQ posting lists and the
+  ``codes_cell``/``bias_cell`` mirrors, plus a ``cell_vectors`` mirror
+  built here for IVF-Flat — are padded to per-shard-equal cell counts and
+  split along the cell axis (pad cells are all ``-1`` posting rows, never
+  probed);
+* everything else — MPAD projection, coarse centroids, codebook
+  factorizations — replicates, so the coarse probe and per-query LUTs
+  compute identically on every shard.
+
+Placement is by ``NamedSharding`` from ``engine_state_specs``; the result
+is a ``ShardedEngineState`` ready for ``sharded_search_fn`` /
+``SearchEngine.shard()``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+
+from repro.search.ivf import cell_vectors
+from repro.search.serve import EngineState, ShardedEngineState
+from .context import require_mesh
+from .sharding import engine_state_specs
+
+__all__ = ["shard_engine"]
+
+
+def _pad_dim0(a: Optional[jax.Array], multiple: int, fill=0):
+    """Right-pad dim 0 up to a multiple (per-shard-equal blocks)."""
+    if a is None:
+        return None
+    n = a.shape[0]
+    pad = (-n) % multiple
+    if not pad:
+        return a
+    widths = ((0, pad),) + ((0, 0),) * (a.ndim - 1)
+    return jnp.pad(a, widths, constant_values=fill)
+
+
+def shard_engine(state: EngineState, mesh: Optional[Mesh] = None,
+                 axis: str = "data") -> ShardedEngineState:
+    """Re-lay-out and place ``state`` for serving over the ``axis`` of
+    ``mesh`` (default: the context's active mesh).
+
+    Pure layout — no index rebuild: the same corpus rows, posting lists,
+    and codes end up distributed over the mesh devices, so
+    ``sharded_search_fn`` returns exactly what ``search_fn`` returns on
+    the unsharded state.
+    """
+    if mesh is None:
+        mesh = require_mesh("shard_engine")
+    shards = mesh.shape[axis]
+    n = state.corpus.shape[0]
+    corpus = _pad_dim0(state.corpus, shards)
+    # flat stores reduced = corpus when there is no projection; don't ship
+    # the same rows twice
+    reduced = (None if state.reduced is state.corpus
+               else _pad_dim0(state.reduced, shards))
+    codes = centroids = lists = cell_vecs = codes_cell = bias_cell = None
+    lut_w = cbnorm = None
+    if state.pq is not None:
+        codes = _pad_dim0(jnp.asarray(state.pq.codes, jnp.int32), shards)
+        lut_w, cbnorm = state.pq.lut_w, state.pq.cbnorm
+    if state.ivf is not None:
+        centroids = state.ivf.centroids
+        lists = _pad_dim0(state.ivf.lists, shards, fill=-1)
+        cell_vecs = cell_vectors(lists, state.ivf.vectors)
+    if state.ivfpq is not None:
+        ix = state.ivfpq
+        centroids = ix.centroids
+        lists = _pad_dim0(ix.lists, shards, fill=-1)
+        codes_cell = _pad_dim0(ix.codes_cell, shards)
+        bias_cell = _pad_dim0(ix.bias_cell, shards)
+        lut_w, cbnorm = ix.lut_w, ix.cbnorm
+    sstate = ShardedEngineState(
+        corpus=corpus, proj=state.proj,
+        n_real=jnp.asarray(n, jnp.int32), reduced=reduced, codes=codes,
+        centroids=centroids, lists=lists, cell_vecs=cell_vecs,
+        codes_cell=codes_cell, bias_cell=bias_cell,
+        lut_w=lut_w, cbnorm=cbnorm)
+    specs = engine_state_specs(sstate, axis)
+    return jax.tree.map(
+        lambda a, p: jax.device_put(a, NamedSharding(mesh, p)),
+        sstate, specs)

@@ -22,8 +22,8 @@ from typing import Any
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-__all__ = ["dp_axes", "lm_param_specs", "opt_specs", "tree_named",
-           "lm_cache_specs", "replicate_like"]
+__all__ = ["dp_axes", "engine_state_specs", "lm_param_specs", "opt_specs",
+           "tree_named", "lm_cache_specs", "replicate_like"]
 
 
 def dp_axes(mesh: Mesh):
@@ -39,6 +39,35 @@ def tree_named(mesh: Mesh, spec_tree: Any) -> Any:
 
 def replicate_like(tree: Any) -> Any:
     return jax.tree.map(lambda _: P(), tree)
+
+
+# ------------------------------------------------------------- serving
+
+# ShardedEngineState fields that carry the database axis in dim 0. Row
+# leaves split the corpus by row; cell leaves split the IVF/IVF-PQ posting
+# structures by cell. Everything else (projection, centroids, codebook
+# factorizations, scalars) replicates.
+_ENGINE_DB_SHARDED = frozenset(
+    {"corpus", "reduced", "codes",                   # row-major leaves
+     "lists", "cell_vecs", "codes_cell", "bias_cell"})  # cell-major leaves
+
+
+def engine_state_specs(state, axis: str = "data"):
+    """``ShardedEngineState`` -> matching pytree of PartitionSpecs.
+
+    Duck-typed over the NamedTuple fields so this module stays free of
+    search imports; used both as ``shard_map`` in_specs and for the
+    ``device_put`` placement in ``shard_engine``.
+    """
+    def spec(name, leaf):
+        if leaf is None:
+            return None
+        if name == "proj":
+            return (P(), P())
+        return P(axis) if name in _ENGINE_DB_SHARDED else P()
+
+    return type(state)(
+        **{f: spec(f, getattr(state, f)) for f in state._fields})
 
 
 # -------------------------------------------------------------------- LM

@@ -1,18 +1,23 @@
 """Vector-search substrate: brute-force k-NN, recall metrics, IVF-Flat /
 PQ / IVF-PQ ANN indexes, and the batched serving engine that integrates
 MPAD reduction."""
-from .knn import knn_search, knn_search_blocked, recall_at_k, amk_accuracy
-from .ivf import IVFIndex, build_ivf, ivf_search, posting_lists, probe_cells
+from .knn import (knn_search, knn_search_blocked, masked_topk, recall_at_k,
+                  amk_accuracy)
+from .ivf import (IVFIndex, build_ivf, cell_vectors, ivf_search,
+                  posting_lists, probe_cells)
 from .ivfpq import IVFPQIndex, build_ivfpq, ivfpq_search
 from .pq import PQIndex, build_pq, pq_search, pq_reconstruct
 from .serve import (EngineState, INDEX_KINDS, SearchEngine, ServeConfig,
-                    exact_rerank, search_fn)
+                    ShardedEngineState, exact_rerank, search_fn,
+                    sharded_search_fn)
 
 __all__ = [
-    "knn_search", "knn_search_blocked", "recall_at_k", "amk_accuracy",
-    "IVFIndex", "build_ivf", "ivf_search", "posting_lists", "probe_cells",
+    "knn_search", "knn_search_blocked", "masked_topk", "recall_at_k",
+    "amk_accuracy",
+    "IVFIndex", "build_ivf", "cell_vectors", "ivf_search", "posting_lists",
+    "probe_cells",
     "IVFPQIndex", "build_ivfpq", "ivfpq_search",
     "PQIndex", "build_pq", "pq_search", "pq_reconstruct",
-    "SearchEngine", "ServeConfig", "EngineState", "search_fn",
-    "exact_rerank", "INDEX_KINDS",
+    "SearchEngine", "ServeConfig", "EngineState", "ShardedEngineState",
+    "search_fn", "sharded_search_fn", "exact_rerank", "INDEX_KINDS",
 ]

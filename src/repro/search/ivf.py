@@ -17,8 +17,11 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-__all__ = ["IVFIndex", "build_ivf", "ivf_scan", "ivf_search", "kmeans",
-           "posting_lists", "probe_cells", "sq_dists"]
+from .knn import masked_topk
+
+__all__ = ["IVFIndex", "build_ivf", "cell_vectors", "ivf_local_scan",
+           "ivf_scan", "ivf_search", "kmeans", "posting_lists",
+           "probe_cells", "sq_dists"]
 
 
 def sq_dists(a: jax.Array, b: jax.Array) -> jax.Array:
@@ -54,30 +57,47 @@ def kmeans(key: jax.Array, x: jax.Array, nlist: int, iters: int = 12):
     return cent
 
 
-def posting_lists(assign: jax.Array, nlist: int) -> jax.Array:
+def posting_lists(assign: jax.Array, nlist: int, shards: int = 1) -> jax.Array:
     """Padded-dense posting lists from a cell assignment.
 
-    Returns (nlist, max_cell) int32 vector ids, -1 = pad; rows are cells.
+    Returns (nlist_pad, max_cell) int32 vector ids, -1 = pad; rows are
+    cells. ``shards`` pads the cell axis up to a multiple with empty
+    (all -1) cells so the layout splits into per-shard-equal blocks along
+    the database axis (sharded serving); shards=1 leaves it unchanged.
+    Padded cells are unreachable: the coarse probe only ever emits real
+    cell ids (< nlist).
     """
     counts = jnp.bincount(assign, length=nlist)
     max_cell = int(counts.max())
+    nlist_pad = -(-nlist // shards) * shards
     # stable bucket layout: sort ids by (cell, id); row-major fill
     order = jnp.argsort(assign, stable=True)
     sorted_cells = assign[order]
     # position of each sorted element within its cell
     pos = jnp.arange(order.shape[0]) - jnp.searchsorted(
         sorted_cells, sorted_cells, side="left")
-    lists = jnp.full((nlist, max_cell), -1, jnp.int32)
+    lists = jnp.full((nlist_pad, max_cell), -1, jnp.int32)
     return lists.at[sorted_cells, pos].set(order.astype(jnp.int32))
 
 
 def build_ivf(key: jax.Array, vectors: jax.Array, nlist: int,
-              kmeans_iters: int = 12) -> IVFIndex:
+              kmeans_iters: int = 12, shards: int = 1) -> IVFIndex:
     vectors = jnp.asarray(vectors, jnp.float32)
     cent = kmeans(key, vectors, nlist, kmeans_iters)
     assign = jnp.argmin(sq_dists(vectors, cent), axis=1)  # (N,)
-    lists = posting_lists(assign, nlist)
+    lists = posting_lists(assign, nlist, shards)
     return IVFIndex(centroids=cent, lists=lists, vectors=vectors)
+
+
+def cell_vectors(lists: jax.Array, vectors: jax.Array) -> jax.Array:
+    """Cell-major mirror of the stored vectors: (nlist, max_cell, d).
+
+    Posting pads (-1) become zero rows. Probe-time access turns into nprobe
+    contiguous row-block gathers, and — like ``codes_cell`` in IVF-PQ — the
+    cell axis is the database axis sharded serving partitions.
+    """
+    cv = vectors[jnp.maximum(lists, 0)]
+    return jnp.where((lists >= 0)[..., None], cv, 0.0)
 
 
 def probe_cells(centroids: jax.Array, lists: jax.Array, q: jax.Array,
@@ -114,6 +134,36 @@ def ivf_scan(index: IVFIndex, q: jax.Array, k: int, nprobe: int = 8):
     neg, sel = jax.lax.top_k(-d2, k)
     ids = jnp.take_along_axis(cand, sel, axis=1)
     return jnp.sqrt(jnp.maximum(-neg, 0.0)), ids
+
+
+def ivf_local_scan(centroids: jax.Array, lists_loc: jax.Array,
+                   cell_vecs_loc: jax.Array, q: jax.Array, n_cand: int,
+                   nprobe: int, axis: str):
+    """Shard-local IVF probe + scan (a ``shard_map`` body of sharded serving).
+
+    The coarse probe runs on the replicated ``centroids`` — identical on
+    every shard, so it equals the single-device probe exactly — then only
+    the probed cells this shard owns (rows of ``lists_loc``/
+    ``cell_vecs_loc``, offset by ``axis_index * nlist_local`` along the
+    cell axis) are scanned. Returns (d2 (Q, n_cand), global ids (Q,
+    n_cand)); non-local or padded slots are (+inf, -1) and are supplied by
+    the shard that owns them.
+    """
+    q = jnp.asarray(q, jnp.float32)
+    cd2 = sq_dists(q, centroids)                          # (Q, nlist)
+    _, probe = jax.lax.top_k(-cd2, nprobe)                # global cell ids
+    nl_loc = lists_loc.shape[0]
+    coff = jax.lax.axis_index(axis) * nl_loc
+    lp = probe - coff
+    own = (lp >= 0) & (lp < nl_loc)                       # (Q, nprobe)
+    lpc = jnp.clip(lp, 0, nl_loc - 1)
+    cand = jnp.where(own[:, :, None], lists_loc[lpc], -1)
+    cv = cell_vecs_loc[lpc]                               # (Q, P, mc, d)
+    d2 = jnp.sum((cv - q[:, None, None, :]) ** 2, axis=-1)
+    nq = q.shape[0]
+    cand = cand.reshape(nq, -1)
+    d2 = jnp.where(cand >= 0, d2.reshape(nq, -1), jnp.inf)
+    return masked_topk(d2, cand, n_cand)
 
 
 @functools.partial(jax.jit, static_argnames=("k", "nprobe"))

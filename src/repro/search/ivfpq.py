@@ -33,7 +33,8 @@ from repro.kernels.pq_adc.ref import pq_adc_gather_scores_ref
 from .ivf import kmeans, posting_lists, probe_cells, sq_dists
 from .pq import _check_adc_args, build_pq
 
-__all__ = ["IVFPQIndex", "build_ivfpq", "ivfpq_scan", "ivfpq_search"]
+__all__ = ["IVFPQIndex", "build_ivfpq", "ivfpq_local_scan", "ivfpq_scan",
+           "ivfpq_search"]
 
 
 class IVFPQIndex(NamedTuple):
@@ -52,13 +53,19 @@ class IVFPQIndex(NamedTuple):
 
 def build_ivfpq(key: jax.Array, vectors: jax.Array, nlist: int,
                 m_subspaces: int = 8, n_centroids: int = 256,
-                kmeans_iters: int = 12, pq_iters: int = 10) -> IVFPQIndex:
-    """Coarse k-means, then per-subspace codebooks on the residuals."""
+                kmeans_iters: int = 12, pq_iters: int = 10,
+                shards: int = 1) -> IVFPQIndex:
+    """Coarse k-means, then per-subspace codebooks on the residuals.
+
+    ``shards`` pads the cell axis of the cell-major serving mirrors
+    (``lists``/``codes_cell``/``bias_cell``) to per-shard-equal shapes
+    (see ``posting_lists``); quantization and scan results are unchanged.
+    """
     vectors = jnp.asarray(vectors, jnp.float32)
     n, d = vectors.shape
     cent = kmeans(key, vectors, nlist, kmeans_iters)
     assign = jnp.argmin(sq_dists(vectors, cent), axis=1)  # (N,)
-    lists = posting_lists(assign, nlist)
+    lists = posting_lists(assign, nlist, shards)
     residuals = vectors - cent[assign]
     pq = build_pq(jax.random.fold_in(key, 7), residuals,
                   m_subspaces, n_centroids, pq_iters)
@@ -125,6 +132,65 @@ def ivfpq_scan(index: IVFPQIndex, q: jax.Array, k: int, nprobe: int = 8,
                     jnp.take_along_axis(cand, jnp.maximum(sel, 0), axis=1),
                     -1)
     return jnp.sqrt(jnp.maximum(d2, 0.0)), ids
+
+
+def ivfpq_local_scan(centroids: jax.Array, lists_loc: jax.Array,
+                     codes_cell_loc: jax.Array, bias_cell_loc: jax.Array,
+                     lut_w: jax.Array, cbnorm: jax.Array, q: jax.Array,
+                     n_cand: int, nprobe: int, axis: str,
+                     backend: str = "jnp", interpret: bool = True,
+                     lut_dtype: str = "f32"):
+    """Shard-local IVF-PQ probe + ADC scan (a ``shard_map`` body of sharded
+    serving).
+
+    The coarse probe and the per-query residual LUT both run on replicated
+    inputs (centroids, ``lut_w``/``cbnorm``) so they are identical on every
+    shard; only the probed cells this shard owns (rows of the cell-major
+    mirrors, offset by ``axis_index * nlist_local``) are ADC-scored — the
+    ``base`` of non-local or padded slots is +inf, which masks them through
+    either scoring backend. Returns (d2 (Q, n_cand), global ids (Q,
+    n_cand)) with (+inf, -1) on masked slots.
+    """
+    _check_adc_args(backend, lut_dtype)
+    q = jnp.asarray(q, jnp.float32)
+    nq = q.shape[0]
+    m, kc = cbnorm.shape
+    cd2 = sq_dists(q, centroids)                          # (Q, nlist)
+    _, probe = jax.lax.top_k(-cd2, nprobe)                # global cell ids
+    cd2p = jnp.take_along_axis(cd2, probe, axis=1)
+    tables = cbnorm[None] + (q @ lut_w).reshape(nq, m, kc)
+    nl_loc = lists_loc.shape[0]
+    coff = jax.lax.axis_index(axis) * nl_loc
+    lp = probe - coff
+    own = (lp >= 0) & (lp < nl_loc)
+    lpc = jnp.clip(lp, 0, nl_loc - 1)
+    cand = jnp.where(own[:, :, None], lists_loc[lpc], -1).reshape(nq, -1)
+    ccodes = codes_cell_loc[lpc].reshape(nq, -1, m).astype(jnp.int32)
+    base = (cd2p[:, :, None] + bias_cell_loc[lpc]).reshape(nq, -1)
+    base = jnp.where(cand >= 0, base, jnp.inf)
+    if lut_dtype != "f32":
+        tables, offs = center_lut(tables)
+        base = base + offs[:, None]                       # inf stays inf
+    k_eff = min(n_cand, cand.shape[1])
+    if backend == "kernel":
+        from repro.kernels.pq_adc import pq_adc_gather_topk_pallas
+        d2, sel = pq_adc_gather_topk_pallas(tables, ccodes, base, k_eff,
+                                            interpret=interpret,
+                                            lut_dtype=lut_dtype)
+    else:
+        adc = pq_adc_gather_scores_ref(tables, ccodes, base, lut_dtype)
+        neg, sel = jax.lax.top_k(-adc, k_eff)
+        d2 = -neg
+    ids = jnp.where(sel >= 0,
+                    jnp.take_along_axis(cand, jnp.maximum(sel, 0), axis=1),
+                    -1)
+    ids = jnp.where(jnp.isinf(d2), -1, ids)
+    if k_eff < n_cand:
+        d2 = jnp.pad(d2, ((0, 0), (0, n_cand - k_eff)),
+                     constant_values=jnp.inf)
+        ids = jnp.pad(ids, ((0, 0), (0, n_cand - k_eff)),
+                      constant_values=-1)
+    return d2, ids
 
 
 @functools.partial(jax.jit, static_argnames=("k", "nprobe", "backend",

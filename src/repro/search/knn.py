@@ -12,8 +12,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
-__all__ = ["knn_scan", "knn_search", "knn_search_blocked", "recall_at_k",
-           "amk_accuracy"]
+__all__ = ["knn_scan", "knn_search", "knn_search_blocked", "masked_topk",
+           "recall_at_k", "amk_accuracy"]
 
 
 def _sq_dists(q: jax.Array, x: jax.Array) -> jax.Array:
@@ -36,6 +36,28 @@ def knn_scan(q: jax.Array, x: jax.Array, k: int):
                       constant_values=-jnp.inf)
         idx = jnp.pad(idx, ((0, 0), (0, k - k_eff)), constant_values=-1)
     return jnp.sqrt(jnp.maximum(-neg, 0.0)), idx
+
+
+def masked_topk(d2: jax.Array, ids: jax.Array, k: int):
+    """Row-wise top-k of masked distances carrying payload ids.
+
+    ``d2`` (Q, C) with +inf marking invalid entries; ``ids`` (Q, C) the
+    payload (e.g. global row ids) returned for the surviving slots. Invalid
+    or missing slots come back as (+inf, -1); tolerates k > C by
+    right-padding — the shared pad convention of every scan in this package.
+    The building block of the per-shard local scans in sharded serving.
+    """
+    k_eff = min(k, d2.shape[1])
+    neg, sel = jax.lax.top_k(-d2, k_eff)
+    out_i = jnp.where(jnp.isneginf(neg), -1,
+                      jnp.take_along_axis(ids, sel, axis=1))
+    out_d = -neg
+    if k_eff < k:
+        out_d = jnp.pad(out_d, ((0, 0), (0, k - k_eff)),
+                        constant_values=jnp.inf)
+        out_i = jnp.pad(out_i, ((0, 0), (0, k - k_eff)),
+                        constant_values=-1)
+    return out_d, out_i
 
 
 @functools.partial(jax.jit, static_argnames=("k",))

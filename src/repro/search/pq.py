@@ -19,9 +19,10 @@ import jax.numpy as jnp
 from repro.kernels.pq_adc.lut import LUT_DTYPES, center_lut
 from repro.kernels.pq_adc.ref import pq_adc_scores_ref
 from .ivf import kmeans, sq_dists
+from .knn import masked_topk
 
-__all__ = ["PQIndex", "build_pq", "lut_projection", "pq_scan", "pq_search",
-           "pq_reconstruct"]
+__all__ = ["PQIndex", "build_pq", "lut_projection", "pq_local_scan",
+           "pq_scan", "pq_search", "pq_reconstruct"]
 
 
 class PQIndex(NamedTuple):
@@ -116,6 +117,45 @@ def pq_scan(index: PQIndex, q: jax.Array, k: int, backend: str = "jnp",
         neg, ids = jax.lax.top_k(-scores, k)
         d2 = -neg
     return jnp.sqrt(jnp.maximum(d2 + const[:, None], 0.0)), ids
+
+
+def pq_local_scan(lut_w: jax.Array, cbnorm: jax.Array, codes_loc: jax.Array,
+                  q: jax.Array, n_cand: int, n_real: jax.Array, axis: str,
+                  backend: str = "jnp", interpret: bool = True,
+                  lut_dtype: str = "f32", slack: int = 0):
+    """Shard-local plain-PQ ADC scan (a ``shard_map`` body of sharded
+    serving): score this shard's row block of the code matrix and return
+    **global** row ids via the shard offset.
+
+    ``codes_loc`` is a (n_loc, M) block of the row-padded code matrix; rows
+    whose global id (``axis_index * n_loc + row``) lands at or beyond
+    ``n_real`` are shard padding and masked to (+inf, -1). On the kernel
+    backend the fused scan cannot see the validity mask, so it over-fetches
+    ``slack`` extra rows (>= the pad-row count, i.e. shards - 1) and drops
+    pads post-hoc — see ``pq_adc_topk_global``. The per-query table is
+    quantized exactly as on the single-device path; the centered constant
+    is per-query and therefore ranking-invariant, so it is dropped here
+    (final distances come from the exact re-rank).
+    """
+    _check_adc_args(backend, lut_dtype)
+    q = jnp.asarray(q, jnp.float32)
+    nq = q.shape[0]
+    m, kc = cbnorm.shape
+    tables = cbnorm[None] + (q @ lut_w).reshape(nq, m, kc)
+    if lut_dtype != "f32":
+        tables, _ = center_lut(tables)
+    n_loc = codes_loc.shape[0]
+    off = jax.lax.axis_index(axis) * n_loc
+    if backend == "kernel":
+        from repro.kernels.pq_adc.ops import pq_adc_topk_global
+        return pq_adc_topk_global(tables, codes_loc, n_cand, row_offset=off,
+                                  n_valid=n_real, slack=slack,
+                                  interpret=interpret, lut_dtype=lut_dtype)
+    scores = pq_adc_scores_ref(tables, codes_loc, lut_dtype)
+    gid = off + jnp.arange(n_loc)
+    scores = jnp.where(gid[None, :] < n_real, scores, jnp.inf)
+    return masked_topk(scores, jnp.broadcast_to(gid[None, :], scores.shape),
+                       n_cand)
 
 
 @functools.partial(jax.jit,

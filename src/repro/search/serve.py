@@ -28,9 +28,34 @@ The engine is split into a **pytree of arrays** and a **pure function**:
 owns a per-engine ``jax.jit(search_fn)`` whose cache is keyed by
 ``(index kind + knobs, k, query bucket)``, and pads incoming query batches
 up to power-of-two buckets (floored at ``ServeConfig.query_bucket``) so
-ragged traffic reuses compilations — batch sizes {1, 7, 64} all run the one
-program compiled for bucket 64. ``SearchEngine.compile_count`` exposes the
-cache size for regression tests.
+ragged traffic reuses compilations — batch sizes {9, 33, 64} all run the
+one program compiled for bucket 64. Batches of at most
+``ServeConfig.small_batch`` (default 8) take their own power-of-two bucket
+instead of the floor, so a single query runs a compute-proportional scan
+rather than a 64-wide one (the small-batch latency cliff).
+``SearchEngine.compile_count`` exposes the cache size for regression tests.
+
+Sharded serving
+---------------
+
+``shard_engine(state, mesh, axis="data")`` (``repro.parallel.engine``)
+partitions the state pytree along the **database axis** of a device mesh:
+corpus rows, flat scan vectors, and plain-PQ codes split by row; IVF /
+IVF-PQ posting structures (``lists`` plus the cell-major
+``codes_cell``/``bias_cell``/``cell_vectors`` mirrors) split by cell; the
+MPAD projection, coarse centroids, and PQ codebooks replicate. Database
+leaves are padded to per-shard-equal shapes (pad rows/cells are masked out
+of every scan). ``sharded_search_fn`` then runs the same fused pipeline
+under ``shard_map``: each shard probes (replicated math — identical on
+every shard), scans only the rows/cells it owns, keeps a local top-n_cand
+with **global** row ids via its shard offset, and the shards finish with an
+``all_gather`` + global top-k merge and a masked exact re-rank in which
+each shard gathers only the winning candidates it owns (``psum``-free: a
+``pmin`` combines the per-shard masked distances). The merge keeps the
+exact candidate set of the single-device program, so sharded and
+single-device serving return identical neighbors; the single-device path
+itself is untouched. The jit cache keys on the mesh (shape + devices), so
+resizing the fleet recompiles exactly once per shape.
 
 Index layouts (``ServeConfig.index``):
 
@@ -46,20 +71,24 @@ ADC lookup tables of the pq/ivfpq scans (see ``repro.kernels.pq_adc.lut``).
 from __future__ import annotations
 
 import dataclasses
+import functools
 import warnings
 from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import MPADConfig, MPADResult, fit_mpad
 from repro.kernels.pq_adc.lut import LUT_DTYPES
-from .ivf import IVFIndex, build_ivf, ivf_scan
-from .ivfpq import IVFPQIndex, build_ivfpq, ivfpq_scan
-from .knn import knn_scan
-from .pq import PQIndex, build_pq, pq_scan
+from .ivf import IVFIndex, build_ivf, ivf_local_scan, ivf_scan
+from .ivfpq import IVFPQIndex, build_ivfpq, ivfpq_local_scan, ivfpq_scan
+from .knn import _sq_dists, knn_scan, masked_topk
+from .pq import PQIndex, build_pq, pq_local_scan, pq_scan
 
-__all__ = ["ServeConfig", "SearchEngine", "EngineState", "search_fn",
+__all__ = ["ServeConfig", "SearchEngine", "EngineState",
+           "ShardedEngineState", "search_fn", "sharded_search_fn",
            "exact_rerank", "INDEX_KINDS"]
 
 INDEX_KINDS = ("flat", "ivf", "pq", "ivfpq")
@@ -83,6 +112,9 @@ class ServeConfig:
     lut_dtype: str = "f32"               # ADC LUT precision: f32 | bf16 | int8
     query_bucket: int = 64               # min padded query-batch size; ragged
     #                                      batches round up to powers of two
+    small_batch: int = 8                 # batches <= this take their own
+    #                                      power-of-two bucket instead of the
+    #                                      query_bucket floor (0 disables)
     mpad: Optional[MPADConfig] = None    # defaults derived from target_dim
     fit_sample: int = 2048               # rows used to fit the projection
     seed: int = 0
@@ -125,6 +157,9 @@ class ServeConfig:
                 f"{LUT_DTYPES}")
         if self.query_bucket < 1:
             raise ValueError("query_bucket must be >= 1")
+        if self.small_batch < 0:
+            raise ValueError("small_batch must be >= 0 (0 disables the "
+                             "small-batch bucket floor path)")
 
 
 class EngineState(NamedTuple):
@@ -142,6 +177,44 @@ class EngineState(NamedTuple):
     ivfpq: Optional[IVFPQIndex]
 
 
+class ShardedEngineState(NamedTuple):
+    """``EngineState`` re-laid-out for data-parallel serving on a mesh.
+
+    Database-axis leaves (corpus rows, flat vectors, PQ code rows, and the
+    cell-major IVF / IVF-PQ posting structures) are padded to
+    per-shard-equal shapes and sharded along dim 0; the MPAD projection,
+    coarse centroids, and codebook factorizations replicate. Built by
+    ``repro.parallel.engine.shard_engine``; consumed by
+    ``sharded_search_fn``. ``n_real`` is the unpadded corpus size — rows
+    at or beyond it are shard padding, masked out of every scan.
+    """
+    corpus: jax.Array                              # (N_pad, D) row-sharded
+    proj: Optional[Tuple[jax.Array, jax.Array]]    # replicated (matrix, mean)
+    n_real: jax.Array                              # () int32 replicated
+    reduced: Optional[jax.Array]                   # (N_pad, m) row-sharded
+    codes: Optional[jax.Array]                     # (N_pad, M) row-sharded
+    centroids: Optional[jax.Array]                 # (nlist, d) replicated
+    lists: Optional[jax.Array]                     # (nlist_pad, mc) cell-shd
+    cell_vecs: Optional[jax.Array]                 # (nlist_pad, mc, d) "
+    codes_cell: Optional[jax.Array]                # (nlist_pad, mc, M) "
+    bias_cell: Optional[jax.Array]                 # (nlist_pad, mc) "
+    lut_w: Optional[jax.Array]                     # (d, M*K) replicated
+    cbnorm: Optional[jax.Array]                    # (M, K) replicated
+
+
+def _dedupe_candidates(cand: jax.Array):
+    """Collapse duplicate candidate ids to -1: sort (pads sort first) +
+    neighbor compare. Returns (cand sorted/deduped, valid mask). Shared by
+    the single-device and sharded re-ranks — their parity depends on running
+    the identical prologue."""
+    cand = jnp.sort(cand, axis=1)                        # pads (-1) sort first
+    dup = jnp.concatenate(
+        [jnp.zeros_like(cand[:, :1], bool), cand[:, 1:] == cand[:, :-1]],
+        axis=1)
+    cand = jnp.where(dup, -1, cand)
+    return cand, cand >= 0
+
+
 def exact_rerank(queries: jax.Array, corpus: jax.Array, cand: jax.Array,
                  k: int):
     """Re-score candidate ids in the original space; top-k of the survivors.
@@ -151,12 +224,7 @@ def exact_rerank(queries: jax.Array, corpus: jax.Array, cand: jax.Array,
     compare), then a single masked gather pulls each surviving row once and
     pads/dups are held out of the top-k with +inf.
     """
-    cand = jnp.sort(cand, axis=1)                        # pads (-1) sort first
-    dup = jnp.concatenate(
-        [jnp.zeros_like(cand[:, :1], bool), cand[:, 1:] == cand[:, :-1]],
-        axis=1)
-    cand = jnp.where(dup, -1, cand)
-    valid = cand >= 0
+    cand, valid = _dedupe_candidates(cand)
     cv = jnp.take(corpus, jnp.where(valid, cand, 0), axis=0)   # (Q, C, D)
     d2 = jnp.sum((cv - queries[:, None, :]) ** 2, axis=-1)
     d2 = jnp.where(valid, d2, jnp.inf)
@@ -202,9 +270,114 @@ def search_fn(state: EngineState, queries: jax.Array, k: int, *,
     return exact_rerank(queries, state.corpus, cand, k)
 
 
-def _bucket(nq: int, floor: int) -> int:
-    """Smallest power-of-two >= nq, floored at ``floor``."""
-    return max(floor, 1 << max(nq - 1, 0).bit_length())
+# --- sharded serving (shard_map over a database-axis mesh) -------------------
+
+def _flat_local_topk(qr: jax.Array, x_loc: jax.Array, n_real: jax.Array,
+                     n_cand: int, axis: str):
+    """Shard-local exact scan over this shard's row block of the (reduced)
+    corpus; shard-pad rows (global id >= n_real) mask to (+inf, -1).
+    Distances come from the same ``_sq_dists`` as the single-device
+    ``knn_scan`` so the two paths rank identically."""
+    n_loc = x_loc.shape[0]
+    off = jax.lax.axis_index(axis) * n_loc
+    d2 = _sq_dists(qr, x_loc)
+    gid = off + jnp.arange(n_loc)
+    d2 = jnp.where(gid[None, :] < n_real, d2, jnp.inf)
+    return masked_topk(d2, jnp.broadcast_to(gid[None, :], d2.shape), n_cand)
+
+
+def _sharded_rerank(queries: jax.Array, corpus_loc: jax.Array,
+                    cand: jax.Array, k: int, axis: str):
+    """``exact_rerank`` with the corpus row-sharded: the same sort + dedupe
+    runs replicated, then each shard gathers and scores only the candidates
+    it owns and a ``pmin`` over the mesh axis assembles the full exact
+    distance row (every candidate is owned by exactly one shard) — only the
+    k winners' rows are ever touched on any device."""
+    cand, valid = _dedupe_candidates(cand)
+    n_loc = corpus_loc.shape[0]
+    off = jax.lax.axis_index(axis) * n_loc
+    local = cand - off
+    own = valid & (local >= 0) & (local < n_loc)
+    cv = jnp.take(corpus_loc, jnp.clip(local, 0, n_loc - 1), axis=0)
+    d2 = jnp.sum((cv - queries[:, None, :]) ** 2, axis=-1)
+    d2 = jnp.where(own, d2, jnp.inf)
+    d2 = jax.lax.pmin(d2, axis)                          # (Q, C) replicated
+    neg, sel = jax.lax.top_k(-d2, k)
+    ids = jnp.take_along_axis(cand, sel, axis=1)
+    return jnp.sqrt(jnp.maximum(-neg, 0.0)), ids
+
+
+def _sharded_core(sstate: ShardedEngineState, queries: jax.Array, *, k: int,
+                  index: str, nprobe: int, rerank: int, backend: str,
+                  interpret: bool, lut_dtype: str, axis: str, slack: int):
+    """The shard_map body: the full per-shard pipeline + distributed merge."""
+    queries = jnp.asarray(queries, jnp.float32)
+    if sstate.proj is not None:
+        matrix, mean = sstate.proj
+        qr = (queries - mean) @ matrix.T
+    else:
+        qr = queries
+    approximate = sstate.proj is not None or index in ("pq", "ivfpq")
+    n_cand = max(k, rerank) if approximate else k
+    if index == "ivf":
+        d2, cand = ivf_local_scan(sstate.centroids, sstate.lists,
+                                  sstate.cell_vecs, qr, n_cand, nprobe, axis)
+    elif index == "pq":
+        d2, cand = pq_local_scan(sstate.lut_w, sstate.cbnorm, sstate.codes,
+                                 qr, n_cand, sstate.n_real, axis,
+                                 backend=backend, interpret=interpret,
+                                 lut_dtype=lut_dtype, slack=slack)
+    elif index == "ivfpq":
+        d2, cand = ivfpq_local_scan(sstate.centroids, sstate.lists,
+                                    sstate.codes_cell, sstate.bias_cell,
+                                    sstate.lut_w, sstate.cbnorm, qr, n_cand,
+                                    nprobe, axis, backend=backend,
+                                    interpret=interpret, lut_dtype=lut_dtype)
+    else:
+        x_loc = sstate.reduced if sstate.reduced is not None else sstate.corpus
+        d2, cand = _flat_local_topk(qr, x_loc, sstate.n_real, n_cand, axis)
+    # distributed merge: every shard's local top-n_cand is a superset of the
+    # global top-n_cand members it owns, so the merged set equals the
+    # single-device candidate set exactly
+    d2g = jax.lax.all_gather(d2, axis, axis=1, tiled=True)   # (Q, S*n_cand)
+    idg = jax.lax.all_gather(cand, axis, axis=1, tiled=True)
+    neg, sel = jax.lax.top_k(-d2g, n_cand)
+    merged = jnp.take_along_axis(idg, sel, axis=1)
+    merged = jnp.where(jnp.isneginf(neg), -1, merged)
+    return _sharded_rerank(queries, sstate.corpus, merged, k, axis)
+
+
+def sharded_search_fn(sstate: ShardedEngineState, queries: jax.Array, k: int,
+                      *, mesh: Mesh, axis: str = "data", index: str = "flat",
+                      nprobe: int = 8, rerank: int = 64, backend: str = "jnp",
+                      interpret: bool = True, lut_dtype: str = "f32"):
+    """``search_fn`` partitioned over the ``axis`` of ``mesh``.
+
+    Same contract and — by construction of the distributed merge — the same
+    results as the single-device ``search_fn`` on the unsharded state.
+    Jit with ``mesh``/``axis`` static (``Mesh`` hashes by shape + devices,
+    which is exactly what the compile cache must key on).
+    """
+    from repro.parallel.sharding import engine_state_specs
+    specs = engine_state_specs(sstate, axis)
+    core = functools.partial(
+        _sharded_core, k=k, index=index, nprobe=nprobe, rerank=rerank,
+        backend=backend, interpret=interpret, lut_dtype=lut_dtype, axis=axis,
+        slack=mesh.shape[axis] - 1)
+    f = shard_map(core, mesh=mesh, in_specs=(specs, P()),
+                  out_specs=(P(), P()), check_rep=False)
+    return f(sstate, queries)
+
+
+def _bucket(nq: int, floor: int, small: int = 0) -> int:
+    """Smallest power-of-two >= nq, floored at ``floor`` — except batches of
+    at most ``small``, which take their own power-of-two bucket so tiny
+    batches run a compute-proportional program instead of padding to the
+    floor (the small-batch latency cliff; ``small=0`` disables)."""
+    pow2 = 1 << max(nq - 1, 0).bit_length()
+    if 0 < nq <= small:
+        return pow2
+    return max(floor, pow2)
 
 
 class SearchEngine:
@@ -254,6 +427,13 @@ class SearchEngine:
             reduced=reduced if config.index == "flat" else None,
             ivf=ivf, pq=pq, ivfpq=ivfpq)
         self._reduced = reduced      # back-compat view for every index kind
+        self.last_bucket: Optional[int] = None   # padded size of the last
+        #                                          served batch (shape pin
+        #                                          for latency tests)
+        self.sharded_state: Optional[ShardedEngineState] = None
+        self._mesh: Optional[Mesh] = None
+        self._shard_axis = "data"
+        self._sharded_program = None
         # engine-owned jit: a fresh closure gives this engine its own
         # compilation cache (jax shares caches for identical function
         # objects), keyed by (statics, query bucket)
@@ -285,14 +465,46 @@ class SearchEngine:
 
     @property
     def compile_count(self) -> int:
-        """Number of compiled (statics, bucket) variants this engine holds."""
+        """Number of compiled (statics, bucket) variants this engine holds
+        (single-device + sharded programs combined)."""
         try:
-            return int(self._program._cache_size())
+            n = int(self._program._cache_size())
+            if self._sharded_program is not None:
+                n += int(self._sharded_program._cache_size())
+            return n
         except AttributeError as e:     # private jax hook; fail loudly if
             raise RuntimeError(          # an unpinned jax drops it
                 "jax no longer exposes PjitFunction._cache_size(); "
                 "SearchEngine.compile_count needs a replacement hook"
             ) from e
+
+    def shard(self, mesh: Optional[Mesh] = None, axis: str = "data"):
+        """Partition the engine over the ``axis`` of ``mesh`` (default: the
+        mesh activated by ``repro.parallel.context.mesh_context``).
+
+        Subsequent ``search`` calls route through ``sharded_search_fn`` —
+        same results, database split across the mesh devices. Returns
+        ``self`` for chaining. Re-call with a different mesh to re-shard.
+
+        Memory note: the dense single-device ``self.state`` stays alive
+        (it backs re-sharding, the back-compat views, and switching back
+        via ``sharded_state = None``), so sharding temporarily holds both
+        copies; at corpus scales where that matters, build -> shard ->
+        drop the dense leaves yourself (donation hooks are a ROADMAP item).
+        """
+        from repro.parallel.engine import shard_engine
+        if mesh is None:
+            from repro.parallel.context import require_mesh
+            mesh = require_mesh("SearchEngine.shard()")
+        self.sharded_state = shard_engine(self.state, mesh, axis=axis)
+        self._mesh, self._shard_axis = mesh, axis
+        if self._sharded_program is None:
+            def _engine_sharded_fn(sstate, queries, k, **kw):
+                return sharded_search_fn(sstate, queries, k, **kw)
+            self._sharded_program = jax.jit(
+                _engine_sharded_fn,
+                static_argnames=_SEARCH_STATICS + ("mesh", "axis"))
+        return self
 
     def search(self, queries: jax.Array, k: int):
         """Returns (dists (Q,k), ids (Q,k)); distances in the original space
@@ -305,18 +517,24 @@ class SearchEngine:
         cfg = self.config
         queries = jnp.asarray(queries, jnp.float32)
         nq = queries.shape[0]
-        bucket = _bucket(nq, cfg.query_bucket)
+        bucket = _bucket(nq, cfg.query_bucket, cfg.small_batch)
+        self.last_bucket = bucket
         if bucket != nq:
             queries = jnp.pad(queries, ((0, bucket - nq), (0, 0)))
         # normalize knobs the index kind can't observe so flipping them
         # (e.g. lut_dtype on a flat engine) never re-keys the jit cache
         probed = cfg.index in ("ivf", "ivfpq")
         coded = cfg.index in ("pq", "ivfpq")
-        d, ids = self._program(
-            self.state, queries, k, index=cfg.index,
-            nprobe=cfg.nprobe if probed else 0,
-            rerank=cfg.rerank,
-            backend=cfg.pq_backend if coded else "jnp",
-            interpret=cfg.pq_interpret if coded else True,
-            lut_dtype=cfg.lut_dtype if coded else "f32")
+        kw = dict(index=cfg.index,
+                  nprobe=cfg.nprobe if probed else 0,
+                  rerank=cfg.rerank,
+                  backend=cfg.pq_backend if coded else "jnp",
+                  interpret=cfg.pq_interpret if coded else True,
+                  lut_dtype=cfg.lut_dtype if coded else "f32")
+        if self.sharded_state is not None:
+            d, ids = self._sharded_program(
+                self.sharded_state, queries, k, mesh=self._mesh,
+                axis=self._shard_axis, **kw)
+        else:
+            d, ids = self._program(self.state, queries, k, **kw)
         return d[:nq], ids[:nq]

@@ -1,0 +1,47 @@
+"""The CI bench regression gate (benchmarks/check_regression.py): QPS /
+recall thresholds on the gated serving row, and its missing-row policy."""
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+from benchmarks.check_regression import check, find_row  # noqa: E402
+
+
+def _doc(qps=8000, recall=0.93):
+    return {"rows": [
+        {"index": "ivfpq", "lut_dtype": "int8", "batch": 256,
+         "qps": 7000, "recall_at_10": 0.92},
+        {"index": "ivfpq", "lut_dtype": "f32", "batch": 256,
+         "qps": qps, "recall_at_10": recall},
+    ]}
+
+
+def test_find_row_selects_the_gated_cell():
+    row = find_row(_doc(), index="ivfpq", lut_dtype="f32", batch=256)
+    assert row["qps"] == 8000
+
+
+def test_gate_passes_within_thresholds():
+    failures, _ = check(_doc(), _doc(qps=6500, recall=0.915))
+    assert not failures          # -18.75% qps, -0.015 recall: inside limits
+
+
+def test_gate_fails_on_qps_drop():
+    failures, _ = check(_doc(), _doc(qps=6000))          # -25%
+    assert any("QPS" in f for f in failures)
+
+
+def test_gate_fails_on_recall_drop():
+    failures, _ = check(_doc(), _doc(recall=0.90))       # -0.03
+    assert any("recall" in f for f in failures)
+
+
+def test_gate_fails_when_fresh_row_missing():
+    failures, _ = check(_doc(), {"rows": []})
+    assert any("missing" in f for f in failures)
+
+
+def test_gate_tolerates_missing_baseline_row():
+    failures, report = check({"rows": []}, _doc())
+    assert not failures and any("skipping" in r for r in report)

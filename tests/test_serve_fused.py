@@ -31,14 +31,17 @@ def _engine(**kw):
 # --- compile-count regression ------------------------------------------------
 
 def test_single_compilation_across_ragged_batches():
-    """Batches of sizes {1, 7, 64} must share ONE compiled program per
-    (index, k): the engine pads them all into the default 64-query bucket."""
+    """Batches of sizes {9, 33, 64} must share ONE compiled program per
+    (index, k): the engine pads them all into the default 64-query bucket.
+    (Batches <= ServeConfig.small_batch take their own small bucket — see
+    the latency-cliff tests below — so the shared-bucket regime starts
+    above it.)"""
     q = _data(seed=3, n=64)
     # warm the global jit caches of the tiny eager glue ops (pad, slice) with
     # a sacrificial engine, so the monitoring hook below sees only THIS
     # engine's program compiles
     warm = _engine()
-    for nq in (1, 7, 64):
+    for nq in (9, 33, 64):
         warm.search(q[:nq], 10)
     eng = _engine()
     compiles = []
@@ -52,7 +55,7 @@ def test_single_compilation_across_ragged_batches():
 
     jax.monitoring.register_event_duration_secs_listener(_listener)
     try:
-        for nq in (1, 7, 64):
+        for nq in (9, 33, 64):
             d, ids = eng.search(q[:nq], 10)
             assert d.shape == (nq, 10) and ids.shape == (nq, 10)
         assert eng.compile_count == 1, eng.compile_count
@@ -60,14 +63,16 @@ def test_single_compilation_across_ragged_batches():
         # triggered by this engine's searches
         assert len(compiles) == 1, compiles
         # a different k is a different program
-        eng.search(q[:4], 5)
+        eng.search(q[:14], 5)
         assert eng.compile_count == 2
     finally:
         active[0] = False
 
 
 def test_bucket_rounds_up_in_powers_of_two():
-    eng = _engine(query_bucket=8)
+    # small_batch=0 disables the latency-cliff floor path, isolating the
+    # pure bucket-rounding behavior
+    eng = _engine(query_bucket=8, small_batch=0)
     q = _data(seed=3, n=40)
     for nq in (1, 5, 8):
         eng.search(q[:nq], 10)
@@ -76,6 +81,41 @@ def test_bucket_rounds_up_in_powers_of_two():
     assert eng.compile_count == 2
     eng.search(q[:16], 10)
     assert eng.compile_count == 2
+
+
+# --- small-batch latency cliff (compute-proportional floor path) -------------
+
+def test_small_batch_takes_compute_proportional_bucket():
+    """Batches <= small_batch must NOT pad to the 64-query bucket: the
+    padded program shape (``last_bucket``) is the latency pin — a 1-query
+    batch runs a 1-wide scan, not a 64-wide one."""
+    eng = _engine()                          # default query_bucket=64,
+    q = _data(seed=4, n=70)                  # default small_batch=8
+    for nq, want in ((1, 1), (3, 4), (8, 8), (9, 64), (64, 64), (70, 128)):
+        eng.search(q[:nq], 10)
+        assert eng.last_bucket == want, (nq, eng.last_bucket)
+    # the small buckets are real extra programs, by design
+    assert eng.compile_count == 5            # buckets {1, 4, 8, 64, 128}
+
+
+def test_small_batch_results_match_full_bucket():
+    """The floor path changes only the padded shape, never the results."""
+    eng = _engine()
+    q = _data(seed=5, n=64)
+    d64, i64 = eng.search(q, 10)
+    for nq in (1, 3, 8):
+        d, ids = eng.search(q[:nq], 10)
+        np.testing.assert_array_equal(np.asarray(i64)[:nq], np.asarray(ids))
+        np.testing.assert_allclose(np.asarray(d64)[:nq], np.asarray(d),
+                                   atol=1e-5)
+
+
+def test_small_batch_zero_disables_floor_path():
+    eng = _engine(small_batch=0)
+    q = _data(seed=4, n=8)
+    eng.search(q[:3], 10)
+    assert eng.last_bucket == 64             # old behavior: pad to the floor
+    assert eng.compile_count == 1
 
 
 def test_bucket_padding_never_perturbs_results():
@@ -167,3 +207,5 @@ def test_serveconfig_rejects_bad_lut_dtype_and_bucket():
         ServeConfig(lut_dtype="fp8")
     with pytest.raises(ValueError, match="query_bucket"):
         ServeConfig(query_bucket=0)
+    with pytest.raises(ValueError, match="small_batch"):
+        ServeConfig(small_batch=-1)
