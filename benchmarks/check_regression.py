@@ -7,6 +7,11 @@ gated row (batch-256 ivfpq, f32 LUT by default):
 * QPS drops by more than ``--max-qps-drop`` (fractional, default 0.20), or
 * recall@10 drops by more than ``--max-recall-drop`` (absolute, 0.02).
 
+Once ``bench_stream`` rows are present, the streaming scenario is gated
+too: update throughput (``upserts_per_sec``, fractional drop limit
+``--max-ups-drop``, default 0.25) and the streaming recall@10 (same
+absolute limit as the serving row).
+
 A missing gated row in the FRESH file is itself a failure (the bench
 silently lost coverage); a missing row in the BASELINE only warns, so the
 gate can be introduced onto older baselines without a flag day.
@@ -24,19 +29,65 @@ import json
 import sys
 
 GATED = dict(index="ivfpq", lut_dtype="f32", batch=256)
+STREAM_GATED = dict(scenario="stream_90_10", index="ivfpq")
 
 
-def find_row(doc: dict, **sel):
-    for row in doc.get("rows", []):
+def find_row(doc: dict, key: str = "rows", **sel):
+    for row in doc.get(key, []):
         if all(row.get(k) == v for k, v in sel.items()):
             return row
     return None
 
 
+def check_stream(baseline: dict, fresh: dict, max_ups_drop: float = 0.25,
+                 max_recall_drop: float = 0.02):
+    """Gate the streaming scenario: update throughput + streaming recall.
+
+    Active only once ``bench_stream`` rows exist: a baseline without a
+    ``stream`` section skips the compare (pre-streaming baselines); a
+    FRESH file without one while the baseline has it is a failure (the
+    bench lost coverage).
+    """
+    failures, report = [], []
+    base = find_row(baseline, key="stream", **STREAM_GATED)
+    new = find_row(fresh, key="stream", **STREAM_GATED)
+    sel = " ".join(f"{k}={v}" for k, v in STREAM_GATED.items())
+    if base is None:
+        report.append(f"baseline has no stream row ({sel}); skipping "
+                      "stream compare")
+        return failures, report
+    if new is None:
+        failures.append(f"fresh bench is missing the stream row ({sel})")
+        return failures, report
+    ups_drop = (1.0 - new["upserts_per_sec"] / base["upserts_per_sec"]
+                if base["upserts_per_sec"] else 0.0)
+    rec_drop = base["recall_at_10"] - new["recall_at_10"]
+    report.append(f"upserts/s : {base['upserts_per_sec']} -> "
+                  f"{new['upserts_per_sec']} (drop {ups_drop:+.1%}, "
+                  f"limit {max_ups_drop:.0%})")
+    report.append(f"stream rec: {base['recall_at_10']:.4f} -> "
+                  f"{new['recall_at_10']:.4f} (drop {rec_drop:+.4f}, "
+                  f"limit {max_recall_drop})")
+    if ups_drop > max_ups_drop:
+        failures.append(
+            f"update-throughput regression on {sel}: "
+            f"{base['upserts_per_sec']} -> {new['upserts_per_sec']} "
+            f"({ups_drop:.1%} > {max_ups_drop:.0%})")
+    if rec_drop > max_recall_drop:
+        failures.append(
+            f"streaming recall@10 regression on {sel}: "
+            f"{base['recall_at_10']:.4f} -> {new['recall_at_10']:.4f} "
+            f"(drop {rec_drop:.4f} > {max_recall_drop})")
+    return failures, report
+
+
 def check(baseline: dict, fresh: dict, max_qps_drop: float = 0.20,
-          max_recall_drop: float = 0.02):
+          max_recall_drop: float = 0.02, max_ups_drop: float = 0.25):
     """Returns (failures, report_lines); empty failures == gate passes."""
     failures, report = [], []
+    sf, sr = check_stream(baseline, fresh, max_ups_drop, max_recall_drop)
+    failures += sf
+    report += sr
     base = find_row(baseline, **GATED)
     new = find_row(fresh, **GATED)
     sel = " ".join(f"{k}={v}" for k, v in GATED.items())
@@ -73,13 +124,16 @@ def main(argv=None) -> int:
                     help="max fractional QPS drop (default 0.20)")
     ap.add_argument("--max-recall-drop", type=float, default=0.02,
                     help="max absolute recall@10 drop (default 0.02)")
+    ap.add_argument("--max-ups-drop", type=float, default=0.25,
+                    help="max fractional update-throughput drop on the "
+                         "streaming scenario (default 0.25)")
     args = ap.parse_args(argv)
     with open(args.baseline) as f:
         baseline = json.load(f)
     with open(args.fresh) as f:
         fresh = json.load(f)
     failures, report = check(baseline, fresh, args.max_qps_drop,
-                             args.max_recall_drop)
+                             args.max_recall_drop, args.max_ups_drop)
     for line in report:
         print(line)
     if failures:

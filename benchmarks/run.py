@@ -287,6 +287,96 @@ def bench_serve_fused(rows, json_doc=None, fast=False):
                                   **base_cfg)
 
 
+def bench_stream(rows, json_doc=None, fast=False):
+    """Streaming (mutable) serving: interleaved 90/10 read/write workload
+    on the 16k x 128 ivfpq grid — update throughput, search latency under
+    write load, and the staleness story (fresh rows served exactly from
+    the delta vs re-coded through PQ after compaction)."""
+    import numpy as np
+
+    from repro.search import (SearchEngine, ServeConfig, StreamConfig,
+                              knn_search)
+    from repro.search.knn import recall_at_k
+    n, dim, nq, k = 16384, 128, 256, 10
+    key = jax.random.key(0)
+    centers = jax.random.normal(key, (64, dim)) * 1.5
+    lab = jax.random.randint(jax.random.fold_in(key, 1), (n,), 0, 64)
+    corpus = centers[lab] + 0.4 * jax.random.normal(
+        jax.random.fold_in(key, 2), (n, dim))
+    queries = corpus[:nq] + 0.05 * jax.random.normal(
+        jax.random.fold_in(key, 3), (nq, dim))
+    _, truth = knn_search(queries, corpus, k)
+    wb = 256
+    # cell_slack widens every probed cell, so it is a latency knob as much
+    # as a capacity one: ~128 slots absorbs this workload's appends (~4k
+    # rows over 256 cells) without inflating the probe-scan width
+    eng = SearchEngine(corpus, ServeConfig(
+        target_dim=None, rerank=64, index="ivfpq", nlist=256, nprobe=8,
+        pq_subspaces=16, pq_centroids=256,
+        stream=StreamConfig(delta_capacity=1024, write_bucket=wb,
+                            row_capacity=n + 16384, cell_slack=128)))
+    rng = np.random.RandomState(0)
+    next_id = n
+
+    def write_batch():
+        nonlocal next_id
+        ids = np.arange(next_id, next_id + wb)
+        next_id += wb
+        vecs = rng.randn(wb, dim).astype(np.float32)
+        eng.upsert(ids, vecs)
+        jax.block_until_ready(eng.store.delta_count)
+
+    # warmup every program (search / upsert / delete / compact)
+    eng.search(queries, k)
+    write_batch()
+    eng.delete(np.arange(n, n + 8))
+    eng.compact()
+    # pure write throughput
+    reps_w = 3 if fast else 6
+    t0 = time.perf_counter()
+    for _ in range(reps_w):
+        write_batch()
+    ups_per_s = reps_w * wb / (time.perf_counter() - t0)
+    # interleaved 90/10: 9 search batches per write batch
+    rounds = 2 if fast else 4
+    ts = []
+    for _ in range(rounds):
+        write_batch()
+        for _ in range(9):
+            t0 = time.perf_counter()
+            out = eng.search(queries, k)
+            jax.block_until_ready(out)
+            ts.append((time.perf_counter() - t0) * 1e6)
+    ts.sort()
+    p50 = _pctl(ts, 50)
+    _, found = eng.search(queries, k)
+    rec = float(recall_at_k(found, truth))
+    qps = nq / (p50 * 1e-6)
+    # staleness: fresh rows served exactly from the delta, then re-coded
+    # through the residual PQ by compaction
+    fresh = queries[:128] + 0.001 * rng.randn(128, dim).astype(np.float32)
+    fresh_ids = np.arange(next_id, next_id + 128)
+    eng.upsert(fresh_ids, fresh)
+    _, f1 = eng.search(queries[:128], 1)
+    rec_delta = float((np.asarray(f1)[:, 0] == fresh_ids).mean())
+    eng.compact()
+    _, f2 = eng.search(queries[:128], 1)
+    rec_compacted = float((np.asarray(f2)[:, 0] == fresh_ids).mean())
+    rows.append(("stream_ivfpq_90_10", p50,
+                 f"ups_per_s={ups_per_s:.0f} qps={qps:.0f} "
+                 f"recall@10={rec:.4f} fresh_delta={rec_delta:.3f} "
+                 f"fresh_compacted={rec_compacted:.3f} "
+                 f"grow={eng.grow_count}"))
+    if json_doc is not None:
+        json_doc["stream"] = [dict(
+            scenario="stream_90_10", index="ivfpq", write_batch=wb,
+            upserts_per_sec=round(ups_per_s),
+            search_p50_us=round(p50, 1), search_qps=round(qps),
+            recall_at_10=round(rec, 4),
+            fresh_top1_delta=round(rec_delta, 4),
+            fresh_top1_compacted=round(rec_compacted, 4))]
+
+
 def roofline_summary(rows):
     art = "benchmarks/artifacts/dryrun"
     if not os.path.isdir(art):
@@ -333,6 +423,11 @@ def main(argv=None) -> None:
     except Exception as e:
         serve_err = e
         rows.append(("bench_serve_fused", -1.0, f"ERROR:{type(e).__name__}"))
+    try:
+        bench_stream(rows, json_doc=json_doc, fast=args.fast)
+    except Exception as e:
+        serve_err = serve_err or e
+        rows.append(("bench_stream", -1.0, f"ERROR:{type(e).__name__}"))
     print("\nname,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
@@ -344,7 +439,7 @@ def main(argv=None) -> None:
             # the serving trajectory is the CI regression gate: a truncated
             # BENCH_serve.json must fail the job, not upload silently
             raise SystemExit(
-                f"bench_serve_fused failed ({serve_err!r}); "
+                f"serving benches failed ({serve_err!r}); "
                 f"{args.json} is incomplete")
 
 

@@ -44,6 +44,17 @@ def _parse_args():
                     help="mesh device source: 'device' = the real jax "
                          "devices; 'host' = simulate --shards CPU devices "
                          "via --xla_force_host_platform_device_count")
+    ap.add_argument("--donate", action="store_true",
+                    help="with --shards: release the dense EngineState "
+                         "once the sharded copy is placed (no 2x memory)")
+    ap.add_argument("--stream", action="store_true",
+                    help="mutable serving: interleave a 90/10 read/write "
+                         "workload (upserts into the delta segment, "
+                         "tombstoned deletes, auto-compaction)")
+    ap.add_argument("--delta-capacity", type=int, default=512,
+                    help="--stream: delta segment size (rows)")
+    ap.add_argument("--write-batch", type=int, default=64,
+                    help="--stream: rows per upsert batch")
     return ap.parse_args()
 
 
@@ -60,35 +71,60 @@ def main():
     from repro.core import MPADConfig
     from repro.data.synthetic import make_clustered
     from repro.launch.mesh import make_serving_mesh
-    from repro.search import SearchEngine, ServeConfig, knn_search
+    from repro.search import (SearchEngine, ServeConfig, StreamConfig,
+                              knn_search)
     from repro.search.knn import recall_at_k
 
     key = jax.random.key(0)
     corpus, _ = make_clustered(key, args.corpus, 1, args.dim, n_clusters=64,
                                spread=0.4, center_scale=1.5)
     t0 = time.time()
+    stream_cfg = (StreamConfig(delta_capacity=args.delta_capacity)
+                  if args.stream else None)
     engine = SearchEngine(corpus, ServeConfig(
         target_dim=args.target_dim, rerank=4 * args.k, index=args.index,
         nlist=args.nlist, nprobe=args.nprobe,
         pq_subspaces=args.pq_subspaces,
         lut_dtype=args.lut_dtype, pq_backend=args.pq_backend,
-        query_bucket=args.query_bucket,
+        query_bucket=args.query_bucket, stream=stream_cfg,
         mpad=MPADConfig(m=args.target_dim, iters=64, batch_size=2048),
         fit_sample=4096))
     print(f"index built in {time.time()-t0:.1f}s "
           f"({args.dim}->{args.target_dim} dims, index={args.index}, "
-          f"lut={args.lut_dtype})")
+          f"lut={args.lut_dtype}"
+          + (f", streaming delta={args.delta_capacity}" if args.stream
+             else "") + ")")
     if args.shards:
         mesh = make_serving_mesh(args.shards)
-        engine.shard(mesh)
+        engine.shard(mesh, donate=args.donate)
         print(f"engine sharded over mesh {dict(mesh.shape)} "
               f"({args.corpus} rows -> ~{-(-args.corpus // args.shards)} "
-              "per shard)")
+              "per shard"
+              + (", dense state donated" if args.donate else "") + ")")
 
     total, rec_sum = 0.0, 0.0
+    write_s, rows_written = 0.0, 0
+    next_id = args.corpus
+    import numpy as np
     for i in range(args.batches):
         queries = corpus[jax.random.randint(
             jax.random.fold_in(key, i), (args.batch,), 0, args.corpus)]
+        if args.stream:
+            # the 10% write leg: upsert a batch of perturbed rows under
+            # fresh ids, plus a few deletes — all served from the delta /
+            # tombstones, auto-compacting at the threshold
+            wb = args.write_batch
+            vecs = corpus[:wb] + 0.01 * jax.random.normal(
+                jax.random.fold_in(key, 1000 + i), (wb, args.dim))
+            t0 = time.time()
+            engine.upsert(np.arange(next_id, next_id + wb), vecs)
+            if next_id > args.corpus:         # only delete rows WE streamed
+                engine.delete(np.arange(next_id - wb,
+                                        next_id - wb + wb // 8))
+            jax.block_until_ready(engine.store.delta_count)
+            write_s += time.time() - t0
+            rows_written += wb
+            next_id += wb
         t0 = time.time()
         _, ids = engine.search(queries, args.k)
         jax.block_until_ready(ids)
@@ -101,6 +137,14 @@ def main():
     print(f"\nmean: {total/args.batches*1e3:.1f} ms/batch "
           f"({args.batch/(total/args.batches):.0f} qps), "
           f"recall={rec_sum/args.batches:.4f}")
+    if args.stream and write_s:
+        print(f"writes: {rows_written} rows in {write_s:.2f}s "
+              f"({rows_written/write_s:.0f} rows/s), "
+              f"grow_count={engine.grow_count}")
+        t0 = time.time()
+        engine.compact()
+        print(f"final compact: {time.time()-t0:.2f}s "
+              f"(base rows={int(engine.store.n_rows)})")
 
 
 if __name__ == "__main__":

@@ -21,18 +21,19 @@ is a ``ShardedEngineState`` ready for ``sharded_search_fn`` /
 """
 from __future__ import annotations
 
+import warnings
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.search.ivf import cell_vectors
 from repro.search.serve import EngineState, ShardedEngineState
 from .context import require_mesh
 from .sharding import engine_state_specs
 
-__all__ = ["shard_engine"]
+__all__ = ["shard_engine", "shard_stream"]
 
 
 def _pad_dim0(a: Optional[jax.Array], multiple: int, fill=0):
@@ -48,7 +49,8 @@ def _pad_dim0(a: Optional[jax.Array], multiple: int, fill=0):
 
 
 def shard_engine(state: EngineState, mesh: Optional[Mesh] = None,
-                 axis: str = "data") -> ShardedEngineState:
+                 axis: str = "data", donate: bool = False,
+                 keep=()) -> ShardedEngineState:
     """Re-lay-out and place ``state`` for serving over the ``axis`` of
     ``mesh`` (default: the context's active mesh).
 
@@ -56,6 +58,14 @@ def shard_engine(state: EngineState, mesh: Optional[Mesh] = None,
     and codes end up distributed over the mesh devices, so
     ``sharded_search_fn`` returns exactly what ``search_fn`` returns on
     the unsharded state.
+
+    ``donate=True`` releases the dense input buffers once the sharded
+    copy is placed (build -> shard -> serve without 2x database memory):
+    every leaf of ``state`` that did not pass through into the sharded
+    pytree unchanged is deleted, except arrays listed in ``keep`` (by
+    identity — e.g. a user-owned corpus the caller handed in). The caller
+    must drop its own references to ``state`` — its arrays raise on use
+    afterwards.
     """
     if mesh is None:
         mesh = require_mesh("shard_engine")
@@ -89,6 +99,91 @@ def shard_engine(state: EngineState, mesh: Optional[Mesh] = None,
         codes_cell=codes_cell, bias_cell=bias_cell,
         lut_w=lut_w, cbnorm=cbnorm)
     specs = engine_state_specs(sstate, axis)
-    return jax.tree.map(
-        lambda a, p: jax.device_put(a, NamedSharding(mesh, p)),
-        sstate, specs)
+    if not donate:
+        return jax.tree.map(
+            lambda a, p: jax.device_put(a, NamedSharding(mesh, p)),
+            sstate, specs)
+    # donation-correct path: a donating jit identity re-lays the tree out,
+    # letting XLA reuse or free the input buffers (plain device_put may
+    # alias buffers invisibly, so deleting its inputs is unsafe). Backends
+    # without donation (CPU) copy instead, so any input leaf the jit left
+    # alive — and any dense leaf that never entered it, e.g. codebooks,
+    # which the sharded layout replaces with their LUT factorization — is
+    # freed explicitly below.
+    if keep:
+        # never donate a kept (user-owned) array: hand the jit a transient
+        # copy instead (freed by the donation itself)
+        keep_ids = {id(a) for a in keep}
+        sstate = jax.tree.map(
+            lambda a: jnp.array(a) if id(a) in keep_ids else a, sstate)
+    shardings = jax.tree.map(lambda p: NamedSharding(mesh, p), specs,
+                             is_leaf=lambda p: isinstance(p, P))
+    reshard = jax.jit(lambda t: t, out_shardings=shardings,
+                      donate_argnums=0)
+    with warnings.catch_warnings():
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable")
+        placed = reshard(sstate)
+    hold = {id(leaf) for leaf in jax.tree.leaves(placed)}
+    hold.update(id(a) for a in keep)
+    dense = {id(a): a
+             for a in jax.tree.leaves(state) + jax.tree.leaves(sstate)}
+    for leaf in dense.values():
+        if id(leaf) not in hold and not leaf.is_deleted():
+            leaf.delete()
+    return placed
+
+
+def shard_stream(store, frozen, mesh: Optional[Mesh] = None,
+                 axis: str = "data", index: str = "flat"
+                 ) -> ShardedEngineState:
+    """Partition a streaming engine's **base** layer over ``mesh``.
+
+    The mutable store's base arrays (capacity-padded row store, posting
+    lists, codes) are re-laid out exactly like a read-only engine —
+    ``n_real`` becomes the row *capacity*, since allocation/tombstone
+    state lives in the replicated ``live`` mask the streaming search
+    threads through the local scans. The delta segment, tombstone bitmap,
+    and id maps are NOT placed here: they replicate per search call
+    (``repro.search.stream.StreamReplica``), which is what lets
+    upserts/deletes proceed without touching the sharded base. Never
+    donates — the dense store backs the write path.
+    """
+    # the write programs DONATE the store's buffers, and device_put can
+    # return a new Array that still SHARES the input buffer (zero-copy
+    # re-placement, e.g. a 1-device mesh) — an upsert would then
+    # invalidate the sharded base. Hand shard_engine genuine copies of
+    # every store-derived leaf; frozen quantizers are never donated and
+    # may alias freely.
+    def _own(a):
+        return None if a is None else jnp.array(a)
+
+    ivf = pq = ivfpq = None
+    reduced = None
+    if index == "flat":
+        reduced = _own(store.reduced)
+    elif index == "ivf":
+        from repro.search.ivf import IVFIndex
+        # vectors need no copy: shard_engine only reads them through
+        # cell_vectors(), whose gather materializes fresh buffers
+        scan_rows = (store.reduced if store.reduced is not None
+                     else store.corpus)
+        ivf = IVFIndex(centroids=frozen.centroids, lists=_own(store.lists),
+                       vectors=scan_rows)
+    elif index == "pq":
+        from repro.search.pq import PQIndex
+        pq = PQIndex(codebooks=frozen.codebooks, codes=_own(store.codes),
+                     lut_w=frozen.lut_w, cbnorm=frozen.cbnorm)
+    elif index == "ivfpq":
+        from repro.search.ivfpq import IVFPQIndex
+        ivfpq = IVFPQIndex(
+            centroids=frozen.centroids, lists=_own(store.lists),
+            codebooks=frozen.codebooks, codes=_own(store.codes),
+            bias=_own(store.bias), codes_cell=_own(store.codes_cell),
+            bias_cell=_own(store.bias_cell),
+            lut_w=frozen.lut_w, cbnorm=frozen.cbnorm)
+    else:
+        raise ValueError(f"unknown index kind {index!r}")
+    base = EngineState(corpus=_own(store.corpus), proj=frozen.proj,
+                       reduced=reduced, ivf=ivf, pq=pq, ivfpq=ivfpq)
+    return shard_engine(base, mesh, axis=axis)

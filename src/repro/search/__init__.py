@@ -1,23 +1,30 @@
 """Vector-search substrate: brute-force k-NN, recall metrics, IVF-Flat /
-PQ / IVF-PQ ANN indexes, and the batched serving engine that integrates
-MPAD reduction."""
+PQ / IVF-PQ ANN indexes, the batched serving engine that integrates MPAD
+reduction, and the streaming (mutable) layer on top of it."""
 from .knn import (knn_search, knn_search_blocked, masked_topk, recall_at_k,
                   amk_accuracy)
-from .ivf import (IVFIndex, build_ivf, cell_vectors, ivf_search,
-                  posting_lists, probe_cells)
+from .ivf import (IVFIndex, balance_cells, build_ivf, cell_vectors,
+                  ivf_search, posting_lists, probe_cells)
 from .ivfpq import IVFPQIndex, build_ivfpq, ivfpq_search
 from .pq import PQIndex, build_pq, pq_search, pq_reconstruct
+from .segments import (FrozenParams, MutableEngineState, StreamStore,
+                       compact_fn, delete_fn, make_mutable, rebuild_state,
+                       upsert_fn)
 from .serve import (EngineState, INDEX_KINDS, SearchEngine, ServeConfig,
-                    ShardedEngineState, exact_rerank, search_fn,
-                    sharded_search_fn)
+                    ShardedEngineState, StreamConfig, exact_rerank,
+                    search_fn, sharded_search_fn)
+from .stream import StreamReplica, sharded_stream_search_fn, stream_search_fn
 
 __all__ = [
     "knn_search", "knn_search_blocked", "masked_topk", "recall_at_k",
     "amk_accuracy",
-    "IVFIndex", "build_ivf", "cell_vectors", "ivf_search", "posting_lists",
-    "probe_cells",
+    "IVFIndex", "balance_cells", "build_ivf", "cell_vectors", "ivf_search",
+    "posting_lists", "probe_cells",
     "IVFPQIndex", "build_ivfpq", "ivfpq_search",
     "PQIndex", "build_pq", "pq_search", "pq_reconstruct",
     "SearchEngine", "ServeConfig", "EngineState", "ShardedEngineState",
     "search_fn", "sharded_search_fn", "exact_rerank", "INDEX_KINDS",
+    "StreamConfig", "StreamStore", "MutableEngineState", "FrozenParams",
+    "make_mutable", "upsert_fn", "delete_fn", "compact_fn", "rebuild_state",
+    "StreamReplica", "stream_search_fn", "sharded_stream_search_fn",
 ]

@@ -12,16 +12,17 @@ structures on device).
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .knn import masked_topk
 
-__all__ = ["IVFIndex", "build_ivf", "cell_vectors", "ivf_local_scan",
-           "ivf_scan", "ivf_search", "kmeans", "posting_lists",
-           "probe_cells", "sq_dists"]
+__all__ = ["IVFIndex", "balance_cells", "build_ivf", "cell_vectors",
+           "ivf_local_scan", "ivf_scan", "ivf_search", "kmeans",
+           "posting_lists", "probe_cells", "sq_dists"]
 
 
 def sq_dists(a: jax.Array, b: jax.Array) -> jax.Array:
@@ -80,11 +81,63 @@ def posting_lists(assign: jax.Array, nlist: int, shards: int = 1) -> jax.Array:
     return lists.at[sorted_cells, pos].set(order.astype(jnp.int32))
 
 
+def balance_cells(counts, shards: int) -> np.ndarray:
+    """Load-aware cell placement: a permutation of the cell axis such that
+    the per-shard contiguous blocks carry near-equal posting-list **mass**
+    (row count), not just equal cell count.
+
+    Greedy LPT bin-pack: cells sorted heaviest-first, each placed on the
+    lightest shard that still has cell slots. Shard s's slot budget is the
+    block size ``ceil(nlist / shards)``, except the tail blocks that the
+    ``posting_lists`` padding turns into all-pad cells (pads stay at the
+    end of the cell axis, which the sharded layout relies on). Host-side
+    (build time, numpy); apply the permutation to centroids AND the
+    assignment so cell ids stay consistent end to end.
+    """
+    counts = np.asarray(counts)
+    nlist = counts.shape[0]
+    per = -(-nlist // shards)
+    caps = np.full(shards, per)
+    deficit = per * shards - nlist
+    s = shards - 1
+    while deficit > 0:                     # pad cells live in the tail blocks
+        take = min(per, deficit)
+        caps[s] -= take
+        deficit -= take
+        s -= 1
+    order = np.argsort(-counts, kind="stable")
+    load = np.zeros(shards, dtype=np.int64)
+    members: list = [[] for _ in range(shards)]
+    for c in order:
+        elig = [i for i in range(shards) if len(members[i]) < caps[i]]
+        tgt = min(elig, key=lambda i: (load[i], i))
+        members[tgt].append(int(c))
+        load[tgt] += int(counts[c])
+    return np.concatenate(
+        [np.asarray(m, dtype=np.int64) for m in members if m])
+
+
+def _balanced_layout(cent: jax.Array, assign: jax.Array, nlist: int,
+                     shards: int):
+    """Permute the cell axis by ``balance_cells`` (centroid order is
+    arbitrary, so this changes layout only, never scan results)."""
+    counts = np.asarray(jnp.bincount(assign, length=nlist))
+    perm = balance_cells(counts, shards)
+    inv = np.empty(nlist, np.int32)
+    inv[perm] = np.arange(nlist, dtype=np.int32)
+    return cent[jnp.asarray(perm)], jnp.asarray(inv)[assign]
+
+
 def build_ivf(key: jax.Array, vectors: jax.Array, nlist: int,
-              kmeans_iters: int = 12, shards: int = 1) -> IVFIndex:
+              kmeans_iters: int = 12, shards: int = 1,
+              balance: bool = True) -> IVFIndex:
+    """``balance`` (with ``shards > 1``) permutes cells so shard blocks
+    carry near-equal posting mass — see ``balance_cells``."""
     vectors = jnp.asarray(vectors, jnp.float32)
     cent = kmeans(key, vectors, nlist, kmeans_iters)
     assign = jnp.argmin(sq_dists(vectors, cent), axis=1)  # (N,)
+    if balance and shards > 1:
+        cent, assign = _balanced_layout(cent, assign, nlist, shards)
     lists = posting_lists(assign, nlist, shards)
     return IVFIndex(centroids=cent, lists=lists, vectors=vectors)
 
@@ -138,7 +191,8 @@ def ivf_scan(index: IVFIndex, q: jax.Array, k: int, nprobe: int = 8):
 
 def ivf_local_scan(centroids: jax.Array, lists_loc: jax.Array,
                    cell_vecs_loc: jax.Array, q: jax.Array, n_cand: int,
-                   nprobe: int, axis: str):
+                   nprobe: int, axis: str,
+                   live: Optional[jax.Array] = None):
     """Shard-local IVF probe + scan (a ``shard_map`` body of sharded serving).
 
     The coarse probe runs on the replicated ``centroids`` — identical on
@@ -147,7 +201,9 @@ def ivf_local_scan(centroids: jax.Array, lists_loc: jax.Array,
     ``cell_vecs_loc``, offset by ``axis_index * nlist_local`` along the
     cell axis) are scanned. Returns (d2 (Q, n_cand), global ids (Q,
     n_cand)); non-local or padded slots are (+inf, -1) and are supplied by
-    the shard that owns them.
+    the shard that owns them. ``live`` (replicated (N,) bool, streaming
+    serving) additionally masks tombstoned/unallocated global rows before
+    the local top-k, so dead rows never crowd out live candidates.
     """
     q = jnp.asarray(q, jnp.float32)
     cd2 = sq_dists(q, centroids)                          # (Q, nlist)
@@ -158,6 +214,9 @@ def ivf_local_scan(centroids: jax.Array, lists_loc: jax.Array,
     own = (lp >= 0) & (lp < nl_loc)                       # (Q, nprobe)
     lpc = jnp.clip(lp, 0, nl_loc - 1)
     cand = jnp.where(own[:, :, None], lists_loc[lpc], -1)
+    if live is not None:
+        n_cap = live.shape[0]
+        cand = jnp.where(live[jnp.clip(cand, 0, n_cap - 1)], cand, -1)
     cv = cell_vecs_loc[lpc]                               # (Q, P, mc, d)
     d2 = jnp.sum((cv - q[:, None, None, :]) ** 2, axis=-1)
     nq = q.shape[0]

@@ -30,11 +30,12 @@ import jax.numpy as jnp
 
 from repro.kernels.pq_adc.lut import center_lut
 from repro.kernels.pq_adc.ref import pq_adc_gather_scores_ref
-from .ivf import kmeans, posting_lists, probe_cells, sq_dists
+from .ivf import (_balanced_layout, kmeans, posting_lists, probe_cells,
+                  sq_dists)
 from .pq import _check_adc_args, build_pq
 
-__all__ = ["IVFPQIndex", "build_ivfpq", "ivfpq_local_scan", "ivfpq_scan",
-           "ivfpq_search"]
+__all__ = ["IVFPQIndex", "build_ivfpq", "ivfpq_adc_scan",
+           "ivfpq_local_scan", "ivfpq_scan", "ivfpq_search"]
 
 
 class IVFPQIndex(NamedTuple):
@@ -54,17 +55,23 @@ class IVFPQIndex(NamedTuple):
 def build_ivfpq(key: jax.Array, vectors: jax.Array, nlist: int,
                 m_subspaces: int = 8, n_centroids: int = 256,
                 kmeans_iters: int = 12, pq_iters: int = 10,
-                shards: int = 1) -> IVFPQIndex:
+                shards: int = 1, balance: bool = True) -> IVFPQIndex:
     """Coarse k-means, then per-subspace codebooks on the residuals.
 
     ``shards`` pads the cell axis of the cell-major serving mirrors
     (``lists``/``codes_cell``/``bias_cell``) to per-shard-equal shapes
-    (see ``posting_lists``); quantization and scan results are unchanged.
+    (see ``posting_lists``); ``balance`` additionally permutes the cell
+    axis so the per-shard blocks carry near-equal posting **mass**
+    (``repro.search.ivf.balance_cells`` — the load-aware placement for
+    skewed corpora). Quantization and scan results are unchanged either
+    way.
     """
     vectors = jnp.asarray(vectors, jnp.float32)
     n, d = vectors.shape
     cent = kmeans(key, vectors, nlist, kmeans_iters)
     assign = jnp.argmin(sq_dists(vectors, cent), axis=1)  # (N,)
+    if balance and shards > 1:
+        cent, assign = _balanced_layout(cent, assign, nlist, shards)
     lists = posting_lists(assign, nlist, shards)
     residuals = vectors - cent[assign]
     pq = build_pq(jax.random.fold_in(key, 7), residuals,
@@ -86,51 +93,82 @@ def build_ivfpq(key: jax.Array, vectors: jax.Array, nlist: int,
                       lut_w=pq.lut_w, cbnorm=pq.cbnorm)
 
 
-def ivfpq_scan(index: IVFPQIndex, q: jax.Array, k: int, nprobe: int = 8,
-               backend: str = "jnp", interpret: bool = True,
-               lut_dtype: str = "f32"):
-    """Unjitted ``ivfpq_search`` core (inlineable into fused programs)."""
+def ivfpq_adc_scan(centroids: jax.Array, lists: jax.Array,
+                   codes_cell: jax.Array, bias_cell: jax.Array,
+                   lut_w: jax.Array, cbnorm: jax.Array, q: jax.Array,
+                   n_cand: int, nprobe: int = 8, backend: str = "jnp",
+                   interpret: bool = True, lut_dtype: str = "f32",
+                   live=None):
+    """Probe + cell-major ADC scan over raw index arrays — the shared core
+    of ``ivfpq_scan`` (read-only serving) and the streaming masked scan.
+
+    ``live`` (optional (N,) bool keyed by row id) masks
+    tombstoned/unallocated rows; like the posting-pad mask it rides the
+    additive ``base`` term, so it works identically on both scoring
+    backends. Returns (d2 (Q, n_cand) SQUARED approximate distances, ids
+    (Q, n_cand)) with (+inf, -1) on masked/unfilled slots.
+    """
     _check_adc_args(backend, lut_dtype)
     q = jnp.asarray(q, jnp.float32)
     nq = q.shape[0]
-    m, kc, dsub = index.codebooks.shape
+    m, kc = cbnorm.shape
     # coarse probe: distances to every centroid, keep the nprobe nearest
-    probe, cand, cd2p = probe_cells(index.centroids, index.lists, q,
-                                    nprobe, k)            # (Q,P),(Q,C),(Q,P)
+    probe, cand, cd2p = probe_cells(centroids, lists, q,
+                                    nprobe, n_cand)       # (Q,P),(Q,C),(Q,P)
     # cell-independent query LUT over residual codebooks: (Q, M, K), ONE
     # dense matmul via the build-time block-diagonal factorization.
     # Only this LUT is quantized under lut_dtype; the coarse distance +
     # cross-term ``base`` stays f32 (it is O(1) memory, not a table).
-    tables = index.cbnorm[None] + (q @ index.lut_w).reshape(nq, m, kc)
+    tables = cbnorm[None] + (q @ lut_w).reshape(nq, m, kc)
     # candidate codes + bias through the cell-major mirrors: nprobe
     # contiguous (max_cell, M) row blocks per query, no scattered gather
-    max_cell = index.lists.shape[1]
-    ccodes = index.codes_cell[probe].reshape(nq, -1, m).astype(jnp.int32)
+    max_cell = lists.shape[1]
+    ccodes = codes_cell[probe].reshape(nq, -1, m).astype(jnp.int32)
     base = (jnp.repeat(cd2p, max_cell, axis=1)
-            + index.bias_cell[probe].reshape(nq, -1))     # (Q, P*max_cell)
+            + bias_cell[probe].reshape(nq, -1))           # (Q, P*max_cell)
     short = cand.shape[1] - base.shape[1]                 # degenerate budget
     if short:
         ccodes = jnp.pad(ccodes, ((0, 0), (0, short), (0, 0)))
         base = jnp.pad(base, ((0, 0), (0, short)))
-    base = jnp.where(cand >= 0, base, jnp.inf)            # mask posting pads
+    ok = cand >= 0                                        # mask posting pads
+    if live is not None:
+        ok &= live[jnp.clip(cand, 0, live.shape[0] - 1)]
+    base = jnp.where(ok, base, jnp.inf)
     if lut_dtype != "f32":
         # fold the table row means into the f32 base (``center_lut``): the
         # quantized grid then only has to cover the candidate-varying part
         tables, offs = center_lut(tables)
         base = base + offs[:, None]                       # inf pads stay inf
+    k_eff = min(n_cand, cand.shape[1])
     if backend == "kernel":
         from repro.kernels.pq_adc import pq_adc_gather_topk_pallas
-        d2, sel = pq_adc_gather_topk_pallas(tables, ccodes, base, k,
+        d2, sel = pq_adc_gather_topk_pallas(tables, ccodes, base, k_eff,
                                             interpret=interpret,
                                             lut_dtype=lut_dtype)
     else:
         adc = pq_adc_gather_scores_ref(tables, ccodes, base, lut_dtype)
-        neg, sel = jax.lax.top_k(-adc, k)
+        neg, sel = jax.lax.top_k(-adc, k_eff)
         d2 = -neg
     # the kernel marks unfilled slots sel=-1; don't let them wrap the gather
     ids = jnp.where(sel >= 0,
                     jnp.take_along_axis(cand, jnp.maximum(sel, 0), axis=1),
                     -1)
+    ids = jnp.where(jnp.isinf(d2), -1, ids)
+    if k_eff < n_cand:
+        d2 = jnp.pad(d2, ((0, 0), (0, n_cand - k_eff)),
+                     constant_values=jnp.inf)
+        ids = jnp.pad(ids, ((0, 0), (0, n_cand - k_eff)),
+                      constant_values=-1)
+    return d2, ids
+
+
+def ivfpq_scan(index: IVFPQIndex, q: jax.Array, k: int, nprobe: int = 8,
+               backend: str = "jnp", interpret: bool = True,
+               lut_dtype: str = "f32"):
+    """Unjitted ``ivfpq_search`` core (inlineable into fused programs)."""
+    d2, ids = ivfpq_adc_scan(index.centroids, index.lists, index.codes_cell,
+                             index.bias_cell, index.lut_w, index.cbnorm,
+                             q, k, nprobe, backend, interpret, lut_dtype)
     return jnp.sqrt(jnp.maximum(d2, 0.0)), ids
 
 
@@ -139,7 +177,7 @@ def ivfpq_local_scan(centroids: jax.Array, lists_loc: jax.Array,
                      lut_w: jax.Array, cbnorm: jax.Array, q: jax.Array,
                      n_cand: int, nprobe: int, axis: str,
                      backend: str = "jnp", interpret: bool = True,
-                     lut_dtype: str = "f32"):
+                     lut_dtype: str = "f32", live=None):
     """Shard-local IVF-PQ probe + ADC scan (a ``shard_map`` body of sharded
     serving).
 
@@ -148,8 +186,10 @@ def ivfpq_local_scan(centroids: jax.Array, lists_loc: jax.Array,
     shard; only the probed cells this shard owns (rows of the cell-major
     mirrors, offset by ``axis_index * nlist_local``) are ADC-scored — the
     ``base`` of non-local or padded slots is +inf, which masks them through
-    either scoring backend. Returns (d2 (Q, n_cand), global ids (Q,
-    n_cand)) with (+inf, -1) on masked slots.
+    either scoring backend. ``live`` (replicated (N,) bool, streaming
+    serving) masks tombstoned/unallocated rows the same way — riding the
+    additive ``base`` term, so it works on both backends. Returns (d2 (Q,
+    n_cand), global ids (Q, n_cand)) with (+inf, -1) on masked slots.
     """
     _check_adc_args(backend, lut_dtype)
     q = jnp.asarray(q, jnp.float32)
@@ -165,6 +205,9 @@ def ivfpq_local_scan(centroids: jax.Array, lists_loc: jax.Array,
     own = (lp >= 0) & (lp < nl_loc)
     lpc = jnp.clip(lp, 0, nl_loc - 1)
     cand = jnp.where(own[:, :, None], lists_loc[lpc], -1).reshape(nq, -1)
+    if live is not None:
+        n_cap = live.shape[0]
+        cand = jnp.where(live[jnp.clip(cand, 0, n_cap - 1)], cand, -1)
     ccodes = codes_cell_loc[lpc].reshape(nq, -1, m).astype(jnp.int32)
     base = (cd2p[:, :, None] + bias_cell_loc[lpc]).reshape(nq, -1)
     base = jnp.where(cand >= 0, base, jnp.inf)

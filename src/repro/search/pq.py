@@ -122,7 +122,8 @@ def pq_scan(index: PQIndex, q: jax.Array, k: int, backend: str = "jnp",
 def pq_local_scan(lut_w: jax.Array, cbnorm: jax.Array, codes_loc: jax.Array,
                   q: jax.Array, n_cand: int, n_real: jax.Array, axis: str,
                   backend: str = "jnp", interpret: bool = True,
-                  lut_dtype: str = "f32", slack: int = 0):
+                  lut_dtype: str = "f32", slack: int = 0,
+                  live=None):
     """Shard-local plain-PQ ADC scan (a ``shard_map`` body of sharded
     serving): score this shard's row block of the code matrix and return
     **global** row ids via the shard offset.
@@ -136,6 +137,11 @@ def pq_local_scan(lut_w: jax.Array, cbnorm: jax.Array, codes_loc: jax.Array,
     quantized exactly as on the single-device path; the centered constant
     is per-query and therefore ranking-invariant, so it is dropped here
     (final distances come from the exact re-rank).
+
+    ``live`` (replicated (N,) bool, streaming serving) masks
+    tombstoned/unallocated global rows before the local top-k. The fused
+    kernel's validity handling is a prefix bound (``n_valid``), so an
+    arbitrary tombstone bitmap needs ``backend="jnp"``.
     """
     _check_adc_args(backend, lut_dtype)
     q = jnp.asarray(q, jnp.float32)
@@ -147,13 +153,21 @@ def pq_local_scan(lut_w: jax.Array, cbnorm: jax.Array, codes_loc: jax.Array,
     n_loc = codes_loc.shape[0]
     off = jax.lax.axis_index(axis) * n_loc
     if backend == "kernel":
+        if live is not None:
+            raise ValueError(
+                "pq_local_scan(live=...) needs backend='jnp': the "
+                "shared-codes kernel only masks a row-count prefix")
         from repro.kernels.pq_adc.ops import pq_adc_topk_global
         return pq_adc_topk_global(tables, codes_loc, n_cand, row_offset=off,
                                   n_valid=n_real, slack=slack,
                                   interpret=interpret, lut_dtype=lut_dtype)
     scores = pq_adc_scores_ref(tables, codes_loc, lut_dtype)
     gid = off + jnp.arange(n_loc)
-    scores = jnp.where(gid[None, :] < n_real, scores, jnp.inf)
+    ok = gid[None, :] < n_real
+    if live is not None:
+        n_cap = live.shape[0]
+        ok = ok & live[jnp.clip(gid, 0, n_cap - 1)][None, :]
+    scores = jnp.where(ok, scores, jnp.inf)
     return masked_topk(scores, jnp.broadcast_to(gid[None, :], scores.shape),
                        n_cand)
 

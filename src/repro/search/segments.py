@@ -1,0 +1,463 @@
+"""Mutable serving state: delta segments, tombstones, and jit-compiled
+compaction over a frozen base index.
+
+The read-only engine (``repro.search.serve``) freezes the corpus at build
+time; real deployments continuously upsert and delete vectors. This module
+is the **write path**: an LSM-flavored two-layer layout whose every
+operation is a pure jit-stable function over fixed-shape arrays, so a
+serving process never recompiles per write.
+
+Layers
+------
+
+* **base** — the built index arrays, re-padded to a fixed *row capacity*
+  ``n_cap >= N`` (and, for IVF layouts, per-cell *pad slack* on the posting
+  lists) so compaction can append without changing any array shape.
+  ``row_ids (n_cap,)`` maps base row -> external id (-1 = unallocated
+  slot); ``dead (n_cap,) bool`` is the **tombstone bitmap** masking
+  deleted/overwritten rows out of every scan.
+* **delta** — a fixed-capacity segment of recently upserted vectors,
+  scanned *exactly* in the reduced space (no quantization staleness for
+  fresh rows). ``delta_ids (cap,)`` holds external ids, -1 = empty slot or
+  deletion hole; ``delta_count`` is the append pointer.
+
+Quantizers (MPAD projection, coarse centroids, PQ codebooks and their
+LUT factorization) are **frozen** at build time — compaction re-codes
+delta rows against them, never retrains — which is exactly what keeps the
+compiled serve programs cache-valid across the whole write lifecycle.
+
+Operations (all pure; the engine jits them with the store donated, so XLA
+aliases the buffers and the ``.at[]`` writes happen in place):
+
+* ``upsert_fn(store, frozen, ids, vectors)`` — tombstone any base copy of
+  each id, overwrite an existing delta slot for the id or append a new
+  one. Later rows of a batch win over earlier ones (sequential
+  semantics); ``id == -1`` rows are no-ops, so batches can be padded to
+  fixed bucket shapes.
+* ``delete_fn(store, ids)`` — tombstone base copies, punch holes in the
+  delta. Deleting an absent id is a no-op.
+* ``compact_fn(store, frozen, index=...)`` — fold the delta into the
+  base: residual-PQ re-encode against the frozen centroids/codebooks,
+  append rows into the row store and the cell-major
+  ``codes_cell``/``bias_cell`` mirrors, extend posting lists into their
+  pad slack, clear the delta. All-or-nothing: if the append would
+  overflow the row capacity or any cell's slack, the state is returned
+  unchanged with a nonzero dropped-count and the caller grows the store
+  host-side (``grow_store`` — a rare, amortized reshape that is the only
+  recompile point in the subsystem).
+
+``rebuild_state`` builds a fresh read-only ``EngineState`` over any row
+set with the same frozen quantizers — the from-scratch oracle the
+streaming equivalence tests (and offline full rebuilds) compare against.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .ivf import posting_lists, sq_dists
+
+__all__ = ["StreamConfig", "StreamStore", "MutableEngineState",
+           "FrozenParams", "make_mutable", "upsert_fn", "delete_fn",
+           "compact_fn", "grow_store", "live_mask", "rebuild_state",
+           "encode_pq", "ivfpq_encode"]
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamConfig:
+    """Write-path knobs (``ServeConfig.stream`` enables streaming)."""
+    delta_capacity: int = 256        # fixed delta segment size (rows)
+    compact_threshold: float = 0.75  # auto-compact when the delta holds
+    #                                  this fraction of its capacity
+    row_capacity: Optional[int] = None   # total base row slots; None =
+    #                                      N + 4 * delta_capacity
+    cell_slack: Optional[int] = None     # extra posting slots per cell for
+    #                                      compaction appends; None =
+    #                                      delta_capacity
+    write_bucket: int = 64           # min padded write-batch size; ragged
+    #                                  batches round up to powers of two
+
+    def __post_init__(self):
+        if self.delta_capacity < 1:
+            raise ValueError("delta_capacity must be >= 1")
+        if not (0.0 < self.compact_threshold <= 1.0):
+            raise ValueError("compact_threshold must be in (0, 1]")
+        if self.cell_slack is not None and self.cell_slack < 1:
+            raise ValueError("cell_slack must be >= 1")
+        if self.write_bucket < 1:
+            raise ValueError("write_bucket must be >= 1")
+
+
+class FrozenParams(NamedTuple):
+    """Build-time quantizers shared by base and delta; never mutated (and
+    never donated), so they can alias the original ``EngineState``."""
+    proj: Optional[Tuple[jax.Array, jax.Array]]   # MPAD (matrix (m,D), mean)
+    centroids: Optional[jax.Array]                # (nlist, d) coarse cells
+    codebooks: Optional[jax.Array]                # (M, K, dsub) PQ codebooks
+    lut_w: Optional[jax.Array]                    # (d, M*K) table projection
+    cbnorm: Optional[jax.Array]                   # (M, K) codeword norms
+
+
+class StreamStore(NamedTuple):
+    """Every mutable leaf of the streaming engine, one fixed-shape pytree.
+
+    Internal id space: base row r in [0, n_cap) | delta slot s as
+    ``n_cap + s``. External ids live in ``row_ids``/``delta_ids``.
+    """
+    corpus: jax.Array               # (n_cap, D) original-space row store
+    row_ids: jax.Array              # (n_cap,) int32 row -> external id, -1
+    n_rows: jax.Array               # () int32 allocated base rows
+    dead: jax.Array                 # (n_cap,) bool tombstone bitmap
+    reduced: Optional[jax.Array]    # (n_cap, m) scan-space rows (None = no
+    #                                 projection; scan from ``corpus``)
+    codes: Optional[jax.Array]      # (n_cap, M) int32 pq/ivfpq row codes
+    bias: Optional[jax.Array]       # (n_cap,) f32 ivfpq cross term
+    lists: Optional[jax.Array]      # (nlist, mc_cap) posting lists, -1 pad
+    codes_cell: Optional[jax.Array]  # (nlist, mc_cap, M) cell-major codes
+    bias_cell: Optional[jax.Array]   # (nlist, mc_cap) cell-major bias
+    delta_vectors: jax.Array        # (cap, D) original-space delta rows
+    delta_reduced: Optional[jax.Array]  # (cap, m) scan-space (None = no proj)
+    delta_ids: jax.Array            # (cap,) int32 external ids, -1 = empty
+    delta_count: jax.Array          # () int32 append pointer
+
+
+# the store IS the mutable engine state (base + delta + tombstones); the
+# serving-layer name for the same pytree
+MutableEngineState = StreamStore
+
+
+def live_mask(store: StreamStore) -> jax.Array:
+    """(n_cap,) bool: base rows that are allocated and not tombstoned."""
+    return (store.row_ids >= 0) & ~store.dead
+
+
+def _copy(a: jax.Array) -> jax.Array:
+    return jnp.array(a)           # jnp.array copies; safe to donate later
+
+
+def _pad_rows(a: jax.Array, n_cap: int, fill=0) -> jax.Array:
+    pad = n_cap - a.shape[0]
+    if pad <= 0:
+        return _copy(a)
+    widths = ((0, pad),) + ((0, 0),) * (a.ndim - 1)
+    return jnp.pad(a, widths, constant_values=fill)
+
+
+def _pad_cells(a: jax.Array, slack: int, fill=0) -> jax.Array:
+    """Grow the per-cell (dim-1) capacity of a cell-major array."""
+    if slack <= 0:
+        return _copy(a)
+    widths = ((0, 0), (0, slack)) + ((0, 0),) * (a.ndim - 2)
+    return jnp.pad(a, widths, constant_values=fill)
+
+
+def _project(proj, vectors: jax.Array) -> jax.Array:
+    if proj is None:
+        return vectors
+    matrix, mean = proj
+    return (vectors - mean) @ matrix.T
+
+
+def encode_pq(codebooks: jax.Array, x: jax.Array) -> jax.Array:
+    """Nearest-codeword PQ codes for rows ``x``: (B, M) int32.
+
+    The same argmin as ``build_pq``'s final assignment, so a vector encodes
+    to identical codes whether it arrived at build time or at compaction.
+    """
+    m, kc, dsub = codebooks.shape
+    xs = x.reshape(x.shape[0], m, dsub)
+    codes = [jnp.argmin(sq_dists(xs[:, j], codebooks[j]), axis=1)
+             for j in range(m)]                         # M small: unrolled
+    return jnp.stack(codes, axis=1).astype(jnp.int32)
+
+
+def ivfpq_encode(centroids: jax.Array, codebooks: jax.Array, x: jax.Array):
+    """Coarse-assign + residual-PQ-encode rows ``x`` against frozen
+    quantizers. Returns (assign (B,), codes (B, M) int32, bias (B,) f32) —
+    the exact per-row payload ``build_ivfpq`` computes at build time.
+    """
+    m, kc, dsub = codebooks.shape
+    assign = jnp.argmin(sq_dists(x, centroids), axis=1)
+    cent = centroids[assign]
+    codes = encode_pq(codebooks, x - cent)
+    csub = cent.reshape(x.shape[0], m, dsub)
+    recon = jnp.take_along_axis(
+        codebooks[None], codes[:, :, None, None], axis=2)[:, :, 0, :]
+    bias = 2.0 * jnp.sum(csub * recon, axis=(1, 2))
+    return assign, codes, bias.astype(jnp.float32)
+
+
+def make_mutable(state, config: StreamConfig,
+                 index: str) -> Tuple[StreamStore, FrozenParams]:
+    """Re-lay an immutable ``EngineState`` into (StreamStore, FrozenParams).
+
+    Every store leaf is a fresh buffer (padded or copied), so the engine
+    can donate the store to the write programs without invalidating the
+    original state or the frozen quantizers.
+    """
+    n, d = state.corpus.shape
+    cap = config.delta_capacity
+    n_cap = config.row_capacity or n + 4 * cap
+    if n_cap <= n:
+        raise ValueError(
+            f"row_capacity {n_cap} must exceed the corpus size {n} "
+            "(compaction needs append slack)")
+    proj = state.proj
+    reduced = codes = bias = lists = codes_cell = bias_cell = None
+    centroids = codebooks = lut_w = cbnorm = None
+    cell_slack = config.cell_slack if config.cell_slack is not None else cap
+    if index == "flat":
+        if proj is not None:
+            reduced = _pad_rows(state.reduced, n_cap)
+    elif index == "ivf":
+        centroids = state.ivf.centroids
+        lists = _pad_cells(state.ivf.lists, cell_slack, fill=-1)
+        if proj is not None:
+            reduced = _pad_rows(state.ivf.vectors, n_cap)
+    elif index == "pq":
+        # no ``reduced`` mirror: the coded base is scanned through its
+        # codes, the delta through ``delta_reduced``, the re-rank through
+        # ``corpus`` — a row-major reduced mirror would feed nothing
+        codes = _pad_rows(jnp.asarray(state.pq.codes, jnp.int32), n_cap)
+        codebooks = state.pq.codebooks
+        lut_w, cbnorm = state.pq.lut_w, state.pq.cbnorm
+    elif index == "ivfpq":
+        ix = state.ivfpq
+        centroids, codebooks = ix.centroids, ix.codebooks
+        lut_w, cbnorm = ix.lut_w, ix.cbnorm
+        codes = _pad_rows(jnp.asarray(ix.codes, jnp.int32), n_cap)
+        bias = _pad_rows(ix.bias, n_cap)
+        lists = _pad_cells(ix.lists, cell_slack, fill=-1)
+        codes_cell = _pad_cells(ix.codes_cell, cell_slack)
+        bias_cell = _pad_cells(ix.bias_cell, cell_slack)
+    else:
+        raise ValueError(f"unknown index kind {index!r}")
+    m_dim = proj[0].shape[0] if proj is not None else d
+    store = StreamStore(
+        corpus=_pad_rows(state.corpus, n_cap),
+        row_ids=_pad_rows(jnp.arange(n, dtype=jnp.int32), n_cap, fill=-1),
+        n_rows=jnp.asarray(n, jnp.int32),
+        dead=jnp.zeros((n_cap,), bool),
+        reduced=reduced, codes=codes, bias=bias, lists=lists,
+        codes_cell=codes_cell, bias_cell=bias_cell,
+        delta_vectors=jnp.zeros((cap, d), jnp.float32),
+        delta_reduced=(jnp.zeros((cap, m_dim), jnp.float32)
+                       if proj is not None else None),
+        delta_ids=jnp.full((cap,), -1, jnp.int32),
+        delta_count=jnp.zeros((), jnp.int32))
+    frozen = FrozenParams(proj=proj, centroids=centroids,
+                          codebooks=codebooks, lut_w=lut_w, cbnorm=cbnorm)
+    return store, frozen
+
+
+# --- the write path (pure; engine jits with the store donated) ---------------
+
+def upsert_fn(store: StreamStore, frozen: FrozenParams, ids: jax.Array,
+              vectors: jax.Array) -> Tuple[StreamStore, jax.Array]:
+    """Apply a padded upsert batch: (ids (B,) int32 with -1 = no-op pad,
+    vectors (B, D) f32). Sequential batch semantics (later rows win).
+
+    Returns (store, dropped): ``dropped`` counts valid rows that found the
+    delta segment full (the engine pre-compacts so this stays 0; direct
+    callers must check it and compact + retry the remainder).
+    """
+    ids = jnp.asarray(ids, jnp.int32)
+    vectors = jnp.asarray(vectors, jnp.float32)
+    valid = ids >= 0
+    # tombstone any base copy of each upserted id (vectorized over batch)
+    hit = (store.row_ids[:, None] == ids[None, :]) & valid[None, :]
+    dead = store.dead | hit.any(axis=1)
+    cap = store.delta_ids.shape[0]
+    slots = jnp.arange(cap)
+    has_red = store.delta_reduced is not None
+    red = _project(frozen.proj, vectors) if has_red else vectors
+
+    def body(carry, x):
+        d_ids, d_vec, d_red, count, dropped = carry
+        i, v, vr, val = x
+        match = (d_ids == i) & (slots < count) & val
+        exists = match.any()
+        slot = jnp.where(exists, jnp.argmax(match), count)
+        slot = jnp.where(val, slot, cap)          # pads scatter out of range
+        d_ids = d_ids.at[slot].set(i, mode="drop")
+        d_vec = d_vec.at[slot].set(v, mode="drop")
+        if d_red is not None:
+            d_red = d_red.at[slot].set(vr, mode="drop")
+        appended = val & ~exists & (slot < cap)
+        lost = val & ~exists & (slot >= cap)      # delta full
+        return (d_ids, d_vec, d_red, count + appended.astype(count.dtype),
+                dropped + lost.astype(dropped.dtype)), None
+
+    init = (store.delta_ids, store.delta_vectors,
+            store.delta_reduced if has_red else None, store.delta_count,
+            jnp.zeros((), jnp.int32))
+    (d_ids, d_vec, d_red, count, dropped), _ = jax.lax.scan(
+        body, init, (ids, vectors, red, valid))
+    out = store._replace(dead=dead, delta_ids=d_ids, delta_vectors=d_vec,
+                         delta_reduced=d_red, delta_count=count)
+    return out, dropped
+
+
+def delete_fn(store: StreamStore, ids: jax.Array) -> StreamStore:
+    """Apply a padded delete batch (ids (B,) int32, -1 = no-op pad):
+    tombstone base rows, punch delta holes. Absent ids are no-ops."""
+    ids = jnp.asarray(ids, jnp.int32)
+    valid = ids >= 0
+    hit = (store.row_ids[:, None] == ids[None, :]) & valid[None, :]
+    dead = store.dead | hit.any(axis=1)
+    kill = ((store.delta_ids[:, None] == ids[None, :])
+            & valid[None, :]).any(axis=1)
+    return store._replace(
+        dead=dead, delta_ids=jnp.where(kill, -1, store.delta_ids))
+
+
+def compact_fn(store: StreamStore, frozen: FrozenParams, *,
+               index: str) -> Tuple[StreamStore, jax.Array]:
+    """Fold the delta segment into the base; returns (store, dropped).
+
+    All-or-nothing: when the append would overflow the row capacity or any
+    posting cell's pad slack, the state comes back unchanged and
+    ``dropped`` (the number of rows that could not be folded) is nonzero —
+    the caller grows the store host-side and retries. Quantizers are
+    frozen: delta rows are re-coded against the existing
+    centroids/codebooks, so no serve-program shape or constant changes.
+    """
+    cap = store.delta_ids.shape[0]
+    n_cap = store.corpus.shape[0]
+    slots = jnp.arange(cap)
+    alive = (slots < store.delta_count) & (store.delta_ids >= 0)
+    n_alive = jnp.sum(alive.astype(jnp.int32))
+    pos = jnp.cumsum(alive.astype(jnp.int32)) - 1       # packed ordinal
+    dest = store.n_rows + pos                           # target base row
+    ok = store.n_rows + n_alive <= n_cap                # row-capacity check
+
+    scan_rows = (store.delta_reduced if store.delta_reduced is not None
+                 else store.delta_vectors)
+    assign = codes = bias = None
+    slot_pos = None
+    if index in ("ivf", "ivfpq"):
+        if index == "ivfpq":
+            assign, codes, bias = ivfpq_encode(
+                frozen.centroids, frozen.codebooks, scan_rows)
+        else:
+            assign = jnp.argmin(sq_dists(scan_rows, frozen.centroids), axis=1)
+        nlist, mc_cap = store.lists.shape
+        counts = jnp.sum((store.lists >= 0).astype(jnp.int32), axis=1)
+        onehot = (jax.nn.one_hot(assign, nlist, dtype=jnp.int32)
+                  * alive[:, None].astype(jnp.int32))
+        rank = jnp.take_along_axis(
+            jnp.cumsum(onehot, axis=0) - onehot, assign[:, None], axis=1)[:, 0]
+        slot_pos = counts[assign] + rank
+        ok = ok & ~jnp.any(alive & (slot_pos >= mc_cap))  # cell-slack check
+    elif index == "pq":
+        codes = encode_pq(frozen.codebooks, scan_rows)
+
+    write = ok & alive
+    dest = jnp.where(write, dest, n_cap)                # OOB => dropped
+    corpus = store.corpus.at[dest].set(store.delta_vectors, mode="drop")
+    row_ids = store.row_ids.at[dest].set(store.delta_ids, mode="drop")
+    reduced = (store.reduced.at[dest].set(store.delta_reduced, mode="drop")
+               if store.reduced is not None else None)
+    new_codes = (store.codes.at[dest].set(codes, mode="drop")
+                 if store.codes is not None else None)
+    new_bias = (store.bias.at[dest].set(bias, mode="drop")
+                if store.bias is not None else None)
+    lists = codes_cell = bias_cell = None
+    if store.lists is not None:
+        nlist = store.lists.shape[0]
+        cell = jnp.where(write, assign, nlist)          # OOB => dropped
+        lists = store.lists.at[cell, slot_pos].set(
+            dest.astype(jnp.int32), mode="drop")
+        if store.codes_cell is not None:
+            codes_cell = store.codes_cell.at[cell, slot_pos].set(
+                codes.astype(store.codes_cell.dtype), mode="drop")
+            bias_cell = store.bias_cell.at[cell, slot_pos].set(
+                bias, mode="drop")
+    okw = ok.astype(jnp.int32)
+    out = store._replace(
+        corpus=corpus, row_ids=row_ids,
+        n_rows=store.n_rows + okw * n_alive,
+        reduced=reduced, codes=new_codes, bias=new_bias, lists=lists,
+        codes_cell=codes_cell, bias_cell=bias_cell,
+        delta_ids=jnp.where(ok, -1, store.delta_ids),
+        delta_count=store.delta_count * (1 - okw))
+    return out, (1 - okw) * n_alive
+
+
+def grow_store(store: StreamStore, *, row_extra: int = 0,
+               cell_extra: int = 0) -> StreamStore:
+    """Host-side capacity growth (the compaction-overflow escape hatch).
+
+    Pads the row store by ``row_extra`` rows and every posting cell by
+    ``cell_extra`` slots. Shapes change, so downstream programs recompile
+    once — size ``StreamConfig.row_capacity``/``cell_slack`` to make this
+    rare.
+    """
+    n_cap = store.corpus.shape[0] + row_extra
+    return store._replace(
+        corpus=_pad_rows(store.corpus, n_cap),
+        row_ids=_pad_rows(store.row_ids, n_cap, fill=-1),
+        dead=_pad_rows(store.dead, n_cap, fill=False),
+        reduced=(_pad_rows(store.reduced, n_cap)
+                 if store.reduced is not None else None),
+        codes=(_pad_rows(store.codes, n_cap)
+               if store.codes is not None else None),
+        bias=(_pad_rows(store.bias, n_cap)
+              if store.bias is not None else None),
+        lists=(_pad_cells(store.lists, cell_extra, fill=-1)
+               if store.lists is not None else None),
+        codes_cell=(_pad_cells(store.codes_cell, cell_extra)
+                    if store.codes_cell is not None else None),
+        bias_cell=(_pad_cells(store.bias_cell, cell_extra)
+                   if store.bias_cell is not None else None))
+
+
+def rebuild_state(frozen: FrozenParams, vectors: jax.Array, *, index: str,
+                  shards: int = 1):
+    """Build a read-only ``EngineState`` over ``vectors`` with the FROZEN
+    quantizers (no retraining) — the offline full-rebuild path and the
+    from-scratch oracle of the streaming equivalence tests: after
+    ``compact()``, streaming search over the survivors must return exactly
+    what this state returns.
+    """
+    from .ivf import IVFIndex
+    from .ivfpq import IVFPQIndex
+    from .pq import PQIndex
+    from .serve import EngineState
+
+    vectors = jnp.asarray(vectors, jnp.float32)
+    reduced = _project(frozen.proj, vectors)
+    ivf = pq = ivfpq = None
+    flat_reduced = None
+    if index == "flat":
+        flat_reduced = reduced
+    elif index == "ivf":
+        assign = jnp.argmin(sq_dists(reduced, frozen.centroids), axis=1)
+        lists = posting_lists(assign, frozen.centroids.shape[0], shards)
+        ivf = IVFIndex(centroids=frozen.centroids, lists=lists,
+                       vectors=reduced)
+    elif index == "pq":
+        codes = encode_pq(frozen.codebooks, reduced)
+        pq = PQIndex(codebooks=frozen.codebooks, codes=codes,
+                     lut_w=frozen.lut_w, cbnorm=frozen.cbnorm)
+    elif index == "ivfpq":
+        assign, codes, bias = ivfpq_encode(
+            frozen.centroids, frozen.codebooks, reduced)
+        lists = posting_lists(assign, frozen.centroids.shape[0], shards)
+        lid = jnp.maximum(lists, 0)
+        code_dt = (jnp.uint8 if frozen.codebooks.shape[1] <= 256
+                   else jnp.int32)
+        ivfpq = IVFPQIndex(
+            centroids=frozen.centroids, lists=lists,
+            codebooks=frozen.codebooks, codes=codes, bias=bias,
+            codes_cell=codes[lid].astype(code_dt),
+            bias_cell=jnp.where(lists >= 0, bias[lid],
+                                0.0).astype(jnp.float32),
+            lut_w=frozen.lut_w, cbnorm=frozen.cbnorm)
+    else:
+        raise ValueError(f"unknown index kind {index!r}")
+    return EngineState(corpus=vectors, proj=frozen.proj,
+                       reduced=flat_reduced, ivf=ivf, pq=pq, ivfpq=ivfpq)

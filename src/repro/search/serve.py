@@ -57,6 +57,18 @@ single-device serving return identical neighbors; the single-device path
 itself is untouched. The jit cache keys on the mesh (shape + devices), so
 resizing the fleet recompiles exactly once per shape.
 
+Streaming (mutable) serving
+---------------------------
+
+``ServeConfig(stream=StreamConfig(...))`` enables the write path: the
+built index becomes the frozen **base** layer of a
+``repro.search.segments.StreamStore`` (fixed row capacity + posting-list
+pad slack + tombstone bitmap) with a fixed-capacity exact-scan **delta
+segment** on top. ``SearchEngine.upsert/delete/compact`` are pure
+donated-jit programs over that store — no recompiles per write — and
+``search`` routes through ``repro.search.stream.stream_search_fn`` (or
+its sharded twin: base sharded, delta/tombstones replicated).
+
 Index layouts (``ServeConfig.index``):
 
   "flat"   exact scan of the (reduced) vectors
@@ -86,10 +98,11 @@ from .ivf import IVFIndex, build_ivf, ivf_local_scan, ivf_scan
 from .ivfpq import IVFPQIndex, build_ivfpq, ivfpq_local_scan, ivfpq_scan
 from .knn import _sq_dists, knn_scan, masked_topk
 from .pq import PQIndex, build_pq, pq_local_scan, pq_scan
+from .segments import StreamConfig
 
 __all__ = ["ServeConfig", "SearchEngine", "EngineState",
-           "ShardedEngineState", "search_fn", "sharded_search_fn",
-           "exact_rerank", "INDEX_KINDS"]
+           "ShardedEngineState", "StreamConfig", "search_fn",
+           "sharded_search_fn", "exact_rerank", "INDEX_KINDS"]
 
 INDEX_KINDS = ("flat", "ivf", "pq", "ivfpq")
 _ADC_BACKENDS = ("jnp", "kernel")
@@ -118,6 +131,9 @@ class ServeConfig:
     mpad: Optional[MPADConfig] = None    # defaults derived from target_dim
     fit_sample: int = 2048               # rows used to fit the projection
     seed: int = 0
+    stream: Optional[StreamConfig] = None  # enable the mutable write path
+    #                                        (delta segment + tombstones +
+    #                                        compaction; see search/stream.py)
     # deprecated boolean index spec (pre-``index=``); shimmed in __post_init__
     use_ivf: Optional[bool] = None
     use_pq: Optional[bool] = None
@@ -160,6 +176,13 @@ class ServeConfig:
         if self.small_batch < 0:
             raise ValueError("small_batch must be >= 0 (0 disables the "
                              "small-batch bucket floor path)")
+        if (self.stream is not None and self.index == "pq"
+                and self.pq_backend == "kernel"):
+            raise ValueError(
+                "streaming index='pq' needs pq_backend='jnp': the "
+                "shared-codes Pallas kernel has no masked entry point for "
+                "an arbitrary tombstone bitmap (use index='ivfpq' for a "
+                "kernel-backed streaming ADC scan)")
 
 
 class EngineState(NamedTuple):
@@ -392,7 +415,11 @@ class SearchEngine:
 
     def __init__(self, corpus: jax.Array, config: ServeConfig):
         self.config = config
+        corpus_in = corpus
         corpus = jnp.asarray(corpus, jnp.float32)
+        # when the caller's array passes through unconverted, it stays
+        # caller-owned: shard(donate=True) must not delete it
+        self._user_corpus = corpus if corpus is corpus_in else None
         n, dim = corpus.shape
         key = jax.random.key(config.seed)
         if config.target_dim is not None:
@@ -422,7 +449,7 @@ class SearchEngine:
             ivfpq = build_ivfpq(
                 jax.random.fold_in(key, 3), reduced, config.nlist,
                 config.pq_subspaces, config.pq_centroids)
-        self.state = EngineState(
+        self.state: Optional[EngineState] = EngineState(
             corpus=corpus, proj=proj,
             reduced=reduced if config.index == "flat" else None,
             ivf=ivf, pq=pq, ivfpq=ivfpq)
@@ -441,44 +468,206 @@ class SearchEngine:
             return search_fn(state, queries, k, **kw)
         self._program = jax.jit(_engine_search_fn,
                                 static_argnames=_SEARCH_STATICS)
+        self.store = self.frozen = None          # streaming (write-path) state
+        self._stream_sharded_base = None
+        self._stream_program = self._stream_sharded_program = None
+        self._upsert_program = self._delete_program = None
+        self._compact_program = None
+        self.grow_count = 0          # compaction-overflow regrowths (rare;
+        #                              each one is a recompile point)
+        self._delta_used = 0         # conservative host mirror of the delta
+        #                              fill (overwrites counted as appends)
+        if config.stream is not None:
+            self._init_stream()
+
+    def _require_dense(self) -> EngineState:
+        if self.state is None:
+            raise RuntimeError(
+                "the dense EngineState is gone: its buffers were released "
+                "by shard(donate=True) or superseded by the streaming "
+                "StreamStore (use engine.store / engine.frozen there) — "
+                "rebuild the engine to get the read-only views back")
+        return self.state
 
     # back-compat array views into the state pytree
     @property
     def corpus(self) -> jax.Array:
-        return self.state.corpus
+        return self._require_dense().corpus
 
     @property
     def reduced(self) -> jax.Array:
+        if self._reduced is None:
+            self._require_dense()
         return self._reduced
 
     @property
     def ivf(self) -> Optional[IVFIndex]:
-        return self.state.ivf
+        return self._require_dense().ivf
 
     @property
     def pq(self) -> Optional[PQIndex]:
-        return self.state.pq
+        return self._require_dense().pq
 
     @property
     def ivfpq(self) -> Optional[IVFPQIndex]:
-        return self.state.ivfpq
+        return self._require_dense().ivfpq
 
     @property
     def compile_count(self) -> int:
         """Number of compiled (statics, bucket) variants this engine holds
-        (single-device + sharded programs combined)."""
+        (single-device + sharded + streaming read/write programs)."""
+        progs = [self._program, self._sharded_program,
+                 self._stream_program, self._stream_sharded_program,
+                 self._upsert_program, self._delete_program,
+                 self._compact_program]
         try:
-            n = int(self._program._cache_size())
-            if self._sharded_program is not None:
-                n += int(self._sharded_program._cache_size())
-            return n
+            return sum(int(p._cache_size()) for p in progs if p is not None)
         except AttributeError as e:     # private jax hook; fail loudly if
             raise RuntimeError(          # an unpinned jax drops it
                 "jax no longer exposes PjitFunction._cache_size(); "
                 "SearchEngine.compile_count needs a replacement hook"
             ) from e
 
-    def shard(self, mesh: Optional[Mesh] = None, axis: str = "data"):
+    # --- streaming (mutable) serving -------------------------------------
+
+    @property
+    def streaming(self) -> bool:
+        return self.config.stream is not None
+
+    def _require_stream(self):
+        if self.store is None:
+            raise RuntimeError(
+                "this engine is read-only; enable the write path with "
+                "ServeConfig(stream=StreamConfig(...))")
+
+    def _init_stream(self):
+        from .segments import compact_fn, delete_fn, make_mutable, upsert_fn
+        from .stream import sharded_stream_search_fn, stream_search_fn
+        self.store, self.frozen = make_mutable(
+            self.state, self.config.stream, self.config.index)
+        # the store owns fresh (capacity-padded) copies of every database
+        # leaf, so the dense EngineState duplicates them — release the
+        # duplicated buffers (the frozen quantizers and any caller-owned
+        # corpus stay shared/alive) instead of holding 2x forever
+        hold = {id(leaf) for leaf in jax.tree_util.tree_leaves(self.frozen)}
+        if self._user_corpus is not None:
+            hold.add(id(self._user_corpus))
+        dense = {id(a): a for a in jax.tree_util.tree_leaves(self.state)}
+        for leaf in dense.values():
+            if id(leaf) not in hold and not leaf.is_deleted():
+                leaf.delete()
+        self.state = None
+        self._reduced = None
+        # fresh closures: per-engine compile caches, same as _program. The
+        # write programs donate the store, so the .at[] updates alias the
+        # input buffers instead of copying the row store per write.
+        def _engine_stream_fn(store, frozen, queries, k, **kw):
+            return stream_search_fn(store, frozen, queries, k, **kw)
+        self._stream_program = jax.jit(_engine_stream_fn,
+                                       static_argnames=_SEARCH_STATICS)
+
+        def _engine_upsert(store, frozen, ids, vectors):
+            return upsert_fn(store, frozen, ids, vectors)
+        self._upsert_program = jax.jit(_engine_upsert, donate_argnums=(0,))
+
+        def _engine_delete(store, ids):
+            return delete_fn(store, ids)
+        self._delete_program = jax.jit(_engine_delete, donate_argnums=(0,))
+
+        def _engine_compact(store, frozen, *, index):
+            return compact_fn(store, frozen, index=index)
+        self._compact_program = jax.jit(
+            _engine_compact, static_argnames=("index",), donate_argnums=(0,))
+
+        def _engine_stream_sharded(sbase, repl, queries, k, **kw):
+            return sharded_stream_search_fn(sbase, repl, queries, k, **kw)
+        self._stream_sharded_program = jax.jit(
+            _engine_stream_sharded,
+            static_argnames=_SEARCH_STATICS + ("mesh", "axis"))
+
+    def upsert(self, ids: jax.Array, vectors: jax.Array):
+        """Insert or overwrite rows by external id (ids (B,), vectors
+        (B, D)). Pure in-place delta appends — no recompilation (batches
+        pad to ``StreamConfig.write_bucket``-floored power-of-two buckets)
+        and no index rebuild; the delta auto-compacts into the base at
+        ``compact_threshold``. Returns ``self``.
+        """
+        self._require_stream()
+        scfg = self.config.stream
+        ids = jnp.asarray(ids, jnp.int32).reshape(-1)
+        vectors = jnp.asarray(vectors, jnp.float32).reshape(ids.shape[0], -1)
+        cap = scfg.delta_capacity
+        point = max(1, min(cap, int(scfg.compact_threshold * cap)))
+        b = 0
+        while b < ids.shape[0]:
+            chunk = min(ids.shape[0] - b, point)
+            if self._delta_used + chunk > point:
+                self.compact()
+            cid, cv = ids[b:b + chunk], vectors[b:b + chunk]
+            bucket = _bucket(chunk, scfg.write_bucket)
+            if bucket != chunk:
+                cid = jnp.pad(cid, (0, bucket - chunk), constant_values=-1)
+                cv = jnp.pad(cv, ((0, bucket - chunk), (0, 0)))
+            # dropped stays 0 by construction (the chunking above never
+            # exceeds the compact point), so it is not synced to host here
+            self.store, _ = self._upsert_program(self.store, self.frozen,
+                                                 cid, cv)
+            self._delta_used += chunk
+            b += chunk
+        return self
+
+    def delete(self, ids: jax.Array):
+        """Delete rows by external id: tombstone base copies, punch delta
+        holes. Absent ids are no-ops. Returns ``self``."""
+        self._require_stream()
+        ids = jnp.asarray(ids, jnp.int32).reshape(-1)
+        bucket = _bucket(ids.shape[0], self.config.stream.write_bucket)
+        if bucket != ids.shape[0]:
+            ids = jnp.pad(ids, (0, bucket - ids.shape[0]),
+                          constant_values=-1)
+        self.store = self._delete_program(self.store, ids)
+        return self
+
+    def compact(self):
+        """Fold the delta segment into the base index (re-coding against
+        the frozen quantizers — shapes and compiled programs survive).
+
+        If the append would overflow the pre-allocated row capacity or a
+        posting cell's slack, the store grows host-side and the compaction
+        retries: correct, but a recompile point (``grow_count`` ticks) —
+        size ``StreamConfig.row_capacity``/``cell_slack`` to avoid it.
+        Returns ``self``.
+        """
+        self._require_stream()
+        from .segments import grow_store
+        scfg = self.config.stream
+        store, dropped = self._compact_program(self.store, self.frozen,
+                                               index=self.config.index)
+        while int(dropped):
+            # one delta's worth of cell slack covers the worst case (every
+            # delta row landing in one cell), so a single grow suffices
+            store = grow_store(store,
+                               row_extra=4 * scfg.delta_capacity,
+                               cell_extra=scfg.delta_capacity)
+            self.grow_count += 1
+            store, dropped = self._compact_program(store, self.frozen,
+                                                   index=self.config.index)
+        self.store = store
+        self._delta_used = 0
+        if self._stream_sharded_base is not None:
+            self._shard_stream_base()        # re-lay the (grown) base out
+        return self
+
+    def _shard_stream_base(self):
+        from repro.parallel.engine import shard_stream
+        self._stream_sharded_base = shard_stream(
+            self.store, self.frozen, self._mesh, axis=self._shard_axis,
+            index=self.config.index)
+
+    # --- sharding ---------------------------------------------------------
+
+    def shard(self, mesh: Optional[Mesh] = None, axis: str = "data",
+              donate: bool = False):
         """Partition the engine over the ``axis`` of ``mesh`` (default: the
         mesh activated by ``repro.parallel.context.mesh_context``).
 
@@ -486,18 +675,44 @@ class SearchEngine:
         same results, database split across the mesh devices. Returns
         ``self`` for chaining. Re-call with a different mesh to re-shard.
 
-        Memory note: the dense single-device ``self.state`` stays alive
-        (it backs re-sharding, the back-compat views, and switching back
-        via ``sharded_state = None``), so sharding temporarily holds both
-        copies; at corpus scales where that matters, build -> shard ->
-        drop the dense leaves yourself (donation hooks are a ROADMAP item).
+        ``donate=True`` releases the dense single-device buffers once the
+        sharded copy is placed (no 2x database memory): the back-compat
+        views and re-sharding then raise, and switching back via
+        ``sharded_state = None`` is no longer possible. With the default
+        ``donate=False`` both copies stay live — fine for dry-runs, 2x
+        memory at real scale.
+
+        On a streaming engine the **base** shards and the delta segment /
+        tombstones stay replicated (writes keep working; ``compact()``
+        re-lays the base out). Donation is refused there: the dense store
+        is the write path.
         """
-        from repro.parallel.engine import shard_engine
         if mesh is None:
             from repro.parallel.context import require_mesh
             mesh = require_mesh("SearchEngine.shard()")
-        self.sharded_state = shard_engine(self.state, mesh, axis=axis)
         self._mesh, self._shard_axis = mesh, axis
+        if self.streaming:
+            if donate:
+                raise ValueError(
+                    "donate=True is not supported on a streaming engine: "
+                    "the dense StreamStore backs upsert/delete/compact")
+            self._shard_stream_base()
+            return self
+        from repro.parallel.engine import shard_engine
+        keep = (self._user_corpus,) if self._user_corpus is not None else ()
+        self.sharded_state = shard_engine(self._require_dense(), mesh,
+                                          axis=axis, donate=donate,
+                                          keep=keep)
+        if donate:
+            self.state = None
+            self._reduced = None
+            if self.reducer is not None:
+                # the dense projection arrays were donated; point the
+                # public reducer at the replicated sharded copies so
+                # eng.reducer(x) keeps working
+                matrix, mean = self.sharded_state.proj
+                self.reducer = self.reducer._replace(matrix=matrix,
+                                                     mean=mean)
         if self._sharded_program is None:
             def _engine_sharded_fn(sstate, queries, k, **kw):
                 return sharded_search_fn(sstate, queries, k, **kw)
@@ -531,7 +746,22 @@ class SearchEngine:
                   backend=cfg.pq_backend if coded else "jnp",
                   interpret=cfg.pq_interpret if coded else True,
                   lut_dtype=cfg.lut_dtype if coded else "f32")
-        if self.sharded_state is not None:
+        if self.streaming:
+            if self._stream_sharded_base is not None:
+                from .stream import StreamReplica
+                repl = StreamReplica(
+                    row_ids=self.store.row_ids, dead=self.store.dead,
+                    delta_vectors=self.store.delta_vectors,
+                    delta_reduced=self.store.delta_reduced,
+                    delta_ids=self.store.delta_ids,
+                    delta_count=self.store.delta_count)
+                d, ids = self._stream_sharded_program(
+                    self._stream_sharded_base, repl, queries, k,
+                    mesh=self._mesh, axis=self._shard_axis, **kw)
+            else:
+                d, ids = self._stream_program(self.store, self.frozen,
+                                              queries, k, **kw)
+        elif self.sharded_state is not None:
             d, ids = self._sharded_program(
                 self.sharded_state, queries, k, mesh=self._mesh,
                 axis=self._shard_axis, **kw)

@@ -1,0 +1,281 @@
+"""Streaming search: one XLA program over base index + delta segment +
+tombstones.
+
+``stream_search_fn`` is the mutable-engine counterpart of
+``repro.search.serve.search_fn``: the same project -> probe/scan ->
+re-rank pipeline, extended with
+
+* a **tombstone mask** (``live = row_ids >= 0 & ~dead``) applied *before*
+  every base top-k, so dead rows can never crowd live candidates out of
+  the budget (for the coded indexes the mask rides the additive ``base``
+  term, which is what lets the fused Pallas ADC-gather kernel serve the
+  masked scan unchanged);
+* an **exact delta scan** — recently upserted rows are scored with true
+  squared distances in the scan space, so fresh writes are served at full
+  fidelity before they are ever quantized;
+* a **tombstone-masked merge** of the two layers in one internal id space
+  (base row r | delta slot ``n_cap + s``), followed by the shared
+  dedup'd exact re-rank (two-source gather) and a final map from internal
+  ids to **external** ids.
+
+Everything is shape-static in (n_cap, delta capacity, query bucket), so a
+serving process upserting/deleting/compacting at full tilt reuses one
+compiled program per (index kind, knobs, k, bucket) — pinned by
+``tests/test_stream.py``.
+
+``sharded_stream_search_fn`` runs the same pipeline under ``shard_map``:
+the base is partitioned exactly like read-only sharded serving
+(``repro.parallel.engine.shard_stream``), while the delta segment,
+tombstone bitmap, and id maps **replicate** — writes touch only
+replicated leaves, so the sharded base stays valid between compactions
+and every shard scans the delta identically.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.kernels.pq_adc.lut import center_lut
+from repro.kernels.pq_adc.ref import pq_adc_scores_ref
+from .ivf import ivf_local_scan, probe_cells
+from .ivfpq import ivfpq_adc_scan, ivfpq_local_scan
+from .knn import _sq_dists, masked_topk
+from .pq import _check_adc_args, pq_local_scan
+from .segments import FrozenParams, StreamStore, live_mask
+from .serve import ShardedEngineState, _dedupe_candidates
+
+__all__ = ["stream_search_fn", "sharded_stream_search_fn", "StreamReplica"]
+
+
+class StreamReplica(NamedTuple):
+    """The replicated (small, write-hot) leaves a sharded streaming search
+    needs next to the sharded base: id maps, tombstones, and the delta
+    segment. Rebuilt from the ``StreamStore`` per call — upserts and
+    deletes never touch the sharded base."""
+    row_ids: jax.Array                   # (n_cap,)
+    dead: jax.Array                      # (n_cap,) bool
+    delta_vectors: jax.Array             # (cap, D)
+    delta_reduced: Optional[jax.Array]   # (cap, m)
+    delta_ids: jax.Array                 # (cap,)
+    delta_count: jax.Array               # ()
+
+
+def _delta_scan(qr, delta_scan_rows, delta_ids, delta_count, n_cap, n_cand):
+    """Exact scan of the delta segment in the scan space; internal ids are
+    offset by ``n_cap``. Empty/hole slots mask to (+inf, -1)."""
+    cap = delta_ids.shape[0]
+    alive = (jnp.arange(cap) < delta_count) & (delta_ids >= 0)
+    d2 = _sq_dists(qr, delta_scan_rows)
+    d2 = jnp.where(alive[None, :], d2, jnp.inf)
+    ids = jnp.broadcast_to((n_cap + jnp.arange(cap))[None, :], d2.shape)
+    return masked_topk(d2, ids, min(n_cand, cap))
+
+
+def _stream_rerank(queries, corpus, delta_vectors, cand, k):
+    """``exact_rerank`` with the two-source gather: internal ids below
+    ``n_cap`` pull base corpus rows, the rest pull delta rows. Returns
+    (dists (Q, k), INTERNAL ids (Q, k)); pads are (+inf, -1)."""
+    cand, valid = _dedupe_candidates(cand)
+    n_cap = corpus.shape[0]
+    cap = delta_vectors.shape[0]
+    isd = cand >= n_cap
+    bv = jnp.take(corpus, jnp.clip(cand, 0, n_cap - 1), axis=0)
+    dv = jnp.take(delta_vectors, jnp.clip(cand - n_cap, 0, cap - 1), axis=0)
+    cv = jnp.where(isd[..., None], dv, bv)
+    d2 = jnp.sum((cv - queries[:, None, :]) ** 2, axis=-1)
+    d2 = jnp.where(valid, d2, jnp.inf)
+    neg, sel = jax.lax.top_k(-d2, k)
+    ids = jnp.take_along_axis(cand, sel, axis=1)
+    return jnp.sqrt(jnp.maximum(-neg, 0.0)), ids
+
+
+def _to_external(ids, row_ids, delta_ids):
+    """Internal (base row | n_cap + slot) -> external ids; -1 pads kept."""
+    n_cap = row_ids.shape[0]
+    cap = delta_ids.shape[0]
+    ext_b = jnp.take(row_ids, jnp.clip(ids, 0, n_cap - 1))
+    ext_d = jnp.take(delta_ids, jnp.clip(ids - n_cap, 0, cap - 1))
+    ext = jnp.where(ids >= n_cap, ext_d, ext_b)
+    return jnp.where(ids >= 0, ext, -1)
+
+
+def stream_search_fn(store: StreamStore, frozen: FrozenParams,
+                     queries: jax.Array, k: int, *, index: str = "flat",
+                     nprobe: int = 8, rerank: int = 64, backend: str = "jnp",
+                     interpret: bool = True, lut_dtype: str = "f32"):
+    """The mutable-engine query pipeline as one pure traceable function.
+
+    project -> tombstone-masked base probe/scan -> exact delta scan ->
+    merged top-C -> two-source exact re-rank -> external-id top-k.
+    Returns (dists (Q, k), external ids (Q, k)); -1 ids pad short rows.
+    """
+    _check_adc_args(backend, lut_dtype)
+    if index == "pq" and backend == "kernel":
+        raise ValueError(
+            "streaming index='pq' needs backend='jnp': the shared-codes "
+            "Pallas kernel has no masked entry point for an arbitrary "
+            "tombstone bitmap (ivfpq folds the mask into the base term)")
+    queries = jnp.asarray(queries, jnp.float32)
+    qr = queries
+    if frozen.proj is not None:
+        matrix, mean = frozen.proj
+        qr = (queries - mean) @ matrix.T
+    approximate = frozen.proj is not None or index in ("pq", "ivfpq")
+    n_cand = max(k, rerank) if approximate else k
+    live = live_mask(store)
+    scan_rows = store.reduced if store.reduced is not None else store.corpus
+    n_cap = store.corpus.shape[0]
+    if index == "ivf":
+        _, cand, _ = probe_cells(frozen.centroids, store.lists, qr, nprobe,
+                                 n_cand)
+        ok = (cand >= 0) & live[jnp.clip(cand, 0, n_cap - 1)]
+        cv = jnp.take(scan_rows, jnp.maximum(cand, 0), axis=0)
+        d2 = jnp.sum((cv - qr[:, None, :]) ** 2, axis=-1)
+        bd2, bids = masked_topk(jnp.where(ok, d2, jnp.inf), cand, n_cand)
+    elif index == "pq":
+        nq = qr.shape[0]
+        m, kc = frozen.cbnorm.shape
+        tables = frozen.cbnorm[None] + (qr @ frozen.lut_w).reshape(nq, m, kc)
+        const = jnp.sum(qr * qr, axis=1)
+        if lut_dtype != "f32":
+            tables, offs = center_lut(tables)
+            const = const + offs
+        scores = (pq_adc_scores_ref(tables, store.codes, lut_dtype)
+                  + const[:, None])
+        scores = jnp.where(live[None, :], scores, jnp.inf)
+        ids = jnp.broadcast_to(jnp.arange(n_cap)[None, :], scores.shape)
+        bd2, bids = masked_topk(scores, ids, n_cand)
+    elif index == "ivfpq":
+        bd2, bids = ivfpq_adc_scan(
+            frozen.centroids, store.lists, store.codes_cell,
+            store.bias_cell, frozen.lut_w, frozen.cbnorm, qr, n_cand,
+            nprobe, backend, interpret, lut_dtype, live=live)
+    else:
+        d2 = _sq_dists(qr, scan_rows)
+        d2 = jnp.where(live[None, :], d2, jnp.inf)
+        ids = jnp.broadcast_to(jnp.arange(n_cap)[None, :], d2.shape)
+        bd2, bids = masked_topk(d2, ids, n_cand)
+    delta_scan_rows = (store.delta_reduced
+                       if store.delta_reduced is not None
+                       else store.delta_vectors)
+    dd2, dids = _delta_scan(qr, delta_scan_rows, store.delta_ids,
+                            store.delta_count, n_cap, n_cand)
+    md2, mids = masked_topk(jnp.concatenate([bd2, dd2], axis=1),
+                            jnp.concatenate([bids, dids], axis=1), n_cand)
+    dists, internal = _stream_rerank(queries, store.corpus,
+                                     store.delta_vectors, mids, k)
+    return dists, _to_external(internal, store.row_ids, store.delta_ids)
+
+
+# --- sharded streaming (base sharded, delta + tombstones replicated) ---------
+
+def _stream_flat_local(qr, x_loc, live, n_cand, axis):
+    """Shard-local exact scan with the replicated live mask: rows beyond
+    ``n_cap`` are shard padding, rows with ``live`` False are unallocated
+    or tombstoned — both mask to (+inf, -1)."""
+    n_loc = x_loc.shape[0]
+    off = jax.lax.axis_index(axis) * n_loc
+    gid = off + jnp.arange(n_loc)
+    n_cap = live.shape[0]
+    ok = (gid < n_cap) & live[jnp.clip(gid, 0, n_cap - 1)]
+    d2 = jnp.where(ok[None, :], _sq_dists(qr, x_loc), jnp.inf)
+    return masked_topk(d2, jnp.broadcast_to(gid[None, :], d2.shape), n_cand)
+
+
+def _stream_sharded_core(sbase: ShardedEngineState, repl: StreamReplica,
+                         queries: jax.Array, *, k: int, index: str,
+                         nprobe: int, rerank: int, backend: str,
+                         interpret: bool, lut_dtype: str, axis: str):
+    """The shard_map body: masked per-shard base scan + replicated delta
+    scan + distributed merge + two-source re-rank."""
+    queries = jnp.asarray(queries, jnp.float32)
+    qr = queries
+    if sbase.proj is not None:
+        matrix, mean = sbase.proj
+        qr = (queries - mean) @ matrix.T
+    approximate = sbase.proj is not None or index in ("pq", "ivfpq")
+    n_cand = max(k, rerank) if approximate else k
+    live = (repl.row_ids >= 0) & ~repl.dead
+    n_cap = repl.row_ids.shape[0]
+    if index == "ivf":
+        d2, cand = ivf_local_scan(sbase.centroids, sbase.lists,
+                                  sbase.cell_vecs, qr, n_cand, nprobe, axis,
+                                  live=live)
+    elif index == "pq":
+        d2, cand = pq_local_scan(sbase.lut_w, sbase.cbnorm, sbase.codes,
+                                 qr, n_cand, sbase.n_real, axis,
+                                 backend=backend, interpret=interpret,
+                                 lut_dtype=lut_dtype, live=live)
+    elif index == "ivfpq":
+        d2, cand = ivfpq_local_scan(
+            sbase.centroids, sbase.lists, sbase.codes_cell, sbase.bias_cell,
+            sbase.lut_w, sbase.cbnorm, qr, n_cand, nprobe, axis,
+            backend=backend, interpret=interpret, lut_dtype=lut_dtype,
+            live=live)
+    else:
+        x_loc = sbase.reduced if sbase.reduced is not None else sbase.corpus
+        d2, cand = _stream_flat_local(qr, x_loc, live, n_cand, axis)
+    d2g = jax.lax.all_gather(d2, axis, axis=1, tiled=True)
+    idg = jax.lax.all_gather(cand, axis, axis=1, tiled=True)
+    bd2, bids = masked_topk(d2g, idg, n_cand)
+    delta_scan_rows = (repl.delta_reduced if repl.delta_reduced is not None
+                       else repl.delta_vectors)
+    dd2, dids = _delta_scan(qr, delta_scan_rows, repl.delta_ids,
+                            repl.delta_count, n_cap, n_cand)
+    md2, mids = masked_topk(jnp.concatenate([bd2, dd2], axis=1),
+                            jnp.concatenate([bids, dids], axis=1), n_cand)
+    # two-source re-rank: base rows scored by their owner shard, delta rows
+    # scored identically on every shard; pmin assembles the full row
+    cand2, valid = _dedupe_candidates(mids)
+    n_loc = sbase.corpus.shape[0]
+    cap = repl.delta_vectors.shape[0]
+    off = jax.lax.axis_index(axis) * n_loc
+    isd = cand2 >= n_cap
+    local = cand2 - off
+    own_base = valid & ~isd & (local >= 0) & (local < n_loc)
+    bv = jnp.take(sbase.corpus, jnp.clip(local, 0, n_loc - 1), axis=0)
+    dv = jnp.take(repl.delta_vectors,
+                  jnp.clip(cand2 - n_cap, 0, cap - 1), axis=0)
+    cv = jnp.where(isd[..., None], dv, bv)
+    d2 = jnp.sum((cv - queries[:, None, :]) ** 2, axis=-1)
+    d2 = jnp.where(own_base | (valid & isd), d2, jnp.inf)
+    d2 = jax.lax.pmin(d2, axis)
+    neg, sel = jax.lax.top_k(-d2, k)
+    internal = jnp.take_along_axis(cand2, sel, axis=1)
+    internal = jnp.where(jnp.isneginf(neg), -1, internal)
+    dists = jnp.sqrt(jnp.maximum(-neg, 0.0))
+    return dists, _to_external(internal, repl.row_ids, repl.delta_ids)
+
+
+def sharded_stream_search_fn(sbase: ShardedEngineState, repl: StreamReplica,
+                             queries: jax.Array, k: int, *, mesh: Mesh,
+                             axis: str = "data", index: str = "flat",
+                             nprobe: int = 8, rerank: int = 64,
+                             backend: str = "jnp", interpret: bool = True,
+                             lut_dtype: str = "f32"):
+    """``stream_search_fn`` with the base partitioned over ``mesh``.
+
+    Same results as the single-device streaming search on the unsharded
+    store: the per-shard masked scans keep a full local top-C (so the
+    merged base candidate set is exact), and the delta scan is replicated
+    math. Jit with ``mesh``/``axis`` static.
+    """
+    from repro.parallel.sharding import engine_state_specs
+    if index == "pq" and backend == "kernel":
+        raise ValueError(
+            "streaming index='pq' needs backend='jnp' (no masked kernel "
+            "entry point for an arbitrary tombstone bitmap)")
+    base_specs = engine_state_specs(sbase, axis)
+    repl_specs = StreamReplica(*[None if getattr(repl, f) is None else P()
+                                 for f in StreamReplica._fields])
+    core = functools.partial(
+        _stream_sharded_core, k=k, index=index, nprobe=nprobe, rerank=rerank,
+        backend=backend, interpret=interpret, lut_dtype=lut_dtype, axis=axis)
+    f = shard_map(core, mesh=mesh, in_specs=(base_specs, repl_specs, P()),
+                  out_specs=(P(), P()), check_rep=False)
+    return f(sbase, repl, queries)

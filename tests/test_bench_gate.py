@@ -8,13 +8,18 @@ sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
 from benchmarks.check_regression import check, find_row  # noqa: E402
 
 
-def _doc(qps=8000, recall=0.93):
-    return {"rows": [
+def _doc(qps=8000, recall=0.93, ups=None, stream_recall=0.9):
+    doc = {"rows": [
         {"index": "ivfpq", "lut_dtype": "int8", "batch": 256,
          "qps": 7000, "recall_at_10": 0.92},
         {"index": "ivfpq", "lut_dtype": "f32", "batch": 256,
          "qps": qps, "recall_at_10": recall},
     ]}
+    if ups is not None:
+        doc["stream"] = [
+            {"scenario": "stream_90_10", "index": "ivfpq",
+             "upserts_per_sec": ups, "recall_at_10": stream_recall}]
+    return doc
 
 
 def test_find_row_selects_the_gated_cell():
@@ -45,3 +50,32 @@ def test_gate_fails_when_fresh_row_missing():
 def test_gate_tolerates_missing_baseline_row():
     failures, report = check({"rows": []}, _doc())
     assert not failures and any("skipping" in r for r in report)
+
+
+# --- streaming (update-throughput) gate --------------------------------------
+
+def test_stream_gate_inactive_without_baseline_rows():
+    """Pre-streaming baselines: the stream compare just skips."""
+    failures, report = check(_doc(), _doc(ups=5000))
+    assert not failures
+    assert any("skipping stream" in r for r in report)
+
+
+def test_stream_gate_passes_within_thresholds():
+    failures, _ = check(_doc(ups=5000), _doc(ups=4000))      # -20%
+    assert not failures
+
+
+def test_stream_gate_fails_on_update_throughput_drop():
+    failures, _ = check(_doc(ups=5000), _doc(ups=3000))      # -40%
+    assert any("update-throughput" in f for f in failures)
+
+
+def test_stream_gate_fails_on_stream_recall_drop():
+    failures, _ = check(_doc(ups=5000), _doc(ups=5000, stream_recall=0.85))
+    assert any("streaming recall" in f for f in failures)
+
+
+def test_stream_gate_fails_when_fresh_rows_vanish():
+    failures, _ = check(_doc(ups=5000), _doc())
+    assert any("missing the stream row" in f for f in failures)

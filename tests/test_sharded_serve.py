@@ -14,6 +14,7 @@ The full matrix needs 8 simulated devices
 cases skip and the 1-shard mesh still exercises the whole shard_map path.
 """
 import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -164,6 +165,84 @@ def test_shard_aware_builders_prepad_cells():
     _, i1 = ivfpq_search(plain, q, K, nprobe=5)
     _, i2 = ivfpq_search(pre, q, K, nprobe=5)
     np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+
+
+def test_shard_donate_releases_dense_buffers():
+    """``shard(donate=True)`` frees the dense EngineState (no 2x database
+    memory): every dense leaf is deleted or — by identity — lives on in
+    the sharded pytree; the dense views raise; results are unchanged."""
+    shards = min(2, jax.device_count())
+    x = _data()
+    eng = SearchEngine(x, ServeConfig(
+        target_dim=8, rerank=64, index="ivfpq", nlist=12, nprobe=5,
+        pq_subspaces=8, pq_centroids=64,
+        mpad=MPADConfig(m=8, iters=16), fit_sample=512))
+    q = _queries()
+    d0, i0 = eng.search(q, K)
+    old_leaves = jax.tree.leaves(eng.state)
+    eng.shard(_mesh(shards), donate=True)
+    placed = {id(leaf) for leaf in jax.tree.leaves(eng.sharded_state)}
+    for leaf in old_leaves:
+        # the caller-supplied corpus array stays caller-owned by design
+        assert leaf.is_deleted() or id(leaf) in placed or leaf is x
+    assert eng.state is None
+    with pytest.raises(RuntimeError, match="donate"):
+        eng.corpus
+    with pytest.raises(RuntimeError, match="donate"):
+        eng.shard(_mesh(shards))                 # no dense state to re-shard
+    d1, i1 = eng.search(q, K)
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+    np.testing.assert_allclose(np.asarray(d0), np.asarray(d1), atol=1e-5)
+    # the public reducer was re-pointed at the replicated projection
+    # copies, so it keeps working after the dense arrays were donated
+    red = eng.reducer(q)
+    assert red.shape == (q.shape[0], 8)
+
+
+def test_shard_donate_spares_user_owned_corpus():
+    """A caller-supplied f32 corpus array passes into EngineState by
+    reference; donation must not delete it out from under the caller."""
+    x = jnp.asarray(_data(), jnp.float32)
+    eng = SearchEngine(x, ServeConfig(target_dim=None, index="flat"))
+    eng.shard(_mesh(1), donate=True)
+    assert not x.is_deleted()
+    assert float(jnp.sum(x)) == float(jnp.sum(x))    # still usable
+
+
+def test_balanced_cell_placement_improves_shard_mass():
+    """Load-aware placement (greedy bin-pack by posting mass) must beat
+    the unbalanced layout on a skewed corpus, without changing results."""
+    from repro.search import balance_cells, build_ivfpq
+    from repro.search.ivfpq import ivfpq_search
+    key = jax.random.key(0)
+    nlist, shards, d = 16, 4, DIM
+    sizes = [600, 300, 150, 80, 40, 30, 20, 15] + [10] * 8
+    centers = jax.random.normal(key, (16, d)) * 6
+    x = jnp.concatenate([
+        centers[i] + 0.1 * jax.random.normal(jax.random.fold_in(key, i),
+                                             (s, d))
+        for i, s in enumerate(sizes)])
+
+    def imbalance(lists):
+        per = lists.shape[0] // shards
+        mass = [(np.asarray(lists[s * per:(s + 1) * per]) >= 0).sum()
+                for s in range(shards)]
+        return max(mass) - min(mass)
+
+    bal = build_ivfpq(jax.random.key(1), x, nlist, 8, 64, shards=shards)
+    raw = build_ivfpq(jax.random.key(1), x, nlist, 8, 64, shards=shards,
+                      balance=False)
+    assert imbalance(bal.lists) < imbalance(raw.lists)
+    q = x[:32] + 0.02 * jax.random.normal(jax.random.key(9), (32, d))
+    _, i1 = ivfpq_search(bal, q, K, nprobe=8)
+    _, i2 = ivfpq_search(raw, q, K, nprobe=8)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    # the permutation is a permutation: every cell placed exactly once
+    counts = np.asarray(jnp.bincount(
+        jnp.argmin(((x[:, None, :] - bal.centroids[None]) ** 2).sum(-1),
+                   axis=1), length=nlist))
+    perm = balance_cells(counts, shards)
+    assert sorted(perm.tolist()) == list(range(nlist))
 
 
 def test_sharded_bucket_padding_never_perturbs_results():

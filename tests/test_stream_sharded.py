@@ -1,0 +1,131 @@
+"""Sharded streaming serving: base sharded, delta + tombstones replicated.
+
+``sharded_stream_search_fn`` over ``shard_stream`` must be invisible:
+identical ids to the single-device streaming search, with writes landing
+on the replicated leaves only (no re-shard between compactions) and
+``compact()`` re-laying the base out transparently.
+
+The >1-shard cases need simulated devices
+(``XLA_FLAGS=--xla_force_host_platform_device_count=8`` — both the
+``tier1-stream`` and ``tier1-multidevice`` CI jobs); single-device
+sessions run the 1-shard mesh through the whole shard_map path.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import MPADConfig
+from repro.search import SearchEngine, ServeConfig, StreamConfig
+
+pytestmark = [pytest.mark.stream, pytest.mark.multidevice]
+
+N, DIM, K = 601, 32, 10
+
+
+def _data(seed=0, n=N, d=DIM):
+    key = jax.random.key(seed)
+    centers = jax.random.normal(key, (12, d)) * 2
+    lab = jax.random.randint(jax.random.fold_in(key, 1), (n,), 0, 12)
+    return centers[lab] + 0.3 * jax.random.normal(
+        jax.random.fold_in(key, 2), (n, d))
+
+
+def _queries(nq=24):
+    x = _data()
+    return x[:nq] + 0.02 * jax.random.normal(jax.random.key(9), (nq, DIM))
+
+
+def _engine(index, lut="f32", backend="jnp", target_dim=None):
+    return SearchEngine(_data(), ServeConfig(
+        target_dim=target_dim, rerank=64, index=index, nlist=12, nprobe=5,
+        pq_subspaces=8, pq_centroids=64, lut_dtype=lut, pq_backend=backend,
+        mpad=MPADConfig(m=8, iters=16) if target_dim else None,
+        fit_sample=512, stream=StreamConfig(delta_capacity=64)))
+
+
+def _mesh(shards):
+    if jax.device_count() < shards:
+        pytest.skip(f"needs {shards} devices (run under XLA_FLAGS="
+                    f"--xla_force_host_platform_device_count={shards})")
+    return jax.make_mesh((shards,), ("data",),
+                         devices=jax.devices()[:shards])
+
+
+def _write_some(eng, seed=0):
+    rng = np.random.RandomState(seed)
+    eng.upsert(np.arange(N, N + 20), rng.randn(20, DIM).astype(np.float32))
+    eng.delete(np.arange(0, 30, 3))
+    eng.upsert(np.array([5, 8]), rng.randn(2, DIM).astype(np.float32))
+
+
+@pytest.mark.parametrize("shards", (1, 2, 8))
+@pytest.mark.parametrize("index", ("flat", "ivf", "pq", "ivfpq"))
+def test_sharded_stream_matches_single_device(index, shards):
+    eng = _engine(index)
+    _write_some(eng)
+    q = _queries()
+    d1, i1 = eng.search(q, K)                 # single-device streaming
+    eng.shard(_mesh(shards))
+    d2, i2 = eng.search(q, K)                 # sharded streaming
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2), atol=1e-5)
+
+
+@pytest.mark.parametrize("lut,backend", [("int8", "jnp"),
+                                         ("f32", "kernel"),
+                                         ("int8", "kernel")])
+def test_sharded_stream_ivfpq_quantized_and_kernel(lut, backend):
+    """Quantized LUTs and the fused ADC-gather kernel both serve the
+    tombstone-masked sharded scan (mask rides the base term)."""
+    shards = min(2, jax.device_count())
+    eng = _engine("ivfpq", lut=lut, backend=backend)
+    _write_some(eng)
+    q = _queries()
+    d1, i1 = eng.search(q, K)
+    eng.shard(_mesh(shards))
+    d2, i2 = eng.search(q, K)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+
+
+def test_writes_while_sharded_and_compact_reshards():
+    """Upserts/deletes land on the replicated leaves (base untouched);
+    compact() folds them in and re-lays the sharded base out — results
+    stay identical to the unsharded store throughout."""
+    shards = min(2, jax.device_count())
+    eng = _engine("ivfpq")
+    eng.shard(_mesh(shards))
+    rng = np.random.RandomState(1)
+    base_before = eng._stream_sharded_base
+    eng.upsert(np.arange(N + 100, N + 130),
+               rng.randn(30, DIM).astype(np.float32))
+    eng.delete(np.arange(10, 20))
+    assert eng._stream_sharded_base is base_before   # writes don't re-shard
+    q = _queries()
+    d1, i1 = eng.search(q, K)
+    eng.compact()
+    assert eng._stream_sharded_base is not base_before
+    assert int(eng.store.delta_count) == 0
+    d2, i2 = eng.search(q, K)
+    eng._stream_sharded_base = None                  # back to single-device
+    d3, i3 = eng.search(q, K)
+    np.testing.assert_array_equal(np.asarray(i2), np.asarray(i3))
+    # compaction itself must not change what is served
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+
+
+def test_sharded_stream_with_projection():
+    shards = min(2, jax.device_count())
+    eng = _engine("ivfpq", target_dim=8)
+    _write_some(eng)
+    q = _queries()
+    d1, i1 = eng.search(q, K)
+    eng.shard(_mesh(shards))
+    d2, i2 = eng.search(q, K)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+
+
+def test_streaming_shard_refuses_donation():
+    eng = _engine("flat")
+    with pytest.raises(ValueError, match="donate"):
+        eng.shard(_mesh(1), donate=True)
