@@ -213,7 +213,7 @@ def bench_serve_fused(rows, json_doc=None, fast=False):
     one-program engine vs the pre-PR per-stage pipeline (the PR-2
     acceptance row: >= 2x QPS at recall@10 >= 0.9)."""
     import dataclasses
-    from repro.search import SearchEngine, ServeConfig, knn_search
+    from repro.search import build_engine, knn_search
     from repro.search.knn import recall_at_k
     n, dim, nq, k = 16384, 128, 256, 10
     key = jax.random.key(0)
@@ -224,16 +224,20 @@ def bench_serve_fused(rows, json_doc=None, fast=False):
     queries = corpus[:nq] + 0.05 * jax.random.normal(
         jax.random.fold_in(key, 3), (nq, dim))
     _, truth = knn_search(queries, corpus, k)
+    # staged-baseline knobs (shared with the pinned pre-PR pipeline below)
     base_cfg = dict(target_dim=None, rerank=64, nlist=256, nprobe=8,
                     pq_subspaces=16, pq_centroids=256)
-    grid = [("ivfpq", ("f32", "bf16", "int8"))]
+    # engines are declared by pipeline-spec strings (the composable API);
+    # each spec lowers onto the same knobs as the old flat configs
+    grid = [("ivfpq", "ivf256x8>pq16x256", ("f32", "bf16", "int8"))]
     if not fast:
-        grid = [("flat", ("f32",)), ("ivf", ("f32",)),
-                ("pq", ("f32", "bf16", "int8"))] + grid
+        grid = [("flat", "flat", ("f32",)),
+                ("ivf", "ivf256x8", ("f32",)),
+                ("pq", "pq16x256", ("f32", "bf16", "int8"))] + grid
     reps = 5 if fast else 9
     doc_rows = []
-    for index, luts in grid:
-        eng = SearchEngine(corpus, ServeConfig(index=index, **base_cfg))
+    for index, spec, luts in grid:
+        eng = build_engine(corpus, spec)
         for lut in luts:
             eng.config = dataclasses.replace(eng.config, lut_dtype=lut)
             ts = _timeit_dist(eng.search, queries, k, reps=reps)
@@ -251,7 +255,7 @@ def bench_serve_fused(rows, json_doc=None, fast=False):
         if index == "ivfpq":
             # staged baseline: pre-PR pipeline = separate scan + re-rank
             # programs over the same index arrays
-            idx = eng.state.ivfpq
+            idx = eng.state.index.payload        # the dense IVFPQIndex
             eng.config = dataclasses.replace(eng.config, lut_dtype="f32")
 
             def staged(q, k):

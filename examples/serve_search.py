@@ -14,7 +14,8 @@ import jax.numpy as jnp
 
 from repro.core import MPADConfig
 from repro.data.synthetic import make_clustered
-from repro.search import SearchEngine, ServeConfig, knn_search
+from repro.search import (SearchEngine, ServeConfig, build_engine,
+                          knn_search, load_engine)
 from repro.search.knn import recall_at_k
 
 
@@ -45,12 +46,13 @@ def main():
     jax.block_until_ready(ids_full)
     t_full = time.time() - t0
 
+    # pipelines are declared with index-spec strings: reduce -> coarse ->
+    # [code ->] exact re-rank (repro.search.parse_spec for the grammar)
     t0 = time.time()
-    eng = SearchEngine(corpus, ServeConfig(
-        target_dim=args.target_dim, rerank=4 * args.k, index="ivf",
-        nlist=64, nprobe=8,
+    eng = build_engine(
+        corpus, f"qpad{args.target_dim}>ivf64x8>rr{4 * args.k}",
         mpad=MPADConfig(m=args.target_dim, iters=64, batch_size=2048),
-        fit_sample=4096))
+        fit_sample=4096)
     print(f"build (fit MPAD + reduce + IVF): {time.time()-t0:.1f}s")
     d, ids = eng.search(queries, args.k)          # warm up / compile
     jax.block_until_ready(ids)
@@ -60,12 +62,12 @@ def main():
     t_mpad = time.time() - t0
 
     t0 = time.time()
-    eng_pq = SearchEngine(corpus, ServeConfig(
-        target_dim=args.target_dim, rerank=4 * args.k, index="ivfpq",
-        nlist=max(args.corpus // 64, 16), nprobe=4,
-        pq_subspaces=args.target_dim // 2, pq_centroids=256,
+    eng_pq = build_engine(
+        corpus,
+        f"qpad{args.target_dim}>ivf{max(args.corpus // 64, 16)}x4"
+        f">pq{args.target_dim // 2}x256>rr{4 * args.k}",
         mpad=MPADConfig(m=args.target_dim, iters=64, batch_size=2048),
-        fit_sample=4096))
+        fit_sample=4096)
     print(f"build (fit MPAD + reduce + IVF-PQ): {time.time()-t0:.1f}s")
     d, ids_pq = eng_pq.search(queries, args.k)    # warm up / compile
     jax.block_until_ready(ids_pq)
@@ -131,6 +133,17 @@ def main():
         np.asarray(ids_st)[:, 0] == np.arange(args.corpus,
                                               args.corpus + nb)))
 
+    # snapshot persistence: spec + arrays round-trip through a directory
+    # (covers the streaming store — tombstones and delta included)
+    import tempfile
+    with tempfile.TemporaryDirectory() as snap_dir:
+        t0 = time.time()
+        eng_s.save(snap_dir)
+        eng_r = load_engine(snap_dir)
+        t_snap = time.time() - t0
+        _, ids_r = eng_r.search(queries[:nb], 1)
+        snap_equal = bool(jnp.all(ids_r == ids_st))
+
     rec = float(recall_at_k(ids, truth))
     rec_pq = float(recall_at_k(ids_pq, truth))
     rec_pq8 = float(recall_at_k(ids_pq8, truth))
@@ -149,6 +162,8 @@ def main():
     print(f"streaming IVF-PQ: {nb} upserts + 64 deletes in "
           f"{t_write*1e3:.1f} ms, fresh-top1 from delta {hit_delta:.3f}, "
           f"compact {t_compact*1e3:.0f} ms -> from base {hit_base:.3f}")
+    print(f"snapshot save+load: {t_snap*1e3:.0f} ms, "
+          f"restored ids == live engine: {snap_equal}")
     m_sub = args.target_dim // 2
     print(f"bytes/vector: {args.dim*4} -> {args.target_dim*4} (reduced) -> "
           f"{m_sub} logical ivfpq code bytes "

@@ -2,7 +2,14 @@
 serve batched k-NN queries (the paper's deployment shape).
 
   PYTHONPATH=src python -m repro.launch.serve --corpus 20000 --dim 256 \
-      --target-dim 32 --batches 5
+      --spec "qpad32>ivf64x8>rr40" --batches 5
+
+The pipeline is declared either with ``--spec`` (the index-spec grammar:
+``qpad<m> > ivf<nlist>x<nprobe> > pq<M>x<K>[:f32|bf16|i8][@jnp|kernel] >
+rr<n>``) or with the individual legacy flags (``--index``/``--nlist``/...),
+which are lowered onto the same spec. ``--snapshot-dir`` exercises the
+persistence lifecycle: the built engine is saved and re-loaded before
+serving.
 
 Sharded serving: ``--shards N`` partitions the engine state over an N-way
 data mesh (``--mesh host`` simulates the N devices on CPU — useful for
@@ -20,7 +27,13 @@ def _parse_args():
     ap = argparse.ArgumentParser()
     ap.add_argument("--corpus", type=int, default=20000)
     ap.add_argument("--dim", type=int, default=256)
-    ap.add_argument("--target-dim", type=int, default=32)
+    ap.add_argument("--spec", default=None,
+                    help="index pipeline spec string, e.g. "
+                         "'qpad32>ivf64x8>pq8x256:i8' — overrides "
+                         "--target-dim/--index/--nlist/--nprobe/"
+                         "--pq-subspaces/--lut-dtype/--pq-backend")
+    ap.add_argument("--target-dim", type=int, default=32,
+                    help="MPAD reduction target (0 = no reduction)")
     ap.add_argument("--batch", type=int, default=256)
     ap.add_argument("--batches", type=int, default=5)
     ap.add_argument("--k", type=int, default=10)
@@ -37,6 +50,9 @@ def _parse_args():
     ap.add_argument("--query-bucket", type=int, default=64,
                     help="min padded query-batch size; ragged batches round "
                          "up to powers of two and share compilations")
+    ap.add_argument("--snapshot-dir", default=None, metavar="DIR",
+                    help="save the built engine to DIR and serve from the "
+                         "re-loaded snapshot (persistence smoke)")
     ap.add_argument("--shards", type=int, default=0,
                     help="partition EngineState over this many devices "
                          "(data-parallel sharded serving; 0 = single-device)")
@@ -58,6 +74,22 @@ def _parse_args():
     return ap.parse_args()
 
 
+def _spec_from_flags(args):
+    """Lower the legacy flags onto a pipeline spec (one build path; the
+    stages are constructed directly so the grammar lives only in
+    ``repro.search.spec``). Import deferred: must run after the XLA_FLAGS
+    setup in ``main``."""
+    from repro.search import Coarse, Code, IndexSpec, Reduce, Rerank
+    return IndexSpec(
+        reduce=Reduce(args.target_dim) if args.target_dim else None,
+        coarse=(Coarse(nlist=args.nlist, nprobe=args.nprobe)
+                if args.index in ("ivf", "ivfpq") else None),
+        code=(Code(subspaces=args.pq_subspaces, centroids=256,
+                   lut_dtype=args.lut_dtype, backend=args.pq_backend)
+              if args.index in ("pq", "ivfpq") else None),
+        rerank=Rerank(4 * args.k))
+
+
 def main():
     args = _parse_args()
     if args.shards and args.mesh == "host":
@@ -71,29 +103,32 @@ def main():
     from repro.core import MPADConfig
     from repro.data.synthetic import make_clustered
     from repro.launch.mesh import make_serving_mesh
-    from repro.search import (SearchEngine, ServeConfig, StreamConfig,
-                              knn_search)
+    from repro.search import (StreamConfig, build_engine, format_spec,
+                              knn_search, load_engine, parse_spec)
     from repro.search.knn import recall_at_k
 
+    spec = parse_spec(args.spec) if args.spec else _spec_from_flags(args)
     key = jax.random.key(0)
     corpus, _ = make_clustered(key, args.corpus, 1, args.dim, n_clusters=64,
                                spread=0.4, center_scale=1.5)
     t0 = time.time()
-    stream_cfg = (StreamConfig(delta_capacity=args.delta_capacity)
-                  if args.stream else None)
-    engine = SearchEngine(corpus, ServeConfig(
-        target_dim=args.target_dim, rerank=4 * args.k, index=args.index,
-        nlist=args.nlist, nprobe=args.nprobe,
-        pq_subspaces=args.pq_subspaces,
-        lut_dtype=args.lut_dtype, pq_backend=args.pq_backend,
-        query_bucket=args.query_bucket, stream=stream_cfg,
-        mpad=MPADConfig(m=args.target_dim, iters=64, batch_size=2048),
-        fit_sample=4096))
+    runtime = dict(query_bucket=args.query_bucket, fit_sample=4096)
+    if args.stream:
+        runtime["stream"] = StreamConfig(delta_capacity=args.delta_capacity)
+    if spec.reduce is not None:
+        runtime["mpad"] = MPADConfig(m=spec.reduce.m, iters=64,
+                                     batch_size=2048)
+    engine = build_engine(corpus, spec, **runtime)
     print(f"index built in {time.time()-t0:.1f}s "
-          f"({args.dim}->{args.target_dim} dims, index={args.index}, "
-          f"lut={args.lut_dtype}"
+          f"(spec={format_spec(spec)}, kind={spec.kind}"
           + (f", streaming delta={args.delta_capacity}" if args.stream
              else "") + ")")
+    if args.snapshot_dir:
+        t0 = time.time()
+        engine.save(args.snapshot_dir)
+        engine = load_engine(args.snapshot_dir)
+        print(f"snapshot round-trip via {args.snapshot_dir} in "
+              f"{time.time()-t0:.1f}s (serving from the restored engine)")
     if args.shards:
         mesh = make_serving_mesh(args.shards)
         engine.shard(mesh, donate=args.donate)

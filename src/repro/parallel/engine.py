@@ -1,14 +1,15 @@
 """``shard_engine``: partition a serving ``EngineState`` across a mesh.
 
 The data-parallel layout pass of sharded serving (DESIGN: one shard = one
-slice of the database axis):
+slice of the database axis). The per-kind re-layout is a registry hook
+(``repro.search.registry.IndexOps.shard_payload``):
 
 * **row-major leaves** — corpus rows, flat scan vectors, plain-PQ code rows
   — are padded to a device-count multiple and split along dim 0 (pad rows
   carry global ids >= ``n_real`` and are masked out of every scan);
 * **cell-major leaves** — IVF / IVF-PQ posting lists and the
   ``codes_cell``/``bias_cell`` mirrors, plus a ``cell_vectors`` mirror
-  built here for IVF-Flat — are padded to per-shard-equal cell counts and
+  built for IVF-Flat — are padded to per-shard-equal cell counts and
   split along the cell axis (pad cells are all ``-1`` posting rows, never
   probed);
 * everything else — MPAD projection, coarse centroids, codebook
@@ -16,8 +17,9 @@ slice of the database axis):
   compute identically on every shard.
 
 Placement is by ``NamedSharding`` from ``engine_state_specs``; the result
-is a ``ShardedEngineState`` ready for ``sharded_search_fn`` /
-``SearchEngine.shard()``.
+is a ``ShardedEngineState`` (corpus + projection + the tagged
+``Index`` union carrying the kind's sharded payload) ready for
+``sharded_search_fn`` / ``SearchEngine.shard()``.
 """
 from __future__ import annotations
 
@@ -28,7 +30,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.search.ivf import cell_vectors
+from repro.search.registry import Index, get_ops
 from repro.search.serve import EngineState, ShardedEngineState
 from .context import require_mesh
 from .sharding import engine_state_specs
@@ -71,33 +73,11 @@ def shard_engine(state: EngineState, mesh: Optional[Mesh] = None,
         mesh = require_mesh("shard_engine")
     shards = mesh.shape[axis]
     n = state.corpus.shape[0]
-    corpus = _pad_dim0(state.corpus, shards)
-    # flat stores reduced = corpus when there is no projection; don't ship
-    # the same rows twice
-    reduced = (None if state.reduced is state.corpus
-               else _pad_dim0(state.reduced, shards))
-    codes = centroids = lists = cell_vecs = codes_cell = bias_cell = None
-    lut_w = cbnorm = None
-    if state.pq is not None:
-        codes = _pad_dim0(jnp.asarray(state.pq.codes, jnp.int32), shards)
-        lut_w, cbnorm = state.pq.lut_w, state.pq.cbnorm
-    if state.ivf is not None:
-        centroids = state.ivf.centroids
-        lists = _pad_dim0(state.ivf.lists, shards, fill=-1)
-        cell_vecs = cell_vectors(lists, state.ivf.vectors)
-    if state.ivfpq is not None:
-        ix = state.ivfpq
-        centroids = ix.centroids
-        lists = _pad_dim0(ix.lists, shards, fill=-1)
-        codes_cell = _pad_dim0(ix.codes_cell, shards)
-        bias_cell = _pad_dim0(ix.bias_cell, shards)
-        lut_w, cbnorm = ix.lut_w, ix.cbnorm
+    payload = get_ops(state.index.kind).shard_payload(state, shards)
     sstate = ShardedEngineState(
-        corpus=corpus, proj=state.proj,
-        n_real=jnp.asarray(n, jnp.int32), reduced=reduced, codes=codes,
-        centroids=centroids, lists=lists, cell_vecs=cell_vecs,
-        codes_cell=codes_cell, bias_cell=bias_cell,
-        lut_w=lut_w, cbnorm=cbnorm)
+        corpus=_pad_dim0(state.corpus, shards), proj=state.proj,
+        n_real=jnp.asarray(n, jnp.int32),
+        index=Index(state.index.kind, payload))
     specs = engine_state_specs(sstate, axis)
     if not donate:
         return jax.tree.map(
@@ -135,8 +115,7 @@ def shard_engine(state: EngineState, mesh: Optional[Mesh] = None,
 
 
 def shard_stream(store, frozen, mesh: Optional[Mesh] = None,
-                 axis: str = "data", index: str = "flat"
-                 ) -> ShardedEngineState:
+                 axis: str = "data") -> ShardedEngineState:
     """Partition a streaming engine's **base** layer over ``mesh``.
 
     The mutable store's base arrays (capacity-padded row store, posting
@@ -152,38 +131,12 @@ def shard_stream(store, frozen, mesh: Optional[Mesh] = None,
     # the write programs DONATE the store's buffers, and device_put can
     # return a new Array that still SHARES the input buffer (zero-copy
     # re-placement, e.g. a 1-device mesh) — an upsert would then
-    # invalidate the sharded base. Hand shard_engine genuine copies of
-    # every store-derived leaf; frozen quantizers are never donated and
-    # may alias freely.
-    def _own(a):
-        return None if a is None else jnp.array(a)
-
-    ivf = pq = ivfpq = None
-    reduced = None
-    if index == "flat":
-        reduced = _own(store.reduced)
-    elif index == "ivf":
-        from repro.search.ivf import IVFIndex
-        # vectors need no copy: shard_engine only reads them through
-        # cell_vectors(), whose gather materializes fresh buffers
-        scan_rows = (store.reduced if store.reduced is not None
-                     else store.corpus)
-        ivf = IVFIndex(centroids=frozen.centroids, lists=_own(store.lists),
-                       vectors=scan_rows)
-    elif index == "pq":
-        from repro.search.pq import PQIndex
-        pq = PQIndex(codebooks=frozen.codebooks, codes=_own(store.codes),
-                     lut_w=frozen.lut_w, cbnorm=frozen.cbnorm)
-    elif index == "ivfpq":
-        from repro.search.ivfpq import IVFPQIndex
-        ivfpq = IVFPQIndex(
-            centroids=frozen.centroids, lists=_own(store.lists),
-            codebooks=frozen.codebooks, codes=_own(store.codes),
-            bias=_own(store.bias), codes_cell=_own(store.codes_cell),
-            bias_cell=_own(store.bias_cell),
-            lut_w=frozen.lut_w, cbnorm=frozen.cbnorm)
-    else:
-        raise ValueError(f"unknown index kind {index!r}")
-    base = EngineState(corpus=_own(store.corpus), proj=frozen.proj,
-                       reduced=reduced, ivf=ivf, pq=pq, ivfpq=ivfpq)
+    # invalidate the sharded base. The registry's ``stream_base_payload``
+    # hands shard_engine genuine copies of every store-derived leaf;
+    # frozen quantizers are never donated and may alias freely.
+    kind = frozen.quant.kind
+    corpus_owned = jnp.array(store.corpus)
+    payload = get_ops(kind).stream_base_payload(store, frozen, corpus_owned)
+    base = EngineState(corpus=corpus_owned, proj=frozen.proj,
+                       index=Index(kind, payload))
     return shard_engine(base, mesh, axis=axis)

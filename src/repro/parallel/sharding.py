@@ -43,31 +43,25 @@ def replicate_like(tree: Any) -> Any:
 
 # ------------------------------------------------------------- serving
 
-# ShardedEngineState fields that carry the database axis in dim 0. Row
-# leaves split the corpus by row; cell leaves split the IVF/IVF-PQ posting
-# structures by cell. Everything else (projection, centroids, codebook
-# factorizations, scalars) replicates.
-_ENGINE_DB_SHARDED = frozenset(
-    {"corpus", "reduced", "codes",                   # row-major leaves
-     "lists", "cell_vecs", "codes_cell", "bias_cell"})  # cell-major leaves
-
-
 def engine_state_specs(state, axis: str = "data"):
     """``ShardedEngineState`` -> matching pytree of PartitionSpecs.
 
-    Duck-typed over the NamedTuple fields so this module stays free of
-    search imports; used both as ``shard_map`` in_specs and for the
-    ``device_put`` placement in ``shard_engine``.
+    The corpus rows shard along ``axis`` and the projection replicates;
+    the per-kind sharded index payload gets its spec tree from the ops
+    registry (``IndexOps.payload_specs`` — row- or cell-sharded database
+    leaves, replicated quantizers). Used both as ``shard_map`` in_specs
+    and for the ``device_put`` placement in ``shard_engine``. The
+    registry import is deferred so this module stays importable without
+    the search package.
     """
-    def spec(name, leaf):
-        if leaf is None:
-            return None
-        if name == "proj":
-            return (P(), P())
-        return P(axis) if name in _ENGINE_DB_SHARDED else P()
-
+    from repro.search.registry import Index, get_ops
+    payload_specs = get_ops(state.index.kind).payload_specs(
+        state.index.payload, axis)
     return type(state)(
-        **{f: spec(f, getattr(state, f)) for f in state._fields})
+        corpus=P(axis),
+        proj=None if state.proj is None else (P(), P()),
+        n_real=P(),
+        index=Index(state.index.kind, payload_specs))
 
 
 # -------------------------------------------------------------------- LM

@@ -1,18 +1,25 @@
 """Vector-search substrate: brute-force k-NN, recall metrics, IVF-Flat /
-PQ / IVF-PQ ANN indexes, the batched serving engine that integrates MPAD
-reduction, and the streaming (mutable) layer on top of it."""
+PQ / IVF-PQ ANN indexes, the composable index-spec API (pipeline specs +
+the tagged index union + ops registry), the batched serving engine that
+integrates MPAD reduction, the streaming (mutable) layer on top of it,
+and snapshot persistence."""
 from .knn import (knn_search, knn_search_blocked, masked_topk, recall_at_k,
                   amk_accuracy)
 from .ivf import (IVFIndex, balance_cells, build_ivf, cell_vectors,
                   ivf_search, posting_lists, probe_cells)
 from .ivfpq import IVFPQIndex, build_ivfpq, ivfpq_search
 from .pq import PQIndex, build_pq, pq_search, pq_reconstruct
+from .spec import (Coarse, Code, IndexSpec, Reduce, Rerank, format_spec,
+                   parse_spec, spec_from_config)
+from .registry import Index, IndexOps, ScanParams, get_ops, register_index
 from .segments import (FrozenParams, MutableEngineState, StreamStore,
                        compact_fn, delete_fn, make_mutable, rebuild_state,
                        upsert_fn)
 from .serve import (EngineState, INDEX_KINDS, SearchEngine, ServeConfig,
-                    ShardedEngineState, StreamConfig, exact_rerank,
-                    search_fn, sharded_search_fn)
+                    ShardedEngineState, StreamConfig, build_engine,
+                    config_from_spec, exact_rerank, search_fn,
+                    sharded_search_fn)
+from .snapshot import load_engine, save_engine
 from .stream import StreamReplica, sharded_stream_search_fn, stream_search_fn
 
 __all__ = [
@@ -22,8 +29,15 @@ __all__ = [
     "posting_lists", "probe_cells",
     "IVFPQIndex", "build_ivfpq", "ivfpq_search",
     "PQIndex", "build_pq", "pq_search", "pq_reconstruct",
+    # the composable index-spec API
+    "IndexSpec", "Reduce", "Coarse", "Code", "Rerank",
+    "parse_spec", "format_spec", "spec_from_config", "config_from_spec",
+    "Index", "IndexOps", "ScanParams", "get_ops", "register_index",
+    # engine + lifecycle
     "SearchEngine", "ServeConfig", "EngineState", "ShardedEngineState",
+    "build_engine", "save_engine", "load_engine",
     "search_fn", "sharded_search_fn", "exact_rerank", "INDEX_KINDS",
+    # streaming
     "StreamConfig", "StreamStore", "MutableEngineState", "FrozenParams",
     "make_mutable", "upsert_fn", "delete_fn", "compact_fn", "rebuild_state",
     "StreamReplica", "stream_search_fn", "sharded_stream_search_fn",

@@ -21,10 +21,12 @@ Layers
   fresh rows). ``delta_ids (cap,)`` holds external ids, -1 = empty slot or
   deletion hole; ``delta_count`` is the append pointer.
 
-Quantizers (MPAD projection, coarse centroids, PQ codebooks and their
-LUT factorization) are **frozen** at build time — compaction re-codes
-delta rows against them, never retrains — which is exactly what keeps the
-compiled serve programs cache-valid across the whole write lifecycle.
+Quantizers (MPAD projection + the index kind's frozen payload — coarse
+centroids, PQ codebooks and their LUT factorization — carried as the
+tagged ``Index`` union in ``FrozenParams.quant``) are **frozen** at build
+time; compaction re-codes delta rows against them, never retrains — which
+is exactly what keeps the compiled serve programs cache-valid across the
+whole write lifecycle.
 
 Operations (all pure; the engine jits them with the store donated, so XLA
 aliases the buffers and the ``.at[]`` writes happen in place):
@@ -36,8 +38,8 @@ aliases the buffers and the ``.at[]`` writes happen in place):
   fixed bucket shapes.
 * ``delete_fn(store, ids)`` — tombstone base copies, punch holes in the
   delta. Deleting an absent id is a no-op.
-* ``compact_fn(store, frozen, index=...)`` — fold the delta into the
-  base: residual-PQ re-encode against the frozen centroids/codebooks,
+* ``compact_fn(store, frozen)`` — fold the delta into the base:
+  re-encode against the frozen quantizers (``IndexOps.encode_delta``),
   append rows into the row store and the cell-major
   ``codes_cell``/``bias_cell`` mirrors, extend posting lists into their
   pad slack, clear the delta. All-or-nothing: if the append would
@@ -58,7 +60,8 @@ from typing import NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from .ivf import posting_lists, sq_dists
+from .ivf import sq_dists
+from .registry import Index, _pad_cells, _pad_rows, get_ops
 
 __all__ = ["StreamConfig", "StreamStore", "MutableEngineState",
            "FrozenParams", "make_mutable", "upsert_fn", "delete_fn",
@@ -68,7 +71,8 @@ __all__ = ["StreamConfig", "StreamStore", "MutableEngineState",
 
 @dataclasses.dataclass(frozen=True)
 class StreamConfig:
-    """Write-path knobs (``ServeConfig.stream`` enables streaming)."""
+    """Write-path knobs (``SearchEngine.streaming`` / ``ServeConfig.stream``
+    enable streaming)."""
     delta_capacity: int = 256        # fixed delta segment size (rows)
     compact_threshold: float = 0.75  # auto-compact when the delta holds
     #                                  this fraction of its capacity
@@ -93,12 +97,38 @@ class StreamConfig:
 
 class FrozenParams(NamedTuple):
     """Build-time quantizers shared by base and delta; never mutated (and
-    never donated), so they can alias the original ``EngineState``."""
+    never donated), so they can alias the original ``EngineState``.
+
+    ``quant`` is the tagged union: the index kind plus its frozen payload
+    (None for flat, coarse centroids for ivf, ``PQQuant`` /
+    ``IVFPQQuant`` for the coded kinds). The accessor properties give the
+    per-array views the scan/encode code reads.
+    """
     proj: Optional[Tuple[jax.Array, jax.Array]]   # MPAD (matrix (m,D), mean)
-    centroids: Optional[jax.Array]                # (nlist, d) coarse cells
-    codebooks: Optional[jax.Array]                # (M, K, dsub) PQ codebooks
-    lut_w: Optional[jax.Array]                    # (d, M*K) table projection
-    cbnorm: Optional[jax.Array]                   # (M, K) codeword norms
+    quant: Index                                  # kind + frozen quantizers
+
+    @property
+    def kind(self) -> str:
+        return self.quant.kind
+
+    @property
+    def centroids(self) -> Optional[jax.Array]:
+        q = self.quant.payload
+        if self.quant.kind == "ivf":
+            return q
+        return getattr(q, "centroids", None)
+
+    @property
+    def codebooks(self) -> Optional[jax.Array]:
+        return getattr(self.quant.payload, "codebooks", None)
+
+    @property
+    def lut_w(self) -> Optional[jax.Array]:
+        return getattr(self.quant.payload, "lut_w", None)
+
+    @property
+    def cbnorm(self) -> Optional[jax.Array]:
+        return getattr(self.quant.payload, "cbnorm", None)
 
 
 class StreamStore(NamedTuple):
@@ -132,26 +162,6 @@ MutableEngineState = StreamStore
 def live_mask(store: StreamStore) -> jax.Array:
     """(n_cap,) bool: base rows that are allocated and not tombstoned."""
     return (store.row_ids >= 0) & ~store.dead
-
-
-def _copy(a: jax.Array) -> jax.Array:
-    return jnp.array(a)           # jnp.array copies; safe to donate later
-
-
-def _pad_rows(a: jax.Array, n_cap: int, fill=0) -> jax.Array:
-    pad = n_cap - a.shape[0]
-    if pad <= 0:
-        return _copy(a)
-    widths = ((0, pad),) + ((0, 0),) * (a.ndim - 1)
-    return jnp.pad(a, widths, constant_values=fill)
-
-
-def _pad_cells(a: jax.Array, slack: int, fill=0) -> jax.Array:
-    """Grow the per-cell (dim-1) capacity of a cell-major array."""
-    if slack <= 0:
-        return _copy(a)
-    widths = ((0, 0), (0, slack)) + ((0, 0),) * (a.ndim - 2)
-    return jnp.pad(a, widths, constant_values=fill)
 
 
 def _project(proj, vectors: jax.Array) -> jax.Array:
@@ -190,14 +200,17 @@ def ivfpq_encode(centroids: jax.Array, codebooks: jax.Array, x: jax.Array):
     return assign, codes, bias.astype(jnp.float32)
 
 
-def make_mutable(state, config: StreamConfig,
-                 index: str) -> Tuple[StreamStore, FrozenParams]:
+def make_mutable(state, config: StreamConfig
+                 ) -> Tuple[StreamStore, FrozenParams]:
     """Re-lay an immutable ``EngineState`` into (StreamStore, FrozenParams).
 
-    Every store leaf is a fresh buffer (padded or copied), so the engine
-    can donate the store to the write programs without invalidating the
-    original state or the frozen quantizers.
+    Every store leaf is a fresh buffer (padded or copied —
+    ``IndexOps.store_parts`` lays out the kind-specific base arrays), so
+    the engine can donate the store to the write programs without
+    invalidating the original state or the frozen quantizers.
     """
+    kind = state.index.kind
+    ops = get_ops(kind)
     n, d = state.corpus.shape
     cap = config.delta_capacity
     n_cap = config.row_capacity or n + 4 * cap
@@ -206,51 +219,24 @@ def make_mutable(state, config: StreamConfig,
             f"row_capacity {n_cap} must exceed the corpus size {n} "
             "(compaction needs append slack)")
     proj = state.proj
-    reduced = codes = bias = lists = codes_cell = bias_cell = None
-    centroids = codebooks = lut_w = cbnorm = None
     cell_slack = config.cell_slack if config.cell_slack is not None else cap
-    if index == "flat":
-        if proj is not None:
-            reduced = _pad_rows(state.reduced, n_cap)
-    elif index == "ivf":
-        centroids = state.ivf.centroids
-        lists = _pad_cells(state.ivf.lists, cell_slack, fill=-1)
-        if proj is not None:
-            reduced = _pad_rows(state.ivf.vectors, n_cap)
-    elif index == "pq":
-        # no ``reduced`` mirror: the coded base is scanned through its
-        # codes, the delta through ``delta_reduced``, the re-rank through
-        # ``corpus`` — a row-major reduced mirror would feed nothing
-        codes = _pad_rows(jnp.asarray(state.pq.codes, jnp.int32), n_cap)
-        codebooks = state.pq.codebooks
-        lut_w, cbnorm = state.pq.lut_w, state.pq.cbnorm
-    elif index == "ivfpq":
-        ix = state.ivfpq
-        centroids, codebooks = ix.centroids, ix.codebooks
-        lut_w, cbnorm = ix.lut_w, ix.cbnorm
-        codes = _pad_rows(jnp.asarray(ix.codes, jnp.int32), n_cap)
-        bias = _pad_rows(ix.bias, n_cap)
-        lists = _pad_cells(ix.lists, cell_slack, fill=-1)
-        codes_cell = _pad_cells(ix.codes_cell, cell_slack)
-        bias_cell = _pad_cells(ix.bias_cell, cell_slack)
-    else:
-        raise ValueError(f"unknown index kind {index!r}")
+    parts, quant = ops.store_parts(state, n_cap, cell_slack)
     m_dim = proj[0].shape[0] if proj is not None else d
     store = StreamStore(
         corpus=_pad_rows(state.corpus, n_cap),
         row_ids=_pad_rows(jnp.arange(n, dtype=jnp.int32), n_cap, fill=-1),
         n_rows=jnp.asarray(n, jnp.int32),
         dead=jnp.zeros((n_cap,), bool),
-        reduced=reduced, codes=codes, bias=bias, lists=lists,
-        codes_cell=codes_cell, bias_cell=bias_cell,
+        reduced=parts.get("reduced"), codes=parts.get("codes"),
+        bias=parts.get("bias"), lists=parts.get("lists"),
+        codes_cell=parts.get("codes_cell"),
+        bias_cell=parts.get("bias_cell"),
         delta_vectors=jnp.zeros((cap, d), jnp.float32),
         delta_reduced=(jnp.zeros((cap, m_dim), jnp.float32)
                        if proj is not None else None),
         delta_ids=jnp.full((cap,), -1, jnp.int32),
         delta_count=jnp.zeros((), jnp.int32))
-    frozen = FrozenParams(proj=proj, centroids=centroids,
-                          codebooks=codebooks, lut_w=lut_w, cbnorm=cbnorm)
-    return store, frozen
+    return store, FrozenParams(proj=proj, quant=Index(kind, quant))
 
 
 # --- the write path (pure; engine jits with the store donated) ---------------
@@ -314,17 +300,19 @@ def delete_fn(store: StreamStore, ids: jax.Array) -> StreamStore:
         dead=dead, delta_ids=jnp.where(kill, -1, store.delta_ids))
 
 
-def compact_fn(store: StreamStore, frozen: FrozenParams, *,
-               index: str) -> Tuple[StreamStore, jax.Array]:
+def compact_fn(store: StreamStore, frozen: FrozenParams
+               ) -> Tuple[StreamStore, jax.Array]:
     """Fold the delta segment into the base; returns (store, dropped).
 
     All-or-nothing: when the append would overflow the row capacity or any
     posting cell's pad slack, the state comes back unchanged and
     ``dropped`` (the number of rows that could not be folded) is nonzero —
     the caller grows the store host-side and retries. Quantizers are
-    frozen: delta rows are re-coded against the existing
-    centroids/codebooks, so no serve-program shape or constant changes.
+    frozen: delta rows are re-coded against them
+    (``IndexOps.encode_delta`` on ``frozen.quant.kind``), so no
+    serve-program shape or constant changes.
     """
+    ops = get_ops(frozen.quant.kind)
     cap = store.delta_ids.shape[0]
     n_cap = store.corpus.shape[0]
     slots = jnp.arange(cap)
@@ -336,14 +324,9 @@ def compact_fn(store: StreamStore, frozen: FrozenParams, *,
 
     scan_rows = (store.delta_reduced if store.delta_reduced is not None
                  else store.delta_vectors)
-    assign = codes = bias = None
+    assign, codes, bias = ops.encode_delta(frozen, scan_rows)
     slot_pos = None
-    if index in ("ivf", "ivfpq"):
-        if index == "ivfpq":
-            assign, codes, bias = ivfpq_encode(
-                frozen.centroids, frozen.codebooks, scan_rows)
-        else:
-            assign = jnp.argmin(sq_dists(scan_rows, frozen.centroids), axis=1)
+    if store.lists is not None:
         nlist, mc_cap = store.lists.shape
         counts = jnp.sum((store.lists >= 0).astype(jnp.int32), axis=1)
         onehot = (jax.nn.one_hot(assign, nlist, dtype=jnp.int32)
@@ -352,8 +335,6 @@ def compact_fn(store: StreamStore, frozen: FrozenParams, *,
             jnp.cumsum(onehot, axis=0) - onehot, assign[:, None], axis=1)[:, 0]
         slot_pos = counts[assign] + rank
         ok = ok & ~jnp.any(alive & (slot_pos >= mc_cap))  # cell-slack check
-    elif index == "pq":
-        codes = encode_pq(frozen.codebooks, scan_rows)
 
     write = ok & alive
     dest = jnp.where(write, dest, n_cap)                # OOB => dropped
@@ -415,49 +396,23 @@ def grow_store(store: StreamStore, *, row_extra: int = 0,
                    if store.bias_cell is not None else None))
 
 
-def rebuild_state(frozen: FrozenParams, vectors: jax.Array, *, index: str,
-                  shards: int = 1):
+def rebuild_state(frozen: FrozenParams, vectors: jax.Array, *,
+                  index: Optional[str] = None, shards: int = 1):
     """Build a read-only ``EngineState`` over ``vectors`` with the FROZEN
     quantizers (no retraining) — the offline full-rebuild path and the
     from-scratch oracle of the streaming equivalence tests: after
     ``compact()``, streaming search over the survivors must return exactly
-    what this state returns.
+    what this state returns. ``index`` defaults to the frozen kind.
     """
-    from .ivf import IVFIndex
-    from .ivfpq import IVFPQIndex
-    from .pq import PQIndex
     from .serve import EngineState
 
+    kind = index if index is not None else frozen.quant.kind
+    if kind != frozen.quant.kind:
+        raise ValueError(
+            f"index={kind!r} does not match the frozen quantizers "
+            f"({frozen.quant.kind!r})")
     vectors = jnp.asarray(vectors, jnp.float32)
     reduced = _project(frozen.proj, vectors)
-    ivf = pq = ivfpq = None
-    flat_reduced = None
-    if index == "flat":
-        flat_reduced = reduced
-    elif index == "ivf":
-        assign = jnp.argmin(sq_dists(reduced, frozen.centroids), axis=1)
-        lists = posting_lists(assign, frozen.centroids.shape[0], shards)
-        ivf = IVFIndex(centroids=frozen.centroids, lists=lists,
-                       vectors=reduced)
-    elif index == "pq":
-        codes = encode_pq(frozen.codebooks, reduced)
-        pq = PQIndex(codebooks=frozen.codebooks, codes=codes,
-                     lut_w=frozen.lut_w, cbnorm=frozen.cbnorm)
-    elif index == "ivfpq":
-        assign, codes, bias = ivfpq_encode(
-            frozen.centroids, frozen.codebooks, reduced)
-        lists = posting_lists(assign, frozen.centroids.shape[0], shards)
-        lid = jnp.maximum(lists, 0)
-        code_dt = (jnp.uint8 if frozen.codebooks.shape[1] <= 256
-                   else jnp.int32)
-        ivfpq = IVFPQIndex(
-            centroids=frozen.centroids, lists=lists,
-            codebooks=frozen.codebooks, codes=codes, bias=bias,
-            codes_cell=codes[lid].astype(code_dt),
-            bias_cell=jnp.where(lists >= 0, bias[lid],
-                                0.0).astype(jnp.float32),
-            lut_w=frozen.lut_w, cbnorm=frozen.cbnorm)
-    else:
-        raise ValueError(f"unknown index kind {index!r}")
+    payload = get_ops(kind).rebuild(frozen, reduced, shards)
     return EngineState(corpus=vectors, proj=frozen.proj,
-                       reduced=flat_reduced, ivf=ivf, pq=pq, ivfpq=ivfpq)
+                       index=Index(kind, payload))

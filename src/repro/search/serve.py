@@ -9,17 +9,39 @@ The reduced-space scan is where the paper's win lands: score FLOPs and corpus
 bytes scale with m instead of n, and the re-rank restores exactness on the
 short candidate list.
 
+The composable API
+------------------
+
+The pipeline is declared by an ``IndexSpec`` (``repro.search.spec``) —
+``Reduce -> Coarse -> Code -> Rerank`` stages with a string grammar
+(``"qpad32>ivf64x8>pq8x256:i8"``) — and lowered onto a **tagged index
+union** (``repro.search.registry.Index``): one ``kind`` tag + stage
+payload instead of four mutually-exclusive Optional fields. Every scan
+site dispatches through the per-kind ``IndexOps`` registry, so adding an
+index kind is one registry entry. The legacy flat ``ServeConfig`` keeps
+working (it lowers onto a spec via ``spec_from_config``, which also
+rejects dead knobs).
+
+Lifecycle::
+
+    eng = build_engine(corpus, "qpad32>ivf256x8>pq16x256:i8")   # build
+    eng.shard(mesh)                   # optional: partition over a mesh
+    eng.streaming(StreamConfig(...))  # optional: enable the write path
+    eng.save(dir)                     # snapshot: spec + arrays
+    eng = load_engine(dir)            # restore (optionally onto a mesh)
+
 Serving architecture
 --------------------
 
 The engine is split into a **pytree of arrays** and a **pure function**:
 
 * ``EngineState`` — an immutable pytree holding the re-rank corpus, the
-  (optional) MPAD projection, and exactly one built index (flat / IVF / PQ /
-  IVF-PQ). Being a pytree, it shards, donates, and serialises like any other
-  jax state.
-* ``search_fn(state, queries, k, *, index, nprobe, rerank, backend,
-  interpret, lut_dtype)`` — the whole query pipeline (project -> probe ->
+  (optional) MPAD projection, and the built index as the tagged union.
+  Being a pytree, it shards, donates, and serialises like any other jax
+  state; the ``kind`` tag is pytree aux data, so it is static under jit
+  and keys compile caches through the treedef.
+* ``search_fn(state, queries, k, *, nprobe, rerank, backend, interpret,
+  lut_dtype)`` — the whole query pipeline (project -> probe ->
   ADC/flat scan -> dedup'd masked re-rank gather -> final top-k) as one
   traceable function. Jitted, it compiles to a **single XLA program**: no
   Python dispatch or host syncs between stages.
@@ -40,36 +62,36 @@ Sharded serving
 
 ``shard_engine(state, mesh, axis="data")`` (``repro.parallel.engine``)
 partitions the state pytree along the **database axis** of a device mesh:
-corpus rows, flat scan vectors, and plain-PQ codes split by row; IVF /
-IVF-PQ posting structures (``lists`` plus the cell-major
-``codes_cell``/``bias_cell``/``cell_vectors`` mirrors) split by cell; the
-MPAD projection, coarse centroids, and PQ codebooks replicate. Database
-leaves are padded to per-shard-equal shapes (pad rows/cells are masked out
-of every scan). ``sharded_search_fn`` then runs the same fused pipeline
-under ``shard_map``: each shard probes (replicated math — identical on
-every shard), scans only the rows/cells it owns, keeps a local top-n_cand
-with **global** row ids via its shard offset, and the shards finish with an
-``all_gather`` + global top-k merge and a masked exact re-rank in which
-each shard gathers only the winning candidates it owns (``psum``-free: a
-``pmin`` combines the per-shard masked distances). The merge keeps the
-exact candidate set of the single-device program, so sharded and
-single-device serving return identical neighbors; the single-device path
-itself is untouched. The jit cache keys on the mesh (shape + devices), so
-resizing the fleet recompiles exactly once per shape.
+corpus rows and the per-kind sharded payload (row-sharded flat
+vectors/PQ codes, cell-sharded IVF/IVF-PQ posting structures; projection,
+centroids, and codebook factorizations replicated — see
+``IndexOps.shard_payload``). ``sharded_search_fn`` then runs the same
+fused pipeline under ``shard_map``: each shard probes (replicated math —
+identical on every shard), scans only the rows/cells it owns, keeps a
+local top-n_cand with **global** row ids via its shard offset, and the
+shards finish with an ``all_gather`` + global top-k merge and a masked
+exact re-rank in which each shard gathers only the winning candidates it
+owns (``psum``-free: a ``pmin`` combines the per-shard masked distances).
+The merge keeps the exact candidate set of the single-device program, so
+sharded and single-device serving return identical neighbors; the
+single-device path itself is untouched. The jit cache keys on the mesh
+(shape + devices), so resizing the fleet recompiles exactly once per
+shape.
 
 Streaming (mutable) serving
 ---------------------------
 
-``ServeConfig(stream=StreamConfig(...))`` enables the write path: the
-built index becomes the frozen **base** layer of a
-``repro.search.segments.StreamStore`` (fixed row capacity + posting-list
-pad slack + tombstone bitmap) with a fixed-capacity exact-scan **delta
-segment** on top. ``SearchEngine.upsert/delete/compact`` are pure
-donated-jit programs over that store — no recompiles per write — and
-``search`` routes through ``repro.search.stream.stream_search_fn`` (or
-its sharded twin: base sharded, delta/tombstones replicated).
+``engine.streaming(StreamConfig(...))`` (or the declarative
+``ServeConfig(stream=...)``) enables the write path: the built index
+becomes the frozen **base** layer of a ``repro.search.segments.StreamStore``
+(fixed row capacity + posting-list pad slack + tombstone bitmap) with a
+fixed-capacity exact-scan **delta segment** on top.
+``SearchEngine.upsert/delete/compact`` are pure donated-jit programs over
+that store — no recompiles per write — and ``search`` routes through
+``repro.search.stream.stream_search_fn`` (or its sharded twin: base
+sharded, delta/tombstones replicated).
 
-Index layouts (``ServeConfig.index``):
+Index kinds (``IndexSpec.kind`` / ``ServeConfig.index``):
 
   "flat"   exact scan of the (reduced) vectors
   "ivf"    k-means coarse quantizer, probe nprobe cells, exact cell scan
@@ -77,14 +99,14 @@ Index layouts (``ServeConfig.index``):
   "ivfpq"  coarse quantizer + PQ-coded residuals, probed ADC scan — the
            production memory-hierarchy composition
 
-``ServeConfig.lut_dtype`` ("f32" | "bf16" | "int8") quantizes the per-query
-ADC lookup tables of the pq/ivfpq scans (see ``repro.kernels.pq_adc.lut``).
+The ``Code`` stage's ``lut_dtype`` ("f32" | "bf16" | "int8") quantizes the
+per-query ADC lookup tables of the pq/ivfpq scans (see
+``repro.kernels.pq_adc.lut``).
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-import warnings
 from typing import NamedTuple, Optional, Tuple
 
 import jax
@@ -94,24 +116,32 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import MPADConfig, MPADResult, fit_mpad
 from repro.kernels.pq_adc.lut import LUT_DTYPES
-from .ivf import IVFIndex, build_ivf, ivf_local_scan, ivf_scan
-from .ivfpq import IVFPQIndex, build_ivfpq, ivfpq_local_scan, ivfpq_scan
-from .knn import _sq_dists, knn_scan, masked_topk
-from .pq import PQIndex, build_pq, pq_local_scan, pq_scan
+from .registry import INDEX_KINDS, Index, ScanParams, get_ops
 from .segments import StreamConfig
+from .spec import IndexSpec, parse_spec, spec_from_config
 
 __all__ = ["ServeConfig", "SearchEngine", "EngineState",
            "ShardedEngineState", "StreamConfig", "search_fn",
-           "sharded_search_fn", "exact_rerank", "INDEX_KINDS"]
+           "sharded_search_fn", "exact_rerank", "INDEX_KINDS",
+           "build_engine", "config_from_spec"]
 
-INDEX_KINDS = ("flat", "ivf", "pq", "ivfpq")
 _ADC_BACKENDS = ("jnp", "kernel")
-_SEARCH_STATICS = ("k", "index", "nprobe", "rerank", "backend", "interpret",
+_SEARCH_STATICS = ("k", "nprobe", "rerank", "backend", "interpret",
                    "lut_dtype")
 
 
 @dataclasses.dataclass(frozen=True)
 class ServeConfig:
+    """The flat (legacy) engine config: pipeline knobs + runtime knobs.
+
+    The pipeline part lowers onto an ``IndexSpec`` (``spec_from_config``)
+    — which is also where cross-knob validation happens: ``nprobe`` may
+    not exceed ``nlist``, and knobs whose stage is absent from the
+    selected pipeline (e.g. ``nlist`` under ``index="pq"``) are rejected
+    instead of silently ignored. Prefer building engines from a spec
+    (``build_engine(corpus, "qpad32>ivf64x8>pq8x256:i8")``); construct a
+    ``ServeConfig`` directly when you need the runtime knobs too.
+    """
     target_dim: Optional[int] = None     # None = no reduction (full-dim exact)
     rerank: int = 64                     # candidates re-ranked in original space
     index: str = "flat"                  # one of INDEX_KINDS
@@ -134,31 +164,19 @@ class ServeConfig:
     stream: Optional[StreamConfig] = None  # enable the mutable write path
     #                                        (delta segment + tombstones +
     #                                        compaction; see search/stream.py)
-    # deprecated boolean index spec (pre-``index=``); shimmed in __post_init__
+    # removed boolean index spec (PR-1 deprecation cycle complete): any
+    # value raises with a pointer to the spec grammar
     use_ivf: Optional[bool] = None
     use_pq: Optional[bool] = None
 
     def __post_init__(self):
-        if self.use_ivf and self.use_pq:
+        if self.use_ivf is not None or self.use_pq is not None:
             raise ValueError(
-                "use_ivf=True with use_pq=True is ambiguous (the old engine "
-                "silently built IVF only); request the composition explicitly "
-                "with ServeConfig(index='ivfpq').")
-        if self.use_ivf or self.use_pq:
-            if self.index != "flat":
-                raise ValueError(
-                    "pass either index= or the deprecated use_ivf/use_pq "
-                    "booleans, not both")
-            warnings.warn(
-                "ServeConfig(use_ivf=/use_pq=) is deprecated; use "
-                "ServeConfig(index='ivf'|'pq'|'ivfpq')", DeprecationWarning,
-                stacklevel=3)
-            object.__setattr__(
-                self, "index", "ivf" if self.use_ivf else "pq")
-            # clear the booleans so dataclasses.replace() on a shimmed
-            # config doesn't re-trip the either/or check above
-            object.__setattr__(self, "use_ivf", None)
-            object.__setattr__(self, "use_pq", None)
+                "ServeConfig(use_ivf=/use_pq=) was removed after its "
+                "deprecation cycle; select the pipeline with "
+                "ServeConfig(index='ivf'|'pq'|'ivfpq') or an index-spec "
+                "string such as 'qpad32>ivf64x8>pq8x256:i8' "
+                "(repro.search.parse_spec)")
         if self.index not in INDEX_KINDS:
             raise ValueError(
                 f"unknown index kind {self.index!r}; expected one of "
@@ -183,30 +201,74 @@ class ServeConfig:
                 "shared-codes Pallas kernel has no masked entry point for "
                 "an arbitrary tombstone bitmap (use index='ivfpq' for a "
                 "kernel-backed streaming ADC scan)")
+        # stage-level validation: lower onto the pipeline spec (rejects
+        # nprobe > nlist, dead knobs, bad stage values)
+        self.to_spec()
+
+    def to_spec(self) -> IndexSpec:
+        """Lower this config onto its pipeline spec (validating)."""
+        return spec_from_config(self)
+
+
+def config_from_spec(spec, **runtime) -> ServeConfig:
+    """Lower an ``IndexSpec`` (or spec string) onto a ``ServeConfig``.
+
+    ``runtime`` forwards the engine knobs a pipeline spec does not carry
+    (``query_bucket``, ``small_batch``, ``mpad``, ``fit_sample``,
+    ``seed``, ``pq_interpret``, ``stream``). Round-trips with
+    ``ServeConfig.to_spec``.
+    """
+    if isinstance(spec, str):
+        spec = parse_spec(spec)
+    if not isinstance(spec, IndexSpec):
+        raise TypeError(f"IndexSpec or spec string expected, got "
+                        f"{type(spec).__name__}")
+    kw = dict(index=spec.kind, rerank=spec.rerank.n)
+    if spec.reduce is not None:
+        kw["target_dim"] = spec.reduce.m
+    if spec.coarse is not None:
+        kw.update(nlist=spec.coarse.nlist, nprobe=spec.coarse.nprobe)
+    if spec.code is not None:
+        kw.update(pq_subspaces=spec.code.subspaces,
+                  pq_centroids=spec.code.centroids,
+                  lut_dtype=spec.code.lut_dtype,
+                  pq_backend=spec.code.backend)
+    kw.update(runtime)
+    return ServeConfig(**kw)
+
+
+def as_serve_config(config) -> ServeConfig:
+    """Accept a ServeConfig, an IndexSpec, or a spec string everywhere a
+    config is expected."""
+    if isinstance(config, ServeConfig):
+        return config
+    if isinstance(config, (str, IndexSpec)):
+        return config_from_spec(config)
+    raise TypeError(
+        "expected a ServeConfig, an IndexSpec, or a spec string like "
+        f"'qpad32>ivf64x8>pq8x256:i8'; got {type(config).__name__}")
 
 
 class EngineState(NamedTuple):
     """Everything ``search_fn`` needs, as one immutable pytree.
 
-    Exactly one of (``reduced``, ``ivf``, ``pq``, ``ivfpq``) is non-None —
-    the built index — plus the original-space corpus for the exact re-rank
-    and the (optional) MPAD projection as raw arrays.
+    ``index`` is the tagged union: ``index.kind`` selects the registered
+    ``IndexOps`` (static under jit — it rides the treedef), ``index.payload``
+    is that kind's built arrays. ``corpus`` is the original-space row store
+    for the exact re-rank; ``proj`` the (optional) MPAD projection.
     """
     corpus: jax.Array                              # (N, D) re-rank space
     proj: Optional[Tuple[jax.Array, jax.Array]]    # (matrix (m,D), mean (D,))
-    reduced: Optional[jax.Array]                   # flat: (N, m) scan vectors
-    ivf: Optional[IVFIndex]
-    pq: Optional[PQIndex]
-    ivfpq: Optional[IVFPQIndex]
+    index: Index                                   # tagged union payload
 
 
 class ShardedEngineState(NamedTuple):
     """``EngineState`` re-laid-out for data-parallel serving on a mesh.
 
-    Database-axis leaves (corpus rows, flat vectors, PQ code rows, and the
-    cell-major IVF / IVF-PQ posting structures) are padded to
-    per-shard-equal shapes and sharded along dim 0; the MPAD projection,
-    coarse centroids, and codebook factorizations replicate. Built by
+    ``corpus`` is padded to a per-shard-equal shape and sharded along dim
+    0; ``index`` holds the kind's **sharded** payload (see
+    ``IndexOps.shard_payload`` — row- or cell-sharded database leaves,
+    replicated quantizers); the MPAD projection replicates. Built by
     ``repro.parallel.engine.shard_engine``; consumed by
     ``sharded_search_fn``. ``n_real`` is the unpadded corpus size — rows
     at or beyond it are shard padding, masked out of every scan.
@@ -214,15 +276,7 @@ class ShardedEngineState(NamedTuple):
     corpus: jax.Array                              # (N_pad, D) row-sharded
     proj: Optional[Tuple[jax.Array, jax.Array]]    # replicated (matrix, mean)
     n_real: jax.Array                              # () int32 replicated
-    reduced: Optional[jax.Array]                   # (N_pad, m) row-sharded
-    codes: Optional[jax.Array]                     # (N_pad, M) row-sharded
-    centroids: Optional[jax.Array]                 # (nlist, d) replicated
-    lists: Optional[jax.Array]                     # (nlist_pad, mc) cell-shd
-    cell_vecs: Optional[jax.Array]                 # (nlist_pad, mc, d) "
-    codes_cell: Optional[jax.Array]                # (nlist_pad, mc, M) "
-    bias_cell: Optional[jax.Array]                 # (nlist_pad, mc) "
-    lut_w: Optional[jax.Array]                     # (d, M*K) replicated
-    cbnorm: Optional[jax.Array]                    # (M, K) replicated
+    index: Index                                   # kind + sharded payload
 
 
 def _dedupe_candidates(cand: jax.Array):
@@ -256,19 +310,30 @@ def exact_rerank(queries: jax.Array, corpus: jax.Array, cand: jax.Array,
     return jnp.sqrt(jnp.maximum(-neg, 0.0)), ids
 
 
+def _check_rerank_budget(approximate: bool, rerank: int, k: int):
+    if approximate and rerank < k:
+        raise ValueError(
+            f"k={k} exceeds the re-rank budget rerank={rerank} on an "
+            "approximate pipeline (reduction and/or PQ codes): the exact "
+            "re-rank could only return rerank candidates. Raise the "
+            f"Rerank stage (e.g. spec '...>rr{k}') or lower k.")
+
+
 def search_fn(state: EngineState, queries: jax.Array, k: int, *,
-              index: str = "flat", nprobe: int = 8, rerank: int = 64,
-              backend: str = "jnp", interpret: bool = True,
-              lut_dtype: str = "f32"):
+              nprobe: int = 8, rerank: int = 64, backend: str = "jnp",
+              interpret: bool = True, lut_dtype: str = "f32"):
     """The entire query pipeline as one pure traceable function.
 
-    project -> probe/scan (per ``index``) -> exact re-rank -> top-k.
-    Jitted (``jax.jit(search_fn, static_argnames=_SEARCH_STATICS)``) this is
-    a single XLA program; every per-query op is row-independent, so padded
-    query rows never perturb real results. Returns (dists (Q,k), ids (Q,k));
-    distances in the original space when re-ranking is active, else in the
-    serving (reduced) space.
+    project -> probe/scan (dispatched on ``state.index.kind`` through the
+    ops registry) -> exact re-rank -> top-k. Jitted
+    (``jax.jit(search_fn, static_argnames=_SEARCH_STATICS)``) this is
+    a single XLA program; the index kind is pytree aux data, so it keys
+    the compile cache without being an argument. Every per-query op is
+    row-independent, so padded query rows never perturb real results.
+    Returns (dists (Q,k), ids (Q,k)); distances in the original space when
+    re-ranking is active, else in the serving (reduced) space.
     """
+    ops = get_ops(state.index.kind)
     queries = jnp.asarray(queries, jnp.float32)
     if state.proj is not None:
         matrix, mean = state.proj
@@ -276,38 +341,16 @@ def search_fn(state: EngineState, queries: jax.Array, k: int, *,
     else:
         qr = queries
     # lossy scoring (reduction and/or PQ codes) -> over-retrieve + re-rank
-    approximate = state.proj is not None or index in ("pq", "ivfpq")
-    n_cand = max(k, rerank) if approximate else k
-    if index == "ivf":
-        _, cand = ivf_scan(state.ivf, qr, n_cand, nprobe)
-    elif index == "pq":
-        _, cand = pq_scan(state.pq, qr, n_cand, backend=backend,
-                          interpret=interpret, lut_dtype=lut_dtype)
-    elif index == "ivfpq":
-        _, cand = ivfpq_scan(state.ivfpq, qr, n_cand, nprobe,
-                             backend=backend, interpret=interpret,
-                             lut_dtype=lut_dtype)
-    else:
-        base = state.reduced if state.reduced is not None else state.corpus
-        _, cand = knn_scan(qr, base, n_cand)
+    approximate = state.proj is not None or ops.lossy
+    _check_rerank_budget(approximate, rerank, k)
+    n_cand = rerank if approximate else k
+    p = ScanParams(nprobe=nprobe, backend=backend, interpret=interpret,
+                   lut_dtype=lut_dtype)
+    _, cand = ops.scan(state, qr, n_cand, p)
     return exact_rerank(queries, state.corpus, cand, k)
 
 
 # --- sharded serving (shard_map over a database-axis mesh) -------------------
-
-def _flat_local_topk(qr: jax.Array, x_loc: jax.Array, n_real: jax.Array,
-                     n_cand: int, axis: str):
-    """Shard-local exact scan over this shard's row block of the (reduced)
-    corpus; shard-pad rows (global id >= n_real) mask to (+inf, -1).
-    Distances come from the same ``_sq_dists`` as the single-device
-    ``knn_scan`` so the two paths rank identically."""
-    n_loc = x_loc.shape[0]
-    off = jax.lax.axis_index(axis) * n_loc
-    d2 = _sq_dists(qr, x_loc)
-    gid = off + jnp.arange(n_loc)
-    d2 = jnp.where(gid[None, :] < n_real, d2, jnp.inf)
-    return masked_topk(d2, jnp.broadcast_to(gid[None, :], d2.shape), n_cand)
-
 
 def _sharded_rerank(queries: jax.Array, corpus_loc: jax.Array,
                     cand: jax.Array, k: int, axis: str):
@@ -331,34 +374,22 @@ def _sharded_rerank(queries: jax.Array, corpus_loc: jax.Array,
 
 
 def _sharded_core(sstate: ShardedEngineState, queries: jax.Array, *, k: int,
-                  index: str, nprobe: int, rerank: int, backend: str,
+                  nprobe: int, rerank: int, backend: str,
                   interpret: bool, lut_dtype: str, axis: str, slack: int):
     """The shard_map body: the full per-shard pipeline + distributed merge."""
+    ops = get_ops(sstate.index.kind)
     queries = jnp.asarray(queries, jnp.float32)
     if sstate.proj is not None:
         matrix, mean = sstate.proj
         qr = (queries - mean) @ matrix.T
     else:
         qr = queries
-    approximate = sstate.proj is not None or index in ("pq", "ivfpq")
-    n_cand = max(k, rerank) if approximate else k
-    if index == "ivf":
-        d2, cand = ivf_local_scan(sstate.centroids, sstate.lists,
-                                  sstate.cell_vecs, qr, n_cand, nprobe, axis)
-    elif index == "pq":
-        d2, cand = pq_local_scan(sstate.lut_w, sstate.cbnorm, sstate.codes,
-                                 qr, n_cand, sstate.n_real, axis,
-                                 backend=backend, interpret=interpret,
-                                 lut_dtype=lut_dtype, slack=slack)
-    elif index == "ivfpq":
-        d2, cand = ivfpq_local_scan(sstate.centroids, sstate.lists,
-                                    sstate.codes_cell, sstate.bias_cell,
-                                    sstate.lut_w, sstate.cbnorm, qr, n_cand,
-                                    nprobe, axis, backend=backend,
-                                    interpret=interpret, lut_dtype=lut_dtype)
-    else:
-        x_loc = sstate.reduced if sstate.reduced is not None else sstate.corpus
-        d2, cand = _flat_local_topk(qr, x_loc, sstate.n_real, n_cand, axis)
+    approximate = sstate.proj is not None or ops.lossy
+    _check_rerank_budget(approximate, rerank, k)
+    n_cand = rerank if approximate else k
+    p = ScanParams(nprobe=nprobe, backend=backend, interpret=interpret,
+                   lut_dtype=lut_dtype)
+    d2, cand = ops.local_scan(sstate, qr, n_cand, p, axis, slack)
     # distributed merge: every shard's local top-n_cand is a superset of the
     # global top-n_cand members it owns, so the merged set equals the
     # single-device candidate set exactly
@@ -371,7 +402,7 @@ def _sharded_core(sstate: ShardedEngineState, queries: jax.Array, *, k: int,
 
 
 def sharded_search_fn(sstate: ShardedEngineState, queries: jax.Array, k: int,
-                      *, mesh: Mesh, axis: str = "data", index: str = "flat",
+                      *, mesh: Mesh, axis: str = "data",
                       nprobe: int = 8, rerank: int = 64, backend: str = "jnp",
                       interpret: bool = True, lut_dtype: str = "f32"):
     """``search_fn`` partitioned over the ``axis`` of ``mesh``.
@@ -384,7 +415,7 @@ def sharded_search_fn(sstate: ShardedEngineState, queries: jax.Array, k: int,
     from repro.parallel.sharding import engine_state_specs
     specs = engine_state_specs(sstate, axis)
     core = functools.partial(
-        _sharded_core, k=k, index=index, nprobe=nprobe, rerank=rerank,
+        _sharded_core, k=k, nprobe=nprobe, rerank=rerank,
         backend=backend, interpret=interpret, lut_dtype=lut_dtype, axis=axis,
         slack=mesh.shape[axis] - 1)
     f = shard_map(core, mesh=mesh, in_specs=(specs, P()),
@@ -406,15 +437,22 @@ def _bucket(nq: int, floor: int, small: int = 0) -> int:
 class SearchEngine:
     """Build once over a corpus; serve batched k-NN queries.
 
-    Thin wrapper over the functional core: ``__init__`` builds
+    Thin wrapper over the functional core: construction builds
     ``self.state`` (an ``EngineState``), ``search`` pads the batch to its
-    bucket and calls the engine-owned jitted ``search_fn``. Mutating
+    bucket and calls the engine-owned jitted ``search_fn``. The config may
+    be a ``ServeConfig``, an ``IndexSpec``, or a spec string. Mutating
     ``self.config`` (e.g. ``dataclasses.replace(..., nprobe=16)``) is
     supported — knob changes re-key the jit cache, not the state.
+
+    Lifecycle methods: ``shard(mesh)`` partitions the state over a device
+    mesh, ``streaming(StreamConfig(...))`` enables the mutable write path
+    (``upsert``/``delete``/``compact``), ``save(dir)`` snapshots spec +
+    arrays (restore with ``repro.search.load_engine``).
     """
 
-    def __init__(self, corpus: jax.Array, config: ServeConfig):
-        self.config = config
+    def __init__(self, corpus: jax.Array, config=ServeConfig()):
+        config = as_serve_config(config)
+        spec = config.to_spec()
         corpus_in = corpus
         corpus = jnp.asarray(corpus, jnp.float32)
         # when the caller's array passes through unconverted, it stays
@@ -422,38 +460,38 @@ class SearchEngine:
         self._user_corpus = corpus if corpus is corpus_in else None
         n, dim = corpus.shape
         key = jax.random.key(config.seed)
-        if config.target_dim is not None:
+        if spec.reduce is not None:
             mcfg = config.mpad or MPADConfig(
-                m=config.target_dim, b=80.0, alpha=25.0, iters=48,
+                m=spec.reduce.m, b=80.0, alpha=25.0, iters=48,
                 seed=config.seed)
             sample = corpus
             if config.fit_sample < n:
                 rows = jax.random.choice(
                     key, n, (config.fit_sample,), replace=False)
                 sample = corpus[rows]
-            self.reducer: Optional[MPADResult] = fit_mpad(sample, mcfg)
-            reduced = self.reducer(corpus)
-            proj = (self.reducer.matrix, self.reducer.mean)
+            reducer: Optional[MPADResult] = fit_mpad(sample, mcfg)
+            reduced = reducer(corpus)
+            proj = (reducer.matrix, reducer.mean)
         else:
-            self.reducer = None
+            reducer = None
             reduced = corpus
             proj = None
-        ivf = pq = ivfpq = None
-        if config.index == "ivf":
-            ivf = build_ivf(
-                jax.random.fold_in(key, 1), reduced, config.nlist)
-        elif config.index == "pq":
-            pq = build_pq(jax.random.fold_in(key, 2), reduced,
-                          config.pq_subspaces, config.pq_centroids)
-        elif config.index == "ivfpq":
-            ivfpq = build_ivfpq(
-                jax.random.fold_in(key, 3), reduced, config.nlist,
-                config.pq_subspaces, config.pq_centroids)
-        self.state: Optional[EngineState] = EngineState(
-            corpus=corpus, proj=proj,
-            reduced=reduced if config.index == "flat" else None,
-            ivf=ivf, pq=pq, ivfpq=ivfpq)
-        self._reduced = reduced      # back-compat view for every index kind
+        payload = get_ops(config.index).build(key, reduced, spec)
+        state = EngineState(corpus=corpus, proj=proj,
+                            index=Index(config.index, payload))
+        self._attach(config, state, reducer)
+
+    # --- lifecycle --------------------------------------------------------
+
+    def _attach(self, config: ServeConfig, state: Optional[EngineState],
+                reducer: Optional[MPADResult], store=None, frozen=None):
+        """Wire a built (or restored) state into a serving engine: jit
+        programs, compile caches, counters. The shared tail of ``__init__``
+        and the snapshot-restore constructors."""
+        self._user_corpus = getattr(self, "_user_corpus", None)
+        self.config = config
+        self.reducer = reducer
+        self.state: Optional[EngineState] = state
         self.last_bucket: Optional[int] = None   # padded size of the last
         #                                          served batch (shape pin
         #                                          for latency tests)
@@ -468,7 +506,7 @@ class SearchEngine:
             return search_fn(state, queries, k, **kw)
         self._program = jax.jit(_engine_search_fn,
                                 static_argnames=_SEARCH_STATICS)
-        self.store = self.frozen = None          # streaming (write-path) state
+        self.store, self.frozen = store, frozen  # streaming (write) state
         self._stream_sharded_base = None
         self._stream_program = self._stream_sharded_program = None
         self._upsert_program = self._delete_program = None
@@ -477,40 +515,44 @@ class SearchEngine:
         #                              each one is a recompile point)
         self._delta_used = 0         # conservative host mirror of the delta
         #                              fill (overwrites counted as appends)
-        if config.stream is not None:
+        if store is not None:        # restored mid-delta snapshot
+            self._delta_used = int(store.delta_count)
+            self._stream_programs()
+        elif config.stream is not None:
             self._init_stream()
 
-    def _require_dense(self) -> EngineState:
-        if self.state is None:
-            raise RuntimeError(
-                "the dense EngineState is gone: its buffers were released "
-                "by shard(donate=True) or superseded by the streaming "
-                "StreamStore (use engine.store / engine.frozen there) — "
-                "rebuild the engine to get the read-only views back")
-        return self.state
-
-    # back-compat array views into the state pytree
-    @property
-    def corpus(self) -> jax.Array:
-        return self._require_dense().corpus
-
-    @property
-    def reduced(self) -> jax.Array:
-        if self._reduced is None:
-            self._require_dense()
-        return self._reduced
+    @classmethod
+    def _restore(cls, config: ServeConfig, *, state=None, store=None,
+                 frozen=None) -> "SearchEngine":
+        """Construct an engine around already-built arrays (snapshot
+        restore): no MPAD refit, no index retrain. Exactly one of
+        ``state`` (read-only) or ``store``+``frozen`` (streaming) is
+        given; see ``repro.search.snapshot``."""
+        eng = object.__new__(cls)
+        eng._user_corpus = None
+        proj = state.proj if state is not None else frozen.proj
+        reducer = None
+        if proj is not None:
+            matrix, mean = proj
+            reducer = MPADResult(matrix=matrix, mean=mean,
+                                 objective_trace=jnp.zeros((0, 0)))
+        eng._attach(config, state, reducer, store=store, frozen=frozen)
+        return eng
 
     @property
-    def ivf(self) -> Optional[IVFIndex]:
-        return self._require_dense().ivf
+    def spec(self) -> IndexSpec:
+        """The pipeline spec this engine serves (lowered from the current
+        config, so query-time knob mutations are reflected)."""
+        return self.config.to_spec()
 
-    @property
-    def pq(self) -> Optional[PQIndex]:
-        return self._require_dense().pq
-
-    @property
-    def ivfpq(self) -> Optional[IVFPQIndex]:
-        return self._require_dense().ivfpq
+    def save(self, directory: str) -> str:
+        """Snapshot the engine (spec + config + arrays) into ``directory``;
+        restore with ``repro.search.load_engine``. Covers read-only and
+        streaming engines (the delta segment and tombstones are saved
+        as-is, so a mid-delta snapshot restores mid-delta). Returns the
+        checkpoint path."""
+        from .snapshot import save_engine
+        return save_engine(self, directory)
 
     @property
     def compile_count(self) -> int:
@@ -530,21 +572,48 @@ class SearchEngine:
 
     # --- streaming (mutable) serving -------------------------------------
 
-    @property
-    def streaming(self) -> bool:
-        return self.config.stream is not None
+    def streaming(self, config: Optional[StreamConfig] = None
+                  ) -> "SearchEngine":
+        """Enable the mutable write path on a built engine: the dense
+        index becomes the frozen base of a ``StreamStore`` with a delta
+        segment + tombstones on top, and ``upsert``/``delete``/``compact``
+        come alive. One-way and idempotent-hostile by design: call once,
+        after build and before ``shard``. Returns ``self`` for chaining.
+        (The declarative ``ServeConfig(stream=...)`` route does this at
+        construction.)
+        """
+        if self.store is not None:
+            raise RuntimeError(
+                "this engine is already streaming; re-configure by "
+                "rebuilding or load_engine from a snapshot")
+        if self.sharded_state is not None:
+            raise RuntimeError(
+                "enable streaming BEFORE shard(): the store takes over "
+                "the dense arrays, which would leave the placed sharded "
+                "state stale (or, on a zero-copy placement, deleted) — "
+                "rebuild, call streaming(...), then shard(mesh)")
+        if self.state is None:
+            raise RuntimeError(
+                "the dense EngineState is gone (shard(donate=True)); "
+                "streaming needs the dense arrays — rebuild the engine "
+                "or load_engine from a snapshot")
+        # replace() re-runs config validation (e.g. pq+kernel streaming)
+        self.config = dataclasses.replace(
+            self.config, stream=config or StreamConfig())
+        self._init_stream()
+        return self
 
     def _require_stream(self):
         if self.store is None:
             raise RuntimeError(
                 "this engine is read-only; enable the write path with "
+                "engine.streaming(StreamConfig(...)) or "
                 "ServeConfig(stream=StreamConfig(...))")
 
     def _init_stream(self):
-        from .segments import compact_fn, delete_fn, make_mutable, upsert_fn
-        from .stream import sharded_stream_search_fn, stream_search_fn
-        self.store, self.frozen = make_mutable(
-            self.state, self.config.stream, self.config.index)
+        from .segments import make_mutable
+        self.store, self.frozen = make_mutable(self.state,
+                                               self.config.stream)
         # the store owns fresh (capacity-padded) copies of every database
         # leaf, so the dense EngineState duplicates them — release the
         # duplicated buffers (the frozen quantizers and any caller-owned
@@ -557,10 +626,16 @@ class SearchEngine:
             if id(leaf) not in hold and not leaf.is_deleted():
                 leaf.delete()
         self.state = None
-        self._reduced = None
-        # fresh closures: per-engine compile caches, same as _program. The
-        # write programs donate the store, so the .at[] updates alias the
-        # input buffers instead of copying the row store per write.
+        self._stream_programs()
+
+    def _stream_programs(self):
+        """Jit the streaming read/write programs (fresh closures: per-engine
+        compile caches, same as ``_program``). The write programs donate
+        the store, so the ``.at[]`` updates alias the input buffers
+        instead of copying the row store per write."""
+        from .segments import compact_fn, delete_fn, upsert_fn
+        from .stream import sharded_stream_search_fn, stream_search_fn
+
         def _engine_stream_fn(store, frozen, queries, k, **kw):
             return stream_search_fn(store, frozen, queries, k, **kw)
         self._stream_program = jax.jit(_engine_stream_fn,
@@ -574,10 +649,9 @@ class SearchEngine:
             return delete_fn(store, ids)
         self._delete_program = jax.jit(_engine_delete, donate_argnums=(0,))
 
-        def _engine_compact(store, frozen, *, index):
-            return compact_fn(store, frozen, index=index)
-        self._compact_program = jax.jit(
-            _engine_compact, static_argnames=("index",), donate_argnums=(0,))
+        def _engine_compact(store, frozen):
+            return compact_fn(store, frozen)
+        self._compact_program = jax.jit(_engine_compact, donate_argnums=(0,))
 
         def _engine_stream_sharded(sbase, repl, queries, k, **kw):
             return sharded_stream_search_fn(sbase, repl, queries, k, **kw)
@@ -641,8 +715,7 @@ class SearchEngine:
         self._require_stream()
         from .segments import grow_store
         scfg = self.config.stream
-        store, dropped = self._compact_program(self.store, self.frozen,
-                                               index=self.config.index)
+        store, dropped = self._compact_program(self.store, self.frozen)
         while int(dropped):
             # one delta's worth of cell slack covers the worst case (every
             # delta row landing in one cell), so a single grow suffices
@@ -650,8 +723,7 @@ class SearchEngine:
                                row_extra=4 * scfg.delta_capacity,
                                cell_extra=scfg.delta_capacity)
             self.grow_count += 1
-            store, dropped = self._compact_program(store, self.frozen,
-                                                   index=self.config.index)
+            store, dropped = self._compact_program(store, self.frozen)
         self.store = store
         self._delta_used = 0
         if self._stream_sharded_base is not None:
@@ -661,8 +733,7 @@ class SearchEngine:
     def _shard_stream_base(self):
         from repro.parallel.engine import shard_stream
         self._stream_sharded_base = shard_stream(
-            self.store, self.frozen, self._mesh, axis=self._shard_axis,
-            index=self.config.index)
+            self.store, self.frozen, self._mesh, axis=self._shard_axis)
 
     # --- sharding ---------------------------------------------------------
 
@@ -676,11 +747,10 @@ class SearchEngine:
         ``self`` for chaining. Re-call with a different mesh to re-shard.
 
         ``donate=True`` releases the dense single-device buffers once the
-        sharded copy is placed (no 2x database memory): the back-compat
-        views and re-sharding then raise, and switching back via
-        ``sharded_state = None`` is no longer possible. With the default
-        ``donate=False`` both copies stay live — fine for dry-runs, 2x
-        memory at real scale.
+        sharded copy is placed (no 2x database memory): re-sharding then
+        raises, and switching back via ``sharded_state = None`` is no
+        longer possible. With the default ``donate=False`` both copies
+        stay live — fine for dry-runs, 2x memory at real scale.
 
         On a streaming engine the **base** shards and the delta segment /
         tombstones stay replicated (writes keep working; ``compact()``
@@ -691,21 +761,25 @@ class SearchEngine:
             from repro.parallel.context import require_mesh
             mesh = require_mesh("SearchEngine.shard()")
         self._mesh, self._shard_axis = mesh, axis
-        if self.streaming:
+        if self.store is not None:
             if donate:
                 raise ValueError(
                     "donate=True is not supported on a streaming engine: "
                     "the dense StreamStore backs upsert/delete/compact")
             self._shard_stream_base()
             return self
+        if self.state is None:
+            raise RuntimeError(
+                "the dense EngineState is gone: its buffers were released "
+                "by shard(donate=True) — rebuild the engine (or "
+                "load_engine from a snapshot) to re-shard")
         from repro.parallel.engine import shard_engine
         keep = (self._user_corpus,) if self._user_corpus is not None else ()
-        self.sharded_state = shard_engine(self._require_dense(), mesh,
+        self.sharded_state = shard_engine(self.state, mesh,
                                           axis=axis, donate=donate,
                                           keep=keep)
         if donate:
             self.state = None
-            self._reduced = None
             if self.reducer is not None:
                 # the dense projection arrays were donated; point the
                 # public reducer at the replicated sharded copies so
@@ -730,6 +804,11 @@ class SearchEngine:
         in a bucket reuses the same compilation, then sliced back to Q rows.
         """
         cfg = self.config
+        ops = get_ops(cfg.index)
+        # reject an unservable k eagerly (host-side, before any tracing)
+        # instead of silently truncating the candidate list inside the scan
+        _check_rerank_budget(cfg.target_dim is not None or ops.lossy,
+                             cfg.rerank, k)
         queries = jnp.asarray(queries, jnp.float32)
         nq = queries.shape[0]
         bucket = _bucket(nq, cfg.query_bucket, cfg.small_batch)
@@ -737,16 +816,15 @@ class SearchEngine:
         if bucket != nq:
             queries = jnp.pad(queries, ((0, bucket - nq), (0, 0)))
         # normalize knobs the index kind can't observe so flipping them
-        # (e.g. lut_dtype on a flat engine) never re-keys the jit cache
+        # (e.g. a stray nprobe on a flat engine) never re-keys the jit cache
         probed = cfg.index in ("ivf", "ivfpq")
         coded = cfg.index in ("pq", "ivfpq")
-        kw = dict(index=cfg.index,
-                  nprobe=cfg.nprobe if probed else 0,
+        kw = dict(nprobe=cfg.nprobe if probed else 0,
                   rerank=cfg.rerank,
                   backend=cfg.pq_backend if coded else "jnp",
                   interpret=cfg.pq_interpret if coded else True,
                   lut_dtype=cfg.lut_dtype if coded else "f32")
-        if self.streaming:
+        if self.store is not None:
             if self._stream_sharded_base is not None:
                 from .stream import StreamReplica
                 repl = StreamReplica(
@@ -768,3 +846,21 @@ class SearchEngine:
         else:
             d, ids = self._program(self.state, queries, k, **kw)
         return d[:nq], ids[:nq]
+
+
+def build_engine(corpus: jax.Array, spec, **runtime) -> SearchEngine:
+    """Build a serving engine from a pipeline spec — the canonical
+    constructor of the composable API.
+
+    ``spec`` is an ``IndexSpec``, a spec string
+    (``"qpad32>ivf64x8>pq8x256:i8"``), or a full ``ServeConfig``;
+    ``runtime`` forwards engine knobs the pipeline does not carry
+    (``query_bucket``, ``mpad``, ``fit_sample``, ``seed``, ``stream``,
+    ...). Continue with the lifecycle methods: ``.shard(mesh)``,
+    ``.streaming(StreamConfig(...))``, ``.save(dir)``.
+    """
+    if isinstance(spec, ServeConfig):
+        if runtime:
+            spec = dataclasses.replace(spec, **runtime)
+        return SearchEngine(corpus, spec)
+    return SearchEngine(corpus, config_from_spec(spec, **runtime))

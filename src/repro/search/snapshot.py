@@ -1,0 +1,223 @@
+"""Engine snapshot persistence: spec + arrays, restore anywhere.
+
+``save_engine`` writes a serving engine into a directory as two pieces:
+
+* ``engine.json`` — the pipeline **spec string** (the grammar of
+  ``repro.search.spec``), the runtime knobs, and the streaming config;
+  everything needed to rebuild the engine *shape* without the corpus.
+* ``ckpt_*.npz`` — every array leaf, flattened by pytree key path through
+  ``repro.runtime.checkpoint`` (atomic write + retention). Read-only
+  engines persist their ``EngineState``; streaming engines persist the
+  ``StreamStore`` + ``FrozenParams`` pair — the delta segment, tombstone
+  bitmap, and id maps included, so a snapshot taken **mid-delta**
+  restores mid-delta (un-compacted writes survive the round trip).
+
+``load_engine`` rebuilds the ``SearchEngine`` around the restored arrays
+— no MPAD refit, no index retrain, and (because shapes, dtypes, and the
+index kind's pytree structure are reproduced exactly) **no new program
+shapes**: the restored engine compiles the same one program per
+(knobs, k, bucket) a fresh build would. Pass ``mesh=`` to restore onto a
+device mesh: the dense leaves are placed through
+``repro.runtime.checkpoint.restore_resharded`` (checkpoints are
+shard-agnostic npz files — the elastic-scaling primitive) and the engine
+is then partitioned with the usual layout pass (``shard``; read-only
+restores donate the transient dense copy, so there is no standing 2x).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.runtime.checkpoint import (latest_checkpoint, restore_checkpoint,
+                                      restore_resharded, save_checkpoint)
+from .registry import Index, get_ops
+from .segments import FrozenParams, StreamConfig, StreamStore
+from .serve import EngineState, SearchEngine, config_from_spec
+from .spec import format_spec, parse_spec
+
+__all__ = ["save_engine", "load_engine", "SNAPSHOT_META"]
+
+SNAPSHOT_META = "engine.json"
+_SCHEMA = "qpad.engine_snapshot.v1"
+# engine knobs a pipeline spec does not carry; persisted verbatim
+_RUNTIME_FIELDS = ("query_bucket", "small_batch", "fit_sample", "seed",
+                   "pq_interpret")
+
+
+class _Leaf:
+    """Placeholder leaf in a shape-free skeleton pytree (filled from the
+    checkpoint by key path)."""
+
+    def __repr__(self):
+        return "<leaf>"
+
+
+_L = _Leaf()
+
+
+# StreamStore fields that are optional per index kind / projection; which
+# ones a snapshot carries is recorded in its meta at save time
+_OPT_STORE_FIELDS = ("reduced", "codes", "bias", "lists", "codes_cell",
+                     "bias_cell", "delta_reduced")
+
+
+def _snapshot_skeleton(kind: str, has_proj: bool, streaming: bool,
+                       flat_alias: bool, store_fields=()):
+    """The snapshot pytree with placeholder leaves — the structure comes
+    from the spec metadata (kind, projection presence, streaming, the
+    optional store fields present at save time) plus the ops registry's
+    per-kind payload shapes (``payload_skeleton``/``quant_skeleton``), so
+    save and load flatten to the same key paths for any registered kind."""
+    ops = get_ops(kind)
+    proj = (_L, _L) if has_proj else None
+    if not streaming:
+        # the flat-alias case (no Reduce stage: payload IS the corpus
+        # array) is not re-saved; restore re-points it at the corpus
+        payload = None if flat_alias else ops.payload_skeleton(_L)
+        return {"state": EngineState(
+            corpus=_L, proj=proj, index=Index(kind, payload))}
+    opt = {f: (_L if f in store_fields else None) for f in _OPT_STORE_FIELDS}
+    store = StreamStore(
+        corpus=_L, row_ids=_L, n_rows=_L, dead=_L,
+        delta_vectors=_L, delta_ids=_L, delta_count=_L, **opt)
+    frozen = FrozenParams(proj=proj,
+                          quant=Index(kind, ops.quant_skeleton(_L)))
+    return {"store": store, "frozen": frozen}
+
+
+def _host_template(skeleton, path: str):
+    """Fill a skeleton's placeholder leaves with the checkpoint's (host)
+    arrays by pytree key path — shapes and dtypes come from the file."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(skeleton)
+    with np.load(path) as data:
+        leaves = []
+        for kpath, _ in flat:
+            key = jax.tree_util.keystr(kpath)
+            if key not in data:
+                raise ValueError(
+                    f"snapshot {path} is missing array {key!r} — was it "
+                    "written by an incompatible version?")
+            leaves.append(data[key])
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def save_engine(engine: SearchEngine, directory: str) -> str:
+    """Snapshot ``engine`` (spec + config + arrays) into ``directory``.
+
+    Returns the checkpoint path. Raises if the dense arrays are gone
+    (``shard(donate=True)``) — snapshot before donating, or snapshot the
+    streaming store, which always stays dense.
+    """
+    streaming = engine.store is not None
+    if not streaming and engine.state is None:
+        raise RuntimeError(
+            "nothing to save: the dense EngineState was released by "
+            "shard(donate=True) — call save() before donating the dense "
+            "buffers")
+    cfg = engine.config
+    spec = engine.spec
+    flat_alias = False
+    store_fields = []
+    if streaming:
+        tree = {"store": engine.store, "frozen": engine.frozen}
+        has_proj = engine.frozen.proj is not None
+        store_fields = [f for f in _OPT_STORE_FIELDS
+                        if getattr(engine.store, f) is not None]
+    else:
+        state = engine.state
+        has_proj = state.proj is not None
+        if state.index.kind == "flat" and state.index.payload is state.corpus:
+            # don't write the same rows twice; restore re-aliases
+            flat_alias = True
+            state = state._replace(index=Index("flat", None))
+        tree = {"state": state}
+    meta = {
+        "schema": _SCHEMA,
+        "spec": format_spec(spec),
+        "kind": spec.kind,
+        "streaming": streaming,
+        "has_proj": has_proj,
+        "flat_alias": flat_alias,
+        "store_fields": store_fields,
+        "runtime": {f: getattr(cfg, f) for f in _RUNTIME_FIELDS},
+        "stream": (dataclasses.asdict(cfg.stream)
+                   if cfg.stream is not None else None),
+    }
+    path = save_checkpoint(directory, 0, tree)
+    tmp = os.path.join(directory, SNAPSHOT_META + ".tmp")
+    with open(tmp, "w") as f:
+        json.dump(meta, f, indent=2)
+    os.replace(tmp, os.path.join(directory, SNAPSHOT_META))
+    return path
+
+
+def load_engine(directory: str, mesh: Optional[Mesh] = None,
+                axis: str = "data", **runtime_overrides) -> SearchEngine:
+    """Restore a ``save_engine`` snapshot into a serving ``SearchEngine``.
+
+    The spec string in ``engine.json`` rebuilds the config; the arrays are
+    restored through ``repro.runtime.checkpoint`` into a pytree whose
+    structure is derived from the spec — so the engine comes back with
+    identical shapes, dtypes, and treedefs, and therefore compiles no new
+    program shapes vs the engine that was saved.
+
+    ``mesh`` restores straight onto a device mesh: every leaf is placed
+    by ``restore_resharded`` and the engine is then partitioned along
+    ``axis`` (read-only engines donate the transient dense copy; a
+    streaming engine shards its base and keeps the replicated write
+    path). ``runtime_overrides`` replace persisted runtime knobs
+    (``query_bucket=...``, etc.).
+    """
+    meta_path = os.path.join(directory, SNAPSHOT_META)
+    if not os.path.isfile(meta_path):
+        raise FileNotFoundError(
+            f"no engine snapshot at {directory!r} (missing {SNAPSHOT_META})")
+    with open(meta_path) as f:
+        meta = json.load(f)
+    if meta.get("schema") != _SCHEMA:
+        raise ValueError(
+            f"unknown snapshot schema {meta.get('schema')!r} in {meta_path}")
+    path = latest_checkpoint(directory)
+    if path is None:
+        raise FileNotFoundError(f"no checkpoint file in {directory!r}")
+    spec = parse_spec(meta["spec"])
+    if "stream" in runtime_overrides:
+        raise ValueError(
+            "stream= cannot be overridden at load: the StreamConfig's "
+            "capacities are baked into the saved store's array shapes — "
+            "restore, then compact/rebuild to re-provision")
+    runtime = dict(meta["runtime"])
+    if meta["stream"] is not None:
+        runtime["stream"] = StreamConfig(**meta["stream"])
+    runtime.update(runtime_overrides)
+    config = config_from_spec(spec, **runtime)
+    skeleton = _snapshot_skeleton(meta["kind"], meta["has_proj"],
+                                  meta["streaming"], meta["flat_alias"],
+                                  store_fields=meta.get("store_fields", ()))
+    template = _host_template(skeleton, path)
+    if mesh is None:
+        tree = restore_checkpoint(path, template)
+    else:
+        # checkpoints are shard-agnostic: place every leaf directly onto
+        # the target mesh (replicated; the layout pass below partitions)
+        shardings = jax.tree.map(
+            lambda _: NamedSharding(mesh, P()), template)
+        tree = restore_resharded(path, template, shardings)
+    if meta["streaming"]:
+        engine = SearchEngine._restore(config, store=tree["store"],
+                                       frozen=tree["frozen"])
+    else:
+        state = tree["state"]
+        if meta["flat_alias"]:
+            state = state._replace(index=Index("flat", state.corpus))
+        engine = SearchEngine._restore(config, state=state)
+    if mesh is not None:
+        engine.shard(mesh, axis=axis,
+                     donate=not meta["streaming"])
+    return engine

@@ -18,17 +18,21 @@ re-rank pipeline, extended with
   dedup'd exact re-rank (two-source gather) and a final map from internal
   ids to **external** ids.
 
-Everything is shape-static in (n_cap, delta capacity, query bucket), so a
-serving process upserting/deleting/compacting at full tilt reuses one
-compiled program per (index kind, knobs, k, bucket) — pinned by
-``tests/test_stream.py``.
+The base scan dispatches on the frozen quantizers' kind
+(``frozen.quant.kind``) through the ops registry
+(``IndexOps.stream_scan``), so the streaming read path needs no per-kind
+code here. Everything is shape-static in (n_cap, delta capacity, query
+bucket), so a serving process upserting/deleting/compacting at full tilt
+reuses one compiled program per (index kind, knobs, k, bucket) — pinned
+by ``tests/test_stream.py``.
 
 ``sharded_stream_search_fn`` runs the same pipeline under ``shard_map``:
 the base is partitioned exactly like read-only sharded serving
 (``repro.parallel.engine.shard_stream``), while the delta segment,
 tombstone bitmap, and id maps **replicate** — writes touch only
 replicated leaves, so the sharded base stays valid between compactions
-and every shard scans the delta identically.
+and every shard scans the delta identically (per-shard scan =
+``IndexOps.local_scan`` with the replicated ``live`` mask).
 """
 from __future__ import annotations
 
@@ -40,14 +44,12 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.kernels.pq_adc.lut import center_lut
-from repro.kernels.pq_adc.ref import pq_adc_scores_ref
-from .ivf import ivf_local_scan, probe_cells
-from .ivfpq import ivfpq_adc_scan, ivfpq_local_scan
 from .knn import _sq_dists, masked_topk
-from .pq import _check_adc_args, pq_local_scan
+from .pq import _check_adc_args
+from .registry import ScanParams, get_ops
 from .segments import FrozenParams, StreamStore, live_mask
-from .serve import ShardedEngineState, _dedupe_candidates
+from .serve import (ShardedEngineState, _check_rerank_budget,
+                    _dedupe_candidates)
 
 __all__ = ["stream_search_fn", "sharded_stream_search_fn", "StreamReplica"]
 
@@ -63,6 +65,14 @@ class StreamReplica(NamedTuple):
     delta_reduced: Optional[jax.Array]   # (cap, m)
     delta_ids: jax.Array                 # (cap,)
     delta_count: jax.Array               # ()
+
+
+def _check_stream_backend(kind: str, backend: str):
+    if kind == "pq" and backend == "kernel":
+        raise ValueError(
+            "streaming index='pq' needs backend='jnp': the shared-codes "
+            "Pallas kernel has no masked entry point for an arbitrary "
+            "tombstone bitmap (ivfpq folds the mask into the base term)")
 
 
 def _delta_scan(qr, delta_scan_rows, delta_ids, delta_count, n_cap, n_cand):
@@ -105,61 +115,33 @@ def _to_external(ids, row_ids, delta_ids):
 
 
 def stream_search_fn(store: StreamStore, frozen: FrozenParams,
-                     queries: jax.Array, k: int, *, index: str = "flat",
+                     queries: jax.Array, k: int, *,
                      nprobe: int = 8, rerank: int = 64, backend: str = "jnp",
                      interpret: bool = True, lut_dtype: str = "f32"):
     """The mutable-engine query pipeline as one pure traceable function.
 
-    project -> tombstone-masked base probe/scan -> exact delta scan ->
-    merged top-C -> two-source exact re-rank -> external-id top-k.
+    project -> tombstone-masked base probe/scan (``IndexOps.stream_scan``
+    on the frozen kind) -> exact delta scan -> merged top-C -> two-source
+    exact re-rank -> external-id top-k.
     Returns (dists (Q, k), external ids (Q, k)); -1 ids pad short rows.
     """
+    kind = frozen.quant.kind
+    ops = get_ops(kind)
     _check_adc_args(backend, lut_dtype)
-    if index == "pq" and backend == "kernel":
-        raise ValueError(
-            "streaming index='pq' needs backend='jnp': the shared-codes "
-            "Pallas kernel has no masked entry point for an arbitrary "
-            "tombstone bitmap (ivfpq folds the mask into the base term)")
+    _check_stream_backend(kind, backend)
     queries = jnp.asarray(queries, jnp.float32)
     qr = queries
     if frozen.proj is not None:
         matrix, mean = frozen.proj
         qr = (queries - mean) @ matrix.T
-    approximate = frozen.proj is not None or index in ("pq", "ivfpq")
-    n_cand = max(k, rerank) if approximate else k
+    approximate = frozen.proj is not None or ops.lossy
+    _check_rerank_budget(approximate, rerank, k)
+    n_cand = rerank if approximate else k
     live = live_mask(store)
-    scan_rows = store.reduced if store.reduced is not None else store.corpus
     n_cap = store.corpus.shape[0]
-    if index == "ivf":
-        _, cand, _ = probe_cells(frozen.centroids, store.lists, qr, nprobe,
-                                 n_cand)
-        ok = (cand >= 0) & live[jnp.clip(cand, 0, n_cap - 1)]
-        cv = jnp.take(scan_rows, jnp.maximum(cand, 0), axis=0)
-        d2 = jnp.sum((cv - qr[:, None, :]) ** 2, axis=-1)
-        bd2, bids = masked_topk(jnp.where(ok, d2, jnp.inf), cand, n_cand)
-    elif index == "pq":
-        nq = qr.shape[0]
-        m, kc = frozen.cbnorm.shape
-        tables = frozen.cbnorm[None] + (qr @ frozen.lut_w).reshape(nq, m, kc)
-        const = jnp.sum(qr * qr, axis=1)
-        if lut_dtype != "f32":
-            tables, offs = center_lut(tables)
-            const = const + offs
-        scores = (pq_adc_scores_ref(tables, store.codes, lut_dtype)
-                  + const[:, None])
-        scores = jnp.where(live[None, :], scores, jnp.inf)
-        ids = jnp.broadcast_to(jnp.arange(n_cap)[None, :], scores.shape)
-        bd2, bids = masked_topk(scores, ids, n_cand)
-    elif index == "ivfpq":
-        bd2, bids = ivfpq_adc_scan(
-            frozen.centroids, store.lists, store.codes_cell,
-            store.bias_cell, frozen.lut_w, frozen.cbnorm, qr, n_cand,
-            nprobe, backend, interpret, lut_dtype, live=live)
-    else:
-        d2 = _sq_dists(qr, scan_rows)
-        d2 = jnp.where(live[None, :], d2, jnp.inf)
-        ids = jnp.broadcast_to(jnp.arange(n_cap)[None, :], d2.shape)
-        bd2, bids = masked_topk(d2, ids, n_cand)
+    p = ScanParams(nprobe=nprobe, backend=backend, interpret=interpret,
+                   lut_dtype=lut_dtype)
+    bd2, bids = ops.stream_scan(store, frozen, qr, n_cand, live, p)
     delta_scan_rows = (store.delta_reduced
                        if store.delta_reduced is not None
                        else store.delta_vectors)
@@ -174,52 +156,26 @@ def stream_search_fn(store: StreamStore, frozen: FrozenParams,
 
 # --- sharded streaming (base sharded, delta + tombstones replicated) ---------
 
-def _stream_flat_local(qr, x_loc, live, n_cand, axis):
-    """Shard-local exact scan with the replicated live mask: rows beyond
-    ``n_cap`` are shard padding, rows with ``live`` False are unallocated
-    or tombstoned — both mask to (+inf, -1)."""
-    n_loc = x_loc.shape[0]
-    off = jax.lax.axis_index(axis) * n_loc
-    gid = off + jnp.arange(n_loc)
-    n_cap = live.shape[0]
-    ok = (gid < n_cap) & live[jnp.clip(gid, 0, n_cap - 1)]
-    d2 = jnp.where(ok[None, :], _sq_dists(qr, x_loc), jnp.inf)
-    return masked_topk(d2, jnp.broadcast_to(gid[None, :], d2.shape), n_cand)
-
-
 def _stream_sharded_core(sbase: ShardedEngineState, repl: StreamReplica,
-                         queries: jax.Array, *, k: int, index: str,
+                         queries: jax.Array, *, k: int,
                          nprobe: int, rerank: int, backend: str,
                          interpret: bool, lut_dtype: str, axis: str):
     """The shard_map body: masked per-shard base scan + replicated delta
     scan + distributed merge + two-source re-rank."""
+    ops = get_ops(sbase.index.kind)
     queries = jnp.asarray(queries, jnp.float32)
     qr = queries
     if sbase.proj is not None:
         matrix, mean = sbase.proj
         qr = (queries - mean) @ matrix.T
-    approximate = sbase.proj is not None or index in ("pq", "ivfpq")
-    n_cand = max(k, rerank) if approximate else k
+    approximate = sbase.proj is not None or ops.lossy
+    _check_rerank_budget(approximate, rerank, k)
+    n_cand = rerank if approximate else k
     live = (repl.row_ids >= 0) & ~repl.dead
     n_cap = repl.row_ids.shape[0]
-    if index == "ivf":
-        d2, cand = ivf_local_scan(sbase.centroids, sbase.lists,
-                                  sbase.cell_vecs, qr, n_cand, nprobe, axis,
-                                  live=live)
-    elif index == "pq":
-        d2, cand = pq_local_scan(sbase.lut_w, sbase.cbnorm, sbase.codes,
-                                 qr, n_cand, sbase.n_real, axis,
-                                 backend=backend, interpret=interpret,
-                                 lut_dtype=lut_dtype, live=live)
-    elif index == "ivfpq":
-        d2, cand = ivfpq_local_scan(
-            sbase.centroids, sbase.lists, sbase.codes_cell, sbase.bias_cell,
-            sbase.lut_w, sbase.cbnorm, qr, n_cand, nprobe, axis,
-            backend=backend, interpret=interpret, lut_dtype=lut_dtype,
-            live=live)
-    else:
-        x_loc = sbase.reduced if sbase.reduced is not None else sbase.corpus
-        d2, cand = _stream_flat_local(qr, x_loc, live, n_cand, axis)
+    p = ScanParams(nprobe=nprobe, backend=backend, interpret=interpret,
+                   lut_dtype=lut_dtype)
+    d2, cand = ops.local_scan(sbase, qr, n_cand, p, axis, 0, live=live)
     d2g = jax.lax.all_gather(d2, axis, axis=1, tiled=True)
     idg = jax.lax.all_gather(cand, axis, axis=1, tiled=True)
     bd2, bids = masked_topk(d2g, idg, n_cand)
@@ -254,7 +210,7 @@ def _stream_sharded_core(sbase: ShardedEngineState, repl: StreamReplica,
 
 def sharded_stream_search_fn(sbase: ShardedEngineState, repl: StreamReplica,
                              queries: jax.Array, k: int, *, mesh: Mesh,
-                             axis: str = "data", index: str = "flat",
+                             axis: str = "data",
                              nprobe: int = 8, rerank: int = 64,
                              backend: str = "jnp", interpret: bool = True,
                              lut_dtype: str = "f32"):
@@ -266,15 +222,12 @@ def sharded_stream_search_fn(sbase: ShardedEngineState, repl: StreamReplica,
     math. Jit with ``mesh``/``axis`` static.
     """
     from repro.parallel.sharding import engine_state_specs
-    if index == "pq" and backend == "kernel":
-        raise ValueError(
-            "streaming index='pq' needs backend='jnp' (no masked kernel "
-            "entry point for an arbitrary tombstone bitmap)")
+    _check_stream_backend(sbase.index.kind, backend)
     base_specs = engine_state_specs(sbase, axis)
     repl_specs = StreamReplica(*[None if getattr(repl, f) is None else P()
                                  for f in StreamReplica._fields])
     core = functools.partial(
-        _stream_sharded_core, k=k, index=index, nprobe=nprobe, rerank=rerank,
+        _stream_sharded_core, k=k, nprobe=nprobe, rerank=rerank,
         backend=backend, interpret=interpret, lut_dtype=lut_dtype, axis=axis)
     f = shard_map(core, mesh=mesh, in_specs=(base_specs, repl_specs, P()),
                   out_specs=(P(), P()), check_rep=False)

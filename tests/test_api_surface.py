@@ -1,0 +1,55 @@
+"""Public-API surface: everything ``repro.search.__all__`` exports must
+import, be documented, and cover the composable-API entry points."""
+import inspect
+
+import repro.search as search
+
+
+def test_all_names_resolve():
+    assert search.__all__, "repro.search must declare __all__"
+    for name in search.__all__:
+        assert hasattr(search, name), f"__all__ exports missing {name!r}"
+
+
+def test_all_public_objects_are_documented():
+    """Every exported class/function carries a docstring — the API is the
+    documentation surface."""
+    undocumented = []
+    for name in search.__all__:
+        obj = getattr(search, name)
+        if inspect.isclass(obj) or inspect.isfunction(obj):
+            if not (inspect.getdoc(obj) or "").strip():
+                undocumented.append(name)
+    assert not undocumented, f"undocumented public API: {undocumented}"
+
+
+def test_composable_api_entry_points_exported():
+    """The spec / registry / lifecycle / persistence layers are public."""
+    for name in ("IndexSpec", "Reduce", "Coarse", "Code", "Rerank",
+                 "parse_spec", "format_spec", "spec_from_config",
+                 "config_from_spec", "Index", "IndexOps", "ScanParams",
+                 "get_ops", "register_index", "build_engine", "save_engine",
+                 "load_engine", "SearchEngine", "ServeConfig",
+                 "StreamConfig"):
+        assert name in search.__all__, f"{name} missing from __all__"
+
+
+def test_registry_covers_index_kinds():
+    for kind in search.INDEX_KINDS:
+        ops = search.get_ops(kind)
+        assert ops.kind == kind
+        for hook in ("build", "scan", "local_scan", "stream_scan",
+                     "shard_payload", "payload_specs", "store_parts",
+                     "encode_delta", "rebuild", "stream_base_payload"):
+            assert callable(getattr(ops, hook)), (kind, hook)
+
+
+def test_exports_match_module_all():
+    """Names re-exported from the submodules stay in sync with their
+    source __all__ (no silently-dropped public symbols)."""
+    from repro.search import registry, spec
+    for name in spec.__all__:
+        assert name in search.__all__, f"spec.{name} not re-exported"
+    for name in ("Index", "IndexOps", "ScanParams", "get_ops",
+                 "register_index"):
+        assert name in registry.__all__

@@ -153,33 +153,34 @@ def test_serveconfig_rejects_unknown_index():
         ServeConfig(pq_backend="triton")
 
 
-def test_serveconfig_conflicting_booleans_raise():
-    with pytest.raises(ValueError, match="ivfpq"):
-        ServeConfig(use_ivf=True, use_pq=True)
+def test_serveconfig_boolean_shim_removed():
+    """PR-1 deprecation cycle complete: the use_ivf/use_pq booleans now
+    raise with a pointer to the spec grammar — even explicit False (the
+    parameter itself is gone, not just the True path)."""
+    for kw in (dict(use_ivf=True), dict(use_pq=True),
+               dict(use_ivf=True, use_pq=True), dict(use_ivf=False),
+               dict(index="ivf", use_pq=True)):
+        with pytest.raises(ValueError, match="spec"):
+            ServeConfig(**kw)
 
 
-def test_serveconfig_boolean_shim_maps_and_warns():
-    with pytest.warns(DeprecationWarning):
-        cfg = ServeConfig(use_ivf=True)
-    assert cfg.index == "ivf"
-    with pytest.warns(DeprecationWarning):
-        cfg = ServeConfig(use_pq=True)
-    assert cfg.index == "pq"
-    # explicit False is not a selection
-    assert ServeConfig(use_ivf=False, use_pq=False).index == "flat"
+def test_serveconfig_rejects_dead_knobs():
+    """Knobs whose stage is absent from the selected pipeline are rejected
+    instead of silently ignored (the old nlist-under-pq trap)."""
+    with pytest.raises(ValueError, match="dead knob"):
+        ServeConfig(index="pq", nlist=128)
+    with pytest.raises(ValueError, match="dead knob"):
+        ServeConfig(index="flat", nprobe=4)
+    with pytest.raises(ValueError, match="dead knob"):
+        ServeConfig(index="ivf", lut_dtype="int8")
+    # defaults are not a selection: all-default knobs pass for every kind
+    for kind in ("flat", "ivf", "pq", "ivfpq"):
+        ServeConfig(index=kind)
 
 
-def test_serveconfig_boolean_plus_index_rejected():
-    with pytest.raises(ValueError, match="not both"):
-        ServeConfig(index="ivf", use_pq=True)
-
-
-def test_serveconfig_shimmed_config_survives_replace():
-    import dataclasses
-    with pytest.warns(DeprecationWarning):
-        cfg = ServeConfig(use_ivf=True)
-    cfg2 = dataclasses.replace(cfg, nprobe=16)      # must not re-trip shim
-    assert cfg2.index == "ivf" and cfg2.nprobe == 16
+def test_serveconfig_rejects_nprobe_above_nlist():
+    with pytest.raises(ValueError, match="nprobe exceeds nlist"):
+        ServeConfig(index="ivf", nlist=8, nprobe=16)
 
 
 # --- degenerate probe budgets -----------------------------------------------

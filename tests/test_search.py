@@ -88,19 +88,19 @@ def test_engine_ivf_path():
     q = _data(seed=8, n=50)
     _, truth = knn_search(q, x, 10)
     eng = SearchEngine(x, ServeConfig(
-        target_dim=8, rerank=64, use_ivf=True, nlist=16, nprobe=16,
+        target_dim=8, rerank=64, index="ivf", nlist=16, nprobe=16,
         mpad=MPADConfig(m=8, iters=24)))
     _, found = eng.search(q, 10)
     assert float(recall_at_k(found, truth)) > 0.7
 
 
-def test_engine_pq_path():
-    """MPAD-reduce -> PQ-code -> ADC scan -> exact re-rank."""
+def test_engine_pq_path_via_spec():
+    """MPAD-reduce -> PQ-code -> ADC scan -> exact re-rank, built from the
+    pipeline-spec string instead of a flat config."""
+    from repro.search import build_engine
     x = _data(seed=7, n=500)
     q = _data(seed=8, n=50)
     _, truth = knn_search(q, x, 10)
-    eng = SearchEngine(x, ServeConfig(
-        target_dim=8, rerank=64, use_pq=True, pq_subspaces=4,
-        pq_centroids=64, mpad=MPADConfig(m=8, iters=24)))
+    eng = build_engine(x, "qpad8>pq4x64", mpad=MPADConfig(m=8, iters=24))
     _, found = eng.search(q, 10)
     assert float(recall_at_k(found, truth)) > 0.7

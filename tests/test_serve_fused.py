@@ -151,11 +151,13 @@ def test_search_fn_matches_engine_and_staged_pipeline():
     q = _data(seed=6, n=32)
     d_e, i_e = eng.search(q, 10)
     # pure call, no engine, no padding
-    d_f, i_f = search_fn(eng.state, q, 10, index="ivfpq", nprobe=8, rerank=64)
+    d_f, i_f = search_fn(eng.state, q, 10, nprobe=8, rerank=64)
     np.testing.assert_array_equal(np.asarray(i_e), np.asarray(i_f))
     np.testing.assert_allclose(np.asarray(d_e), np.asarray(d_f), atol=1e-5)
-    # staged: the pre-fusion per-stage pipeline, stage by stage
-    _, cand = ivfpq_search(eng.state.ivfpq, q, 64, nprobe=8)
+    # staged: the pre-fusion per-stage pipeline, stage by stage (the tagged
+    # union's payload is the plain IVFPQIndex)
+    assert eng.state.index.kind == "ivfpq"
+    _, cand = ivfpq_search(eng.state.index.payload, q, 64, nprobe=8)
     d_s, i_s = jax.jit(exact_rerank, static_argnames="k")(
         q, eng.state.corpus, cand, k=10)
     np.testing.assert_array_equal(np.asarray(i_e), np.asarray(i_s))

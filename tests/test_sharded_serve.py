@@ -45,13 +45,23 @@ def _queries(nq=24):
 _ENGINES = {}
 
 
+def _config(index, **kw):
+    """Per-kind config: stage knobs only where the pipeline has the stage
+    (dead knobs raise at config time)."""
+    base = dict(target_dim=8, rerank=64, index=index,
+                mpad=MPADConfig(m=8, iters=16), fit_sample=512)
+    if index in ("ivf", "ivfpq"):
+        base.update(nlist=12, nprobe=5)
+    if index in ("pq", "ivfpq"):
+        base.update(pq_subspaces=8, pq_centroids=64)
+    base.update(kw)
+    return ServeConfig(**base)
+
+
 def _engine(index):
     """One build per index kind (MPAD fit + index train are the slow part)."""
     if index not in _ENGINES:
-        _ENGINES[index] = SearchEngine(_data(), ServeConfig(
-            target_dim=8, rerank=64, index=index, nlist=12, nprobe=5,
-            pq_subspaces=8, pq_centroids=64,
-            mpad=MPADConfig(m=8, iters=16), fit_sample=512))
+        _ENGINES[index] = SearchEngine(_data(), _config(index))
     return _ENGINES[index]
 
 
@@ -81,7 +91,7 @@ def _assert_parity(eng, kw, shards, q=None, k=K):
 def test_sharded_matches_single_device(index, lut, shards):
     eng = _engine(index)
     coded = index in ("pq", "ivfpq")
-    kw = dict(index=index, nprobe=5, rerank=64, backend="jnp",
+    kw = dict(nprobe=5, rerank=64, backend="jnp",
               interpret=True, lut_dtype=lut if coded else "f32")
     _assert_parity(eng, kw, shards)
 
@@ -94,7 +104,7 @@ def test_sharded_kernel_backend_parity(index, lut):
     displacing real candidates."""
     shards = min(2, jax.device_count())
     eng = _engine(index)
-    kw = dict(index=index, nprobe=5, rerank=64, backend="kernel",
+    kw = dict(nprobe=5, rerank=64, backend="kernel",
               interpret=True, lut_dtype=lut)
     _assert_parity(eng, kw, shards)
 
@@ -130,13 +140,15 @@ def test_sharded_state_padding_is_per_shard_equal():
     shards = min(8, jax.device_count())
     mesh = _mesh(shards)
     sstate = shard_engine(_engine("ivfpq").state, mesh)
+    assert sstate.index.kind == "ivfpq"
+    ix = sstate.index.payload                        # ShardedIVFPQ
     assert sstate.corpus.shape[0] % shards == 0
-    assert sstate.lists.shape[0] % shards == 0
-    assert sstate.codes_cell.shape[:2] == sstate.lists.shape
+    assert ix.lists.shape[0] % shards == 0
+    assert ix.codes_cell.shape[:2] == ix.lists.shape
     assert int(sstate.n_real) == N
     # pad cells are empty posting rows
-    nlist_real = sstate.centroids.shape[0]
-    pads = np.asarray(sstate.lists)[nlist_real:]
+    nlist_real = ix.centroids.shape[0]
+    pads = np.asarray(ix.lists)[nlist_real:]
     assert (pads == -1).all()
 
 
@@ -170,13 +182,10 @@ def test_shard_aware_builders_prepad_cells():
 def test_shard_donate_releases_dense_buffers():
     """``shard(donate=True)`` frees the dense EngineState (no 2x database
     memory): every dense leaf is deleted or — by identity — lives on in
-    the sharded pytree; the dense views raise; results are unchanged."""
+    the sharded pytree; re-sharding raises; results are unchanged."""
     shards = min(2, jax.device_count())
     x = _data()
-    eng = SearchEngine(x, ServeConfig(
-        target_dim=8, rerank=64, index="ivfpq", nlist=12, nprobe=5,
-        pq_subspaces=8, pq_centroids=64,
-        mpad=MPADConfig(m=8, iters=16), fit_sample=512))
+    eng = SearchEngine(x, _config("ivfpq"))
     q = _queries()
     d0, i0 = eng.search(q, K)
     old_leaves = jax.tree.leaves(eng.state)
@@ -186,8 +195,6 @@ def test_shard_donate_releases_dense_buffers():
         # the caller-supplied corpus array stays caller-owned by design
         assert leaf.is_deleted() or id(leaf) in placed or leaf is x
     assert eng.state is None
-    with pytest.raises(RuntimeError, match="donate"):
-        eng.corpus
     with pytest.raises(RuntimeError, match="donate"):
         eng.shard(_mesh(shards))                 # no dense state to re-shard
     d1, i1 = eng.search(q, K)

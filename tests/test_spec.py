@@ -1,0 +1,180 @@
+"""Index-spec API: grammar round-trip, stage validation, config adapters,
+and spec-built engines matching config-built engines."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import MPADConfig
+from repro.search import (Coarse, Code, IndexSpec, Reduce, Rerank,
+                          SearchEngine, ServeConfig, build_engine,
+                          config_from_spec, format_spec, parse_spec,
+                          spec_from_config)
+
+
+# --- grammar: every production round-trips -----------------------------------
+
+@pytest.mark.parametrize("s,kind", [
+    ("flat", "flat"),
+    ("qpad32", "flat"),
+    ("rr128", "flat"),
+    ("ivf64x8", "ivf"),
+    ("qpad32>ivf64x8", "ivf"),
+    ("pq8x256", "pq"),
+    ("pq8x256:f32", "pq"),
+    ("pq8x256:bf16", "pq"),
+    ("pq8x256:i8", "pq"),
+    ("pq8x256:int8", "pq"),
+    ("pq8x256@kernel", "pq"),
+    ("pq8x256:i8@kernel", "pq"),
+    ("qpad16>pq4x64:bf16@jnp", "pq"),
+    ("ivf64x8>pq8x256", "ivfpq"),
+    ("qpad32>ivf64x8>pq8x256:i8", "ivfpq"),
+    ("qpad32>ivf64x8>pq8x256:i8>rr96", "ivfpq"),
+])
+def test_parse_print_round_trip(s, kind):
+    spec = parse_spec(s)
+    assert spec.kind == kind
+    # value round-trip: parse(print(spec)) == spec
+    assert parse_spec(format_spec(spec)) == spec
+    # canonical form is a fixed point
+    canon = format_spec(spec)
+    assert format_spec(parse_spec(canon)) == canon
+
+
+def test_printer_canonicalizes():
+    assert format_spec(parse_spec("pq8x256:int8")) == "pq8x256:i8"
+    assert format_spec(parse_spec("pq8x256:f32@jnp")) == "pq8x256"
+    assert format_spec(parse_spec("qpad32>rr64")) == "qpad32"  # default rr
+    assert format_spec(IndexSpec()) == "flat"
+    assert str(parse_spec("QPAD32 > IVF64x8 ")) == "qpad32>ivf64x8"
+
+
+@pytest.mark.parametrize("bad,match", [
+    ("", "empty"),
+    ("hnsw32", "unknown stage token"),
+    ("qpad", "unknown stage token"),
+    ("ivf64", "unknown stage token"),          # missing xNPROBE
+    ("pq8x256:fp8", "unknown stage token"),
+    ("pq8x256@triton", "unknown stage token"),
+    ("qpad32>qpad16", "duplicate"),
+    ("ivf64x8>qpad32", "out of pipeline order"),
+    ("rr64>pq8x256", "out of pipeline order"),
+    ("flat>rr64", "unknown stage token"),      # 'flat' only stands alone
+    ("ivf8x16", "nprobe exceeds nlist"),
+    ("qpad0", "m must be >= 1"),
+    ("rr0", "n must be >= 1"),
+    ("pq8x1", "codewords"),
+])
+def test_bad_spec_strings_raise(bad, match):
+    with pytest.raises(ValueError, match=match):
+        parse_spec(bad)
+
+
+def test_stage_validation():
+    with pytest.raises(ValueError, match="nprobe exceeds nlist"):
+        Coarse(nlist=4, nprobe=5)
+    with pytest.raises(ValueError, match="lut_dtype"):
+        Code(lut_dtype="fp8")
+    with pytest.raises(ValueError, match="backend"):
+        Code(backend="triton")
+    with pytest.raises(TypeError, match="Coarse"):
+        IndexSpec(coarse=Code())
+    with pytest.raises(TypeError, match="Rerank"):
+        IndexSpec(rerank=64)
+
+
+def test_kind_and_approximate():
+    assert IndexSpec().kind == "flat"
+    assert not IndexSpec().approximate
+    assert IndexSpec(reduce=Reduce(8)).approximate
+    assert IndexSpec(coarse=Coarse(16)).kind == "ivf"
+    assert not IndexSpec(coarse=Coarse(16)).approximate
+    assert IndexSpec(code=Code()).kind == "pq"
+    assert IndexSpec(code=Code()).approximate
+    assert IndexSpec(coarse=Coarse(16), code=Code()).kind == "ivfpq"
+    assert IndexSpec(reduce=Reduce(8), rerank=Rerank(32)).stages() == (
+        Reduce(8), Rerank(32))
+
+
+# --- adapters: ServeConfig <-> IndexSpec -------------------------------------
+
+def test_config_spec_round_trip():
+    for s in ("flat", "qpad16", "ivf32x4", "pq8x64:i8@kernel",
+              "qpad16>ivf32x4>pq8x64:bf16>rr96"):
+        spec = parse_spec(s)
+        cfg = config_from_spec(spec, query_bucket=32, seed=3)
+        assert cfg.query_bucket == 32 and cfg.seed == 3
+        assert cfg.to_spec() == spec
+        assert spec_from_config(cfg) == spec
+
+
+def test_config_from_spec_accepts_strings_and_rejects_junk():
+    assert config_from_spec("ivf32x4").index == "ivf"
+    with pytest.raises(TypeError, match="IndexSpec or spec string"):
+        config_from_spec(42)
+
+
+def test_serveconfig_validates_through_spec():
+    # composition rules surface at config construction, not inside a scan
+    with pytest.raises(ValueError, match="nprobe exceeds nlist"):
+        ServeConfig(index="ivfpq", nlist=4, nprobe=8)
+    with pytest.raises(ValueError, match="n must be >= 1"):
+        ServeConfig(rerank=0, target_dim=8)
+
+
+# --- acceptance: spec-built engine == config-built engine --------------------
+
+def _data(seed=0, n=900, d=64):
+    key = jax.random.key(seed)
+    centers = jax.random.normal(key, (12, d)) * 2
+    lab = jax.random.randint(jax.random.fold_in(key, 1), (n,), 0, 12)
+    return centers[lab] + 0.3 * jax.random.normal(
+        jax.random.fold_in(key, 2), (n, d))
+
+
+def test_build_engine_spec_matches_serveconfig_engine():
+    """The acceptance pin: build_engine(corpus,
+    parse_spec("qpad32>ivf64x8>pq8x256:i8")) returns ids identical to the
+    equivalent ServeConfig engine (same seeds, same build path)."""
+    x = _data()
+    q = _data(seed=9, n=32)
+    mpad = MPADConfig(m=32, iters=8)           # tiny fit: parity, not recall
+    eng_spec = build_engine(x, parse_spec("qpad32>ivf64x8>pq8x256:i8"),
+                            mpad=mpad, fit_sample=512)
+    eng_cfg = SearchEngine(x, ServeConfig(
+        target_dim=32, index="ivfpq", nlist=64, nprobe=8,
+        pq_subspaces=8, pq_centroids=256, lut_dtype="int8", rerank=64,
+        mpad=mpad, fit_sample=512))
+    d1, i1 = eng_spec.search(q, 10)
+    d2, i2 = eng_cfg.search(q, 10)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2), atol=1e-6)
+
+
+def test_search_engine_accepts_spec_everywhere():
+    """SearchEngine takes a spec string / IndexSpec directly, and the
+    engine exposes the lowered spec (reflecting knob mutations)."""
+    x = _data(n=400, d=32)
+    eng = SearchEngine(x, "ivf16x4>rr32")
+    assert eng.spec == parse_spec("ivf16x4>rr32")
+    d, ids = eng.search(x[:8], 5)
+    assert ids.shape == (8, 5)
+    eng.config = dataclasses.replace(eng.config, nprobe=8)
+    assert eng.spec.coarse.nprobe == 8         # spec tracks the live config
+    with pytest.raises(TypeError, match="spec string"):
+        SearchEngine(x, config=42)
+
+
+def test_rerank_budget_validated_at_search_time():
+    """k > rerank on an approximate pipeline raises an actionable error
+    host-side instead of silently truncating inside the jitted scan."""
+    x = _data(n=400, d=32)
+    eng = SearchEngine(x, "pq4x16>rr8")
+    with pytest.raises(ValueError, match="re-rank budget"):
+        eng.search(x[:4], 16)
+    # exact pipelines have no re-rank budget to exceed
+    flat = SearchEngine(x, "flat")
+    d, ids = flat.search(x[:4], 16)
+    assert ids.shape == (4, 16)

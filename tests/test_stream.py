@@ -44,11 +44,15 @@ def _queries(nq=16):
 
 def _cfg(index, lut="f32", target_dim=None, **stream_kw):
     stream_kw.setdefault("delta_capacity", 64)
-    return ServeConfig(
-        target_dim=target_dim, rerank=128, index=index, nlist=12, nprobe=12,
-        pq_subspaces=8, pq_centroids=64, lut_dtype=lut,
-        mpad=MPADConfig(m=8, iters=16) if target_dim else None,
-        fit_sample=512, stream=StreamConfig(**stream_kw))
+    kw = dict(target_dim=target_dim, rerank=128, index=index,
+              mpad=MPADConfig(m=8, iters=16) if target_dim else None,
+              fit_sample=512, stream=StreamConfig(**stream_kw))
+    # stage knobs only where the pipeline has the stage (dead knobs raise)
+    if index in ("ivf", "ivfpq"):
+        kw.update(nlist=12, nprobe=12)
+    if index in ("pq", "ivfpq"):
+        kw.update(pq_subspaces=8, pq_centroids=64, lut_dtype=lut)
+    return ServeConfig(**kw)
 
 
 def _engine(index, **kw):
@@ -177,7 +181,7 @@ def test_interleaved_ops_then_compact_equals_rebuild(index, lut, target_dim,
     oracle = rebuild_state(eng.frozen, surv, index=index)
     coded = index in ("pq", "ivfpq")
     q = _queries()
-    d_r, i_r = search_fn(oracle, q, K, index=index, nprobe=12, rerank=128,
+    d_r, i_r = search_fn(oracle, q, K, nprobe=12, rerank=128,
                          backend="jnp", interpret=True,
                          lut_dtype=lut if coded else "f32")
     ext_r = surv_ids[np.asarray(i_r)]
@@ -275,8 +279,6 @@ def test_streaming_engine_releases_dense_state():
     x = _data()
     eng = SearchEngine(x, _cfg("ivfpq"))
     assert eng.state is None
-    with pytest.raises(RuntimeError, match="StreamStore"):
-        eng.corpus
     assert not x.is_deleted()                       # caller-owned
     for leaf in jax.tree_util.tree_leaves(eng.frozen):
         assert not leaf.is_deleted()
@@ -312,6 +314,16 @@ def test_streamconfig_validation():
         StreamConfig(compact_threshold=0.0)
     with pytest.raises(ValueError, match="write_bucket"):
         StreamConfig(write_bucket=0)
+
+
+def test_streaming_after_shard_rejected():
+    """streaming() must come before shard(): the store takes over the
+    dense arrays, which would strand (or delete) the placed sharded
+    state."""
+    eng = SearchEngine(_data(), ServeConfig(target_dim=None))
+    eng.shard(jax.make_mesh((1,), ("data",)))
+    with pytest.raises(RuntimeError, match="BEFORE shard"):
+        eng.streaming(StreamConfig())
 
 
 def test_write_api_requires_stream_config():

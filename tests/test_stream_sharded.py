@@ -37,11 +37,15 @@ def _queries(nq=24):
 
 
 def _engine(index, lut="f32", backend="jnp", target_dim=None):
-    return SearchEngine(_data(), ServeConfig(
-        target_dim=target_dim, rerank=64, index=index, nlist=12, nprobe=5,
-        pq_subspaces=8, pq_centroids=64, lut_dtype=lut, pq_backend=backend,
-        mpad=MPADConfig(m=8, iters=16) if target_dim else None,
-        fit_sample=512, stream=StreamConfig(delta_capacity=64)))
+    kw = dict(target_dim=target_dim, rerank=64, index=index,
+              mpad=MPADConfig(m=8, iters=16) if target_dim else None,
+              fit_sample=512, stream=StreamConfig(delta_capacity=64))
+    if index in ("ivf", "ivfpq"):
+        kw.update(nlist=12, nprobe=5)
+    if index in ("pq", "ivfpq"):
+        kw.update(pq_subspaces=8, pq_centroids=64, lut_dtype=lut,
+                  pq_backend=backend)
+    return SearchEngine(_data(), ServeConfig(**kw))
 
 
 def _mesh(shards):

@@ -51,7 +51,7 @@ def test_end_to_end_serving_pipeline():
     queries = corpus[:64] + 0.05 * jax.random.normal(
         jax.random.fold_in(key, 3), (64, 128))
     engine = SearchEngine(corpus, ServeConfig(
-        target_dim=16, rerank=40, use_ivf=True, nlist=32, nprobe=8,
+        target_dim=16, rerank=40, index="ivf", nlist=32, nprobe=8,
         mpad=MPADConfig(m=16, iters=32), fit_sample=1024))
     _, ids = engine.search(queries, 10)
     _, truth = knn_search(queries, corpus, 10)
