@@ -10,7 +10,9 @@ gated row (batch-256 ivfpq, f32 LUT by default):
 Once ``bench_stream`` rows are present, the streaming scenario is gated
 too: update throughput (``upserts_per_sec``, fractional drop limit
 ``--max-ups-drop``, default 0.25) and the streaming recall@10 (same
-absolute limit as the serving row).
+absolute limit as the serving row). The ``durability`` section gates the
+WAL write-path overhead within the fresh file (WAL-on upsert throughput
+no more than ``--max-wal-overhead`` below WAL-off, default 0.25).
 
 A missing gated row in the FRESH file is itself a failure (the bench
 silently lost coverage); a missing row in the BASELINE only warns, so the
@@ -81,13 +83,52 @@ def check_stream(baseline: dict, fresh: dict, max_ups_drop: float = 0.25,
     return failures, report
 
 
+def check_durability(baseline: dict, fresh: dict,
+                     max_wal_overhead: float = 0.25):
+    """Gate the WAL write-path overhead.
+
+    Unlike the throughput gates this one is *within-file*: the fresh bench
+    already measures WAL-off vs WAL-on upsert throughput on the same
+    machine, so the overhead fraction is hardware-independent and gated
+    directly (``wal_overhead_frac`` <= ``--max-wal-overhead``). A baseline
+    without a ``durability`` section only means the gate predates it; a
+    FRESH file without one while the baseline has it is lost coverage.
+    """
+    failures, report = [], []
+    new = fresh.get("durability")
+    if new is None:
+        if baseline.get("durability") is not None:
+            failures.append("fresh bench is missing the durability section")
+        else:
+            report.append("no durability section; skipping WAL-overhead gate")
+        return failures, report
+    frac = new["wal_overhead_frac"]
+    report.append(f"wal ovhd  : {new['upserts_per_sec_wal_off']} -> "
+                  f"{new['upserts_per_sec_wal_on']} ups/s with WAL on "
+                  f"({frac:+.1%}, limit {max_wal_overhead:.0%})")
+    report.append(f"recovery  : {new['recovery_rows']} rows in "
+                  f"{new['recovery_seconds']}s "
+                  f"({new['recovery_rows_per_sec']} rows/s)")
+    if frac > max_wal_overhead:
+        failures.append(
+            f"WAL write-path overhead too high: "
+            f"{new['upserts_per_sec_wal_off']} -> "
+            f"{new['upserts_per_sec_wal_on']} ups/s "
+            f"({frac:.1%} > {max_wal_overhead:.0%})")
+    return failures, report
+
+
 def check(baseline: dict, fresh: dict, max_qps_drop: float = 0.20,
-          max_recall_drop: float = 0.02, max_ups_drop: float = 0.25):
+          max_recall_drop: float = 0.02, max_ups_drop: float = 0.25,
+          max_wal_overhead: float = 0.25):
     """Returns (failures, report_lines); empty failures == gate passes."""
     failures, report = [], []
     sf, sr = check_stream(baseline, fresh, max_ups_drop, max_recall_drop)
     failures += sf
     report += sr
+    df, dr = check_durability(baseline, fresh, max_wal_overhead)
+    failures += df
+    report += dr
     base = find_row(baseline, **GATED)
     new = find_row(fresh, **GATED)
     sel = " ".join(f"{k}={v}" for k, v in GATED.items())
@@ -127,13 +168,18 @@ def main(argv=None) -> int:
     ap.add_argument("--max-ups-drop", type=float, default=0.25,
                     help="max fractional update-throughput drop on the "
                          "streaming scenario (default 0.25)")
+    ap.add_argument("--max-wal-overhead", type=float, default=0.25,
+                    help="max fractional upsert-throughput cost of the WAL "
+                         "(WAL-on vs WAL-off, within the fresh file; "
+                         "default 0.25)")
     args = ap.parse_args(argv)
     with open(args.baseline) as f:
         baseline = json.load(f)
     with open(args.fresh) as f:
         fresh = json.load(f)
     failures, report = check(baseline, fresh, args.max_qps_drop,
-                             args.max_recall_drop, args.max_ups_drop)
+                             args.max_recall_drop, args.max_ups_drop,
+                             args.max_wal_overhead)
     for line in report:
         print(line)
     if failures:

@@ -381,6 +381,127 @@ def bench_stream(rows, json_doc=None, fast=False):
             fresh_top1_compacted=round(rec_compacted, 4))]
 
 
+def bench_durability(rows, json_doc=None, fast=False):
+    """Durability subsystem: what the WAL costs the write path, how fast
+    crash recovery replays, and what background compaction buys search
+    latency vs the blocking stall."""
+    import shutil
+    import tempfile
+
+    import numpy as np
+
+    from repro.search import (DurabilityConfig, SearchEngine, ServeConfig,
+                              StreamConfig, load_engine)
+    n, dim = (4096, 128) if fast else (16384, 128)
+    wb = 256
+    key = jax.random.key(0)
+    corpus = jax.random.normal(key, (n, dim), jnp.float32)
+    queries = corpus[:64] + 0.05 * jax.random.normal(
+        jax.random.fold_in(key, 1), (64, dim))
+    rng = np.random.RandomState(0)
+
+    def mk(**stream_kw):
+        stream_kw.setdefault("delta_capacity", 2048)
+        return SearchEngine(corpus, ServeConfig(
+            rerank=64, index="ivfpq", nlist=64, nprobe=8,
+            pq_subspaces=16, pq_centroids=256,
+            stream=StreamConfig(write_bucket=wb, row_capacity=3 * n,
+                                cell_slack=256, **stream_kw)))
+
+    reps = 3 if fast else 6
+    batches = [rng.randn(wb, dim).astype(np.float32)
+               for _ in range(reps + 1)]
+
+    def ups_rate(eng, base_id):
+        # the delta (cap 2048, point 1536) holds every batch: pure write
+        # path, no compaction inside the timed region
+        eng.upsert(np.arange(base_id, base_id + wb), batches[0])  # warmup
+        jax.block_until_ready(eng.store.delta_count)
+        t0 = time.perf_counter()
+        for r in range(reps):
+            ids = np.arange(base_id + (r + 1) * wb, base_id + (r + 2) * wb)
+            eng.upsert(ids, batches[r + 1])
+        jax.block_until_ready(eng.store.delta_count)
+        return reps * wb / (time.perf_counter() - t0)
+
+    work = tempfile.mkdtemp(prefix="qpad-bench-dur-")
+    try:
+        # --- WAL overhead on the write path -------------------------------
+        off = ups_rate(mk(), n)
+        eng = mk().durable(os.path.join(work, "wal_on"),
+                           DurabilityConfig(fsync="batch"))
+        on = ups_rate(eng, n)
+        overhead = max(0.0, 1.0 - on / off) if off else 0.0
+        rows.append(("durability_wal_overhead", 0.0,
+                     f"ups_off={off:.0f} ups_on={on:.0f} "
+                     f"overhead={overhead:.1%}"))
+
+        # --- crash-recovery replay speed ----------------------------------
+        rec_dir = os.path.join(work, "recover")
+        eng = mk().durable(rec_dir, DurabilityConfig(fsync="batch"))
+        r_rows = 2048 if fast else 16384
+        for b in range(r_rows // wb):
+            ids = np.arange(2 * n + b * wb, 2 * n + (b + 1) * wb)
+            eng.upsert(ids, rng.randn(wb, dim).astype(np.float32))
+        jax.block_until_ready(eng.store.delta_count)
+        t0 = time.perf_counter()
+        rec = load_engine(rec_dir)
+        jax.block_until_ready(rec.store.delta_count)
+        rec_s = time.perf_counter() - t0
+        assert rec._replayed > 0
+        rows.append(("durability_recovery", rec_s * 1e6,
+                     f"rows={r_rows} seconds={rec_s:.2f} "
+                     f"rows_per_s={r_rows / rec_s:.0f}"))
+
+        # --- background vs blocking compaction ----------------------------
+        def fill(eng):
+            for b in range(5):          # 1280 rows: under the 1536 point
+                ids = np.arange(4 * n + b * wb, 4 * n + (b + 1) * wb)
+                eng.upsert(ids, batches[b % (reps + 1)])
+            jax.block_until_ready(eng.store.delta_count)
+
+        eng = mk()
+        eng.search(queries, 10)         # warmup the read program
+        fill(eng)
+        t0 = time.perf_counter()
+        eng.compact()
+        stall_ms = (time.perf_counter() - t0) * 1e3
+        base_ts = []
+        for _ in range(8):
+            t0 = time.perf_counter()
+            jax.block_until_ready(eng.search(queries, 10))
+            base_ts.append((time.perf_counter() - t0) * 1e6)
+        base_ts.sort()
+        eng = mk(background_compact=True)
+        eng.search(queries, 10)
+        fill(eng)
+        eng.begin_compact()
+        bg_ts = []
+        while eng._compact_future is not None:
+            t0 = time.perf_counter()
+            jax.block_until_ready(eng.search(queries, 10))
+            bg_ts.append((time.perf_counter() - t0) * 1e6)
+        bg_ts.sort()
+        p50_bg, p50_base = _pctl(bg_ts, 50), _pctl(base_ts, 50)
+        rows.append(("durability_bg_compact_search", p50_bg,
+                     f"baseline_p50={p50_base:.0f}us "
+                     f"blocking_stall={stall_ms:.0f}ms "
+                     f"samples={len(bg_ts)}"))
+        if json_doc is not None:
+            json_doc["durability"] = dict(
+                upserts_per_sec_wal_off=round(off),
+                upserts_per_sec_wal_on=round(on),
+                wal_overhead_frac=round(overhead, 4),
+                recovery_rows=r_rows,
+                recovery_seconds=round(rec_s, 3),
+                recovery_rows_per_sec=round(r_rows / rec_s),
+                search_p50_us_during_bg_compact=round(p50_bg, 1),
+                search_p50_us_baseline=round(p50_base, 1),
+                blocking_compact_stall_ms=round(stall_ms, 1))
+    finally:
+        shutil.rmtree(work, ignore_errors=True)
+
+
 def roofline_summary(rows):
     art = "benchmarks/artifacts/dryrun"
     if not os.path.isdir(art):
@@ -432,6 +553,11 @@ def main(argv=None) -> None:
     except Exception as e:
         serve_err = serve_err or e
         rows.append(("bench_stream", -1.0, f"ERROR:{type(e).__name__}"))
+    try:
+        bench_durability(rows, json_doc=json_doc, fast=args.fast)
+    except Exception as e:
+        serve_err = serve_err or e
+        rows.append(("bench_durability", -1.0, f"ERROR:{type(e).__name__}"))
     print("\nname,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")

@@ -11,6 +11,12 @@ which are lowered onto the same spec. ``--snapshot-dir`` exercises the
 persistence lifecycle: the built engine is saved and re-loaded before
 serving.
 
+Durable streaming: ``--stream --durable DIR`` snapshots the engine to DIR
+and write-ahead-logs every mutation (``--fsync`` picks the durability/
+throughput trade-off), then serves from the crash-recovered engine;
+``--background-compact`` folds the delta on a worker thread instead of
+blocking searches.
+
 Sharded serving: ``--shards N`` partitions the engine state over an N-way
 data mesh (``--mesh host`` simulates the N devices on CPU — useful for
 dry-runs; it must run before jax touches its backend, which this launcher
@@ -71,6 +77,16 @@ def _parse_args():
                     help="--stream: delta segment size (rows)")
     ap.add_argument("--write-batch", type=int, default=64,
                     help="--stream: rows per upsert batch")
+    ap.add_argument("--durable", default=None, metavar="DIR",
+                    help="--stream: make the engine durable — snapshot to "
+                         "DIR, write-ahead log every mutation, and reopen "
+                         "via crash recovery (load_engine) before serving")
+    ap.add_argument("--fsync", choices=["always", "batch", "never"],
+                    default="batch",
+                    help="--durable: WAL fsync mode (default batch)")
+    ap.add_argument("--background-compact", action="store_true",
+                    help="--stream: fold the delta on a worker thread and "
+                         "swap atomically instead of blocking searches")
     return ap.parse_args()
 
 
@@ -114,7 +130,9 @@ def main():
     t0 = time.time()
     runtime = dict(query_bucket=args.query_bucket, fit_sample=4096)
     if args.stream:
-        runtime["stream"] = StreamConfig(delta_capacity=args.delta_capacity)
+        runtime["stream"] = StreamConfig(
+            delta_capacity=args.delta_capacity,
+            background_compact=args.background_compact)
     if spec.reduce is not None:
         runtime["mpad"] = MPADConfig(m=spec.reduce.m, iters=64,
                                      batch_size=2048)
@@ -123,6 +141,16 @@ def main():
           f"(spec={format_spec(spec)}, kind={spec.kind}"
           + (f", streaming delta={args.delta_capacity}" if args.stream
              else "") + ")")
+    if args.durable:
+        from repro.search import DurabilityConfig
+        t0 = time.time()
+        engine.durable(args.durable, DurabilityConfig(fsync=args.fsync))
+        # reopen through the recovery path so the launcher exercises the
+        # same snapshot+replay an operator would see after a crash
+        engine = load_engine(args.durable)
+        print(f"durable via {args.durable} in {time.time()-t0:.1f}s "
+              f"(fsync={args.fsync}; every write WAL-logged, served from "
+              "the recovered engine)")
     if args.snapshot_dir:
         t0 = time.time()
         engine.save(args.snapshot_dir)
@@ -180,6 +208,13 @@ def main():
         engine.compact()
         print(f"final compact: {time.time()-t0:.2f}s "
               f"(base rows={int(engine.store.n_rows)})")
+        st = engine.stats()
+        if "wal" in st:
+            wal, mnt = st["wal"], st["maintenance"]
+            print(f"wal: {wal['records']} records / {wal['bytes']} bytes / "
+                  f"{wal['fsyncs']} fsyncs, {wal['replayed']} replayed; "
+                  f"compactions={mnt['compactions']} "
+                  f"vacuums={mnt['vacuums']} rebuilds={mnt['rebuilds']}")
 
 
 if __name__ == "__main__":

@@ -3,7 +3,8 @@
 Checkpoints are stored as flat ``{path: np.ndarray}`` npz files — fully
 shard-agnostic, so a checkpoint written on one mesh restores onto any other
 (``restore_resharded``): the elastic-scaling primitive. Writes go to a temp
-file + atomic rename; a crash mid-write never corrupts the latest good step.
+file + fsync + atomic rename; a crash mid-write (or a power loss right
+after) never corrupts the latest good step.
 """
 from __future__ import annotations
 
@@ -17,7 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 __all__ = ["save_checkpoint", "restore_checkpoint", "latest_checkpoint",
-           "restore_resharded"]
+           "restore_resharded", "checkpoint_step"]
 
 _STEP_RE = re.compile(r"ckpt_(\d+)\.npz$")
 
@@ -36,6 +37,8 @@ def save_checkpoint(ckpt_dir: str, step: int, state: Any,
     try:
         with os.fdopen(fd, "wb") as f:
             np.savez(f, **flat)
+            f.flush()
+            os.fsync(f.fileno())                 # bytes down before the name
         final = os.path.join(ckpt_dir, f"ckpt_{step:010d}.npz")
         os.replace(tmp, final)                   # atomic
     finally:

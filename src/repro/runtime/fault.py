@@ -26,12 +26,18 @@ __all__ = ["FailureInjector", "run_with_restarts"]
 
 
 class FailureInjector:
-    """Raises RuntimeError at the given global steps (once each)."""
+    """Raises RuntimeError at the given fail points (once each).
+
+    Points are global step numbers in the ``run_with_restarts`` loop, or
+    string labels for the named engine lifecycle points
+    (``SearchEngine.crash_hook`` fires ``maybe_fail("wal_appended")``,
+    ``"compact_swap"``, ... — the crash drills of
+    ``tests/test_durability.py``)."""
 
     def __init__(self, fail_at=()):
         self.fail_at = set(fail_at)
 
-    def maybe_fail(self, step: int):
+    def maybe_fail(self, step):
         if step in self.fail_at:
             self.fail_at.discard(step)
             raise RuntimeError(f"injected failure at step {step}")

@@ -2,7 +2,8 @@
 PQ / IVF-PQ ANN indexes, the composable index-spec API (pipeline specs +
 the tagged index union + ops registry), the batched serving engine that
 integrates MPAD reduction, the streaming (mutable) layer on top of it,
-and snapshot persistence."""
+snapshot persistence, and the durability subsystem (write-ahead log,
+crash recovery, maintenance policy)."""
 from .knn import (knn_search, knn_search_blocked, masked_topk, recall_at_k,
                   amk_accuracy)
 from .ivf import (IVFIndex, balance_cells, build_ivf, cell_vectors,
@@ -20,7 +21,10 @@ from .serve import (EngineState, INDEX_KINDS, SearchEngine, ServeConfig,
                     config_from_spec, exact_rerank, search_fn,
                     sharded_search_fn)
 from .snapshot import load_engine, save_engine
-from .stream import StreamReplica, sharded_stream_search_fn, stream_search_fn
+from .stream import (StreamReplica, replica_from_store,
+                     sharded_stream_search_fn, stream_search_fn)
+from .durability import (Decision, DurabilityConfig, MaintenancePolicy,
+                         PolicyConfig, ReplayStats, Wal, WalError, replay)
 
 __all__ = [
     "knn_search", "knn_search_blocked", "masked_topk", "recall_at_k",
@@ -40,5 +44,9 @@ __all__ = [
     # streaming
     "StreamConfig", "StreamStore", "MutableEngineState", "FrozenParams",
     "make_mutable", "upsert_fn", "delete_fn", "compact_fn", "rebuild_state",
-    "StreamReplica", "stream_search_fn", "sharded_stream_search_fn",
+    "StreamReplica", "replica_from_store", "stream_search_fn",
+    "sharded_stream_search_fn",
+    # durability: WAL + crash recovery + maintenance policy
+    "DurabilityConfig", "Wal", "WalError", "replay", "ReplayStats",
+    "PolicyConfig", "MaintenancePolicy", "Decision",
 ]

@@ -1,0 +1,31 @@
+"""Durability subsystem: write-ahead log, crash recovery, maintenance
+policy.
+
+Three pieces wire through the engine lifecycle
+(``repro.search.serve.SearchEngine``):
+
+* ``wal`` — the CRC-framed, fsync-configurable, segment-rotated record
+  log every store mutation appends to *before* it runs
+  (``engine.durable(dir)`` opens it; ``engine.save`` marks + truncates).
+* ``recovery`` — ``load_engine`` replays the log tail on top of the
+  newest durable snapshot through the engine's own write programs:
+  recovered == never-crashed, record for record.
+* ``policy`` — ``MaintenancePolicy`` watches tombstone density, delta
+  fill, capacity headroom, and PQ encode-error drift, and decides
+  between compact / vacuum / grow / quantizer rebuild; decisions are
+  WAL records too, so recovery replays maintenance deterministically.
+"""
+from .policy import Decision, MaintenancePolicy, PolicyConfig
+from .recovery import ReplayStats, replay
+from .wal import (DurabilityConfig, Wal, WalError, decode_delete,
+                  decode_policy, decode_upsert, encode_delete, encode_policy,
+                  encode_upsert, iter_records, wal_tail_seq)
+
+__all__ = [
+    "DurabilityConfig", "Wal", "WalError",
+    "iter_records", "wal_tail_seq",
+    "encode_upsert", "decode_upsert", "encode_delete", "decode_delete",
+    "encode_policy", "decode_policy",
+    "PolicyConfig", "MaintenancePolicy", "Decision",
+    "ReplayStats", "replay",
+]

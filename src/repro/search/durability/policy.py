@@ -1,0 +1,178 @@
+"""Maintenance policy: when to compact, vacuum, grow, or retrain.
+
+A streaming engine degrades along three axes the write path itself never
+fixes:
+
+* **tombstone density** — deletes/overwrites mask base rows out of the
+  scan but never reclaim them; the masked scan pays for dead rows
+  forever. ``decide_delete`` routes dense-enough bitmaps into a
+  **vacuum** (fold + rewrite the base over the survivors, frozen
+  quantizers — no retraining).
+* **capacity pressure** — compaction appends into pre-allocated slack;
+  when the headroom left is less than a delta's worth, the next fold
+  will overflow and pay the reactive grow+recompile mid-write.
+  ``decide_post_compact`` can grow proactively instead (off by default:
+  ``grow_headroom=0``).
+* **quantizer drift** — the PQ codebooks are frozen at build time; as
+  the live distribution drifts, the squared reconstruction error of
+  newly folded rows rises above the build-time baseline and coded-scan
+  ranking quality decays silently. ``MaintenancePolicy`` tracks both
+  errors (per-kind ``IndexOps.drift_stats``), compares their ratio
+  against ``drift_ratio``, and — only when the drift also clears the
+  LUT quantization noise floor (``repro.kernels.pq_adc.lut
+  .lut_error_bound``; drift below what the int8/bf16 LUT grid can even
+  express is not actionable) — advises or (``auto_rebuild=True``)
+  triggers a full quantizer rebuild through the ordinary build path.
+
+Decisions are *data*, not actions: the engine executes them and logs
+them to the WAL (``RT_POLICY``), so crash recovery replays maintenance
+deterministically instead of re-deriving it from drifted statistics.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+__all__ = ["PolicyConfig", "MaintenancePolicy", "Decision"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicyConfig:
+    """Maintenance thresholds (``StreamConfig.policy``)."""
+    tombstone_density: float = 0.25  # vacuum when dead/allocated exceeds
+    tombstone_min_dead: int = 64     # ... and at least this many are dead
+    delta_fill: Optional[float] = None   # auto-compact fill fraction;
+    #                                      None = StreamConfig
+    #                                      .compact_threshold
+    grow_headroom: float = 0.0       # grow the base after compaction when
+    #                                  free rows < headroom * delta
+    #                                  capacity (0 disables)
+    drift_ratio: float = 4.0         # rebuild when recent encode error
+    #                                  exceeds this multiple of the
+    #                                  build-time baseline
+    drift_min_rows: int = 256        # ... measured over at least this
+    #                                  many folded rows
+    auto_rebuild: bool = False       # False: surface "advise_rebuild" in
+    #                                  stats; True: rebuild through
+    #                                  build_engine automatically
+
+    def __post_init__(self):
+        if not (0.0 < self.tombstone_density <= 1.0):
+            raise ValueError("tombstone_density must be in (0, 1]")
+        if self.tombstone_min_dead < 1:
+            raise ValueError("tombstone_min_dead must be >= 1")
+        if self.delta_fill is not None and not (0.0 < self.delta_fill <= 1.0):
+            raise ValueError("delta_fill must be in (0, 1]")
+        if self.grow_headroom < 0:
+            raise ValueError("grow_headroom must be >= 0")
+        if self.drift_ratio <= 1.0:
+            raise ValueError("drift_ratio must be > 1")
+        if self.drift_min_rows < 1:
+            raise ValueError("drift_min_rows must be >= 1")
+
+
+@dataclasses.dataclass(frozen=True)
+class Decision:
+    """One maintenance verdict: what to do, why, and with what params."""
+    kind: str                        # "none" | "vacuum" | "grow" |
+    #                                  "rebuild" | "advise_rebuild"
+    reason: str = ""
+    params: dict = dataclasses.field(default_factory=dict)
+
+
+_NONE = Decision("none")
+
+
+class MaintenancePolicy:
+    """Stateful tracker + decider over one streaming engine's lifetime.
+
+    The engine feeds it observations (build-time baseline encode error,
+    per-compaction encode error of the folded delta rows, tombstone and
+    capacity counts at decision points); it returns ``Decision``s and
+    keeps per-kind counters for ``SearchEngine.stats()``.
+    """
+
+    def __init__(self, config: Optional[PolicyConfig] = None):
+        self.config = config or PolicyConfig()
+        self.base_error: Optional[float] = None
+        self.recent_error: Optional[float] = None
+        self.recent_rows = 0
+        self.decisions: dict = {}
+
+    # --- observations ----------------------------------------------------
+
+    def observe_build_error(self, err: float):
+        """(Re)base the drift reference: mean squared reconstruction
+        error of the build-time rows under the (re)trained quantizers."""
+        self.base_error = float(err)
+        self.recent_error = None
+        self.recent_rows = 0
+
+    def observe_encode_error(self, err: float, n_rows: int):
+        """Fold one compaction's mean encode error into the recent
+        estimate (exponential blend so old batches age out)."""
+        if n_rows <= 0:
+            return
+        err = float(err)
+        if self.recent_error is None:
+            self.recent_error = err
+        else:
+            self.recent_error = 0.5 * (self.recent_error + err)
+        self.recent_rows += int(n_rows)
+
+    def drift_ratio(self) -> Optional[float]:
+        """recent/base encode-error ratio; None until both observed."""
+        if (self.base_error is None or self.recent_error is None
+                or self.base_error <= 0.0):
+            return None
+        return self.recent_error / self.base_error
+
+    # --- decision points --------------------------------------------------
+
+    def _emit(self, decision: Decision) -> Decision:
+        if decision.kind != "none":
+            self.decisions[decision.kind] = (
+                self.decisions.get(decision.kind, 0) + 1)
+        return decision
+
+    def decide_delete(self, *, dead: int, allocated: int) -> Decision:
+        """After a delete batch: vacuum when the tombstone bitmap is
+        dense enough that the masked base scan is mostly waste."""
+        c = self.config
+        if (allocated > 0 and dead >= c.tombstone_min_dead
+                and dead / allocated > c.tombstone_density):
+            return self._emit(Decision(
+                "vacuum",
+                f"tombstones {dead}/{allocated} exceed density "
+                f"{c.tombstone_density}"))
+        return _NONE
+
+    def decide_post_compact(self, *, free_rows: int, delta_capacity: int,
+                            noise_floor: float = 0.0) -> Decision:
+        """After a compaction: retrain on drift first (it re-provisions
+        capacity anyway), else grow proactively if headroom ran out."""
+        c = self.config
+        ratio = self.drift_ratio()
+        if (ratio is not None and self.recent_rows >= c.drift_min_rows
+                and ratio > c.drift_ratio
+                and (self.recent_error or 0.0) > float(noise_floor)):
+            kind = "rebuild" if c.auto_rebuild else "advise_rebuild"
+            return self._emit(Decision(
+                kind, f"encode-error drift {ratio:.2f}x over "
+                      f"{self.recent_rows} rows (threshold "
+                      f"{c.drift_ratio}x)"))
+        if c.grow_headroom > 0 and free_rows < c.grow_headroom * delta_capacity:
+            return self._emit(Decision(
+                "grow", f"free rows {free_rows} below headroom "
+                        f"{c.grow_headroom} x {delta_capacity}",
+                {"row_extra": 4 * delta_capacity,
+                 "cell_extra": delta_capacity}))
+        return _NONE
+
+    def stats(self) -> dict:
+        """Counters + drift state for ``SearchEngine.stats()``."""
+        return {"decisions": dict(self.decisions),
+                "base_error": self.base_error,
+                "recent_error": self.recent_error,
+                "recent_rows": self.recent_rows,
+                "drift_ratio": self.drift_ratio()}

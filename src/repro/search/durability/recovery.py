@@ -1,0 +1,74 @@
+"""Crash recovery: replay the WAL tail through the engine's write path.
+
+``load_engine`` restores the newest durable snapshot, then calls
+``replay`` to drive every record past the snapshot's ``wal_seq`` back
+through ``SearchEngine.upsert/delete/compact`` — the *same* donated-jit
+programs live traffic uses, so the recovered store is record-for-record
+identical to the uncrashed engine (the property
+``tests/test_durability.py`` pins at every kill point, against both the
+uncrashed oracle and ``rebuild_state``).
+
+Replay runs with the engine's ``_replaying`` flag up: WAL appends and
+policy auto-decisions are disabled (the log already contains both the
+writes and the maintenance decisions; re-deriving either would
+double-apply), and a ``RT_COMPACT`` barrier — logged when compaction
+*begins* — is redone to completion, so a crash mid-compaction recovers
+to the committed (post-swap) state.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from .wal import (RT_COMPACT, RT_DELETE, RT_POLICY, RT_SNAPSHOT, RT_UPSERT,
+                  decode_delete, decode_policy, decode_upsert, iter_records)
+
+__all__ = ["ReplayStats", "replay"]
+
+
+@dataclasses.dataclass
+class ReplayStats:
+    """What one recovery pass applied (``SearchEngine.stats()`` keeps
+    the record count as ``wal.replayed``)."""
+    records: int = 0
+    upserts: int = 0
+    deletes: int = 0
+    compactions: int = 0
+    policies: int = 0
+    rows: int = 0                    # upserted rows applied
+    last_seq: int = -1
+
+
+def replay(engine, wal_dir: str, after_seq: int = -1) -> ReplayStats:
+    """Apply every WAL record with ``seq > after_seq`` to ``engine``.
+
+    ``engine`` is a streaming ``SearchEngine`` restored from the
+    snapshot the log tail extends. Stops cleanly at a torn tail (the
+    crash artifact); raises ``WalError`` on mid-log corruption.
+    """
+    stats = ReplayStats(last_seq=after_seq)
+    engine._replaying = True
+    try:
+        for seq, rtype, payload in iter_records(wal_dir, after=after_seq):
+            if rtype == RT_UPSERT:
+                ids, vectors = decode_upsert(payload)
+                engine.upsert(ids, vectors)
+                stats.upserts += 1
+                stats.rows += int(ids.shape[0])
+            elif rtype == RT_DELETE:
+                engine.delete(decode_delete(payload))
+                stats.deletes += 1
+            elif rtype == RT_COMPACT:
+                engine.compact()
+                stats.compactions += 1
+            elif rtype == RT_POLICY:
+                engine._apply_policy_record(decode_policy(payload))
+                stats.policies += 1
+            elif rtype == RT_SNAPSHOT:
+                pass                 # marker only; truncation bookkeeping
+            else:
+                raise ValueError(f"unknown WAL record type {rtype}")
+            stats.records += 1
+            stats.last_seq = seq
+    finally:
+        engine._replaying = False
+    return stats

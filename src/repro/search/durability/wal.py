@@ -1,0 +1,320 @@
+"""Write-ahead log: CRC-framed, fsync-configurable, segment-rotated.
+
+The durable-streaming contract (see ``repro.search.serve.SearchEngine
+.durable``): every mutation of the ``StreamStore`` appends one record
+here *before* it touches the store, in mutation order — so the byte
+stream is a deterministic replay script. ``load_engine`` replays the
+tail (records past the snapshot's ``wal_seq``) through the engine's own
+write programs and arrives at a store record-for-record identical to the
+one that never crashed.
+
+Record framing (little-endian)::
+
+    [crc32 u32][payload_len u32][seq u64][rtype u8][payload ...]
+
+The CRC covers (payload_len, seq, rtype, payload). ``seq`` is a global
+monotonically increasing record number — segment files are named
+``wal-<firstseq>.log`` after the first record they hold, so truncating
+history older than a durable snapshot is unlinking whole files.
+
+Record types::
+
+    RT_UPSERT    ids + vectors of one engine write chunk
+    RT_DELETE    ids of one delete batch
+    RT_COMPACT   compaction barrier (logged when compaction BEGINS;
+                 replay redoes the fold, so a crash mid-compaction
+                 recovers to the completed-compaction state)
+    RT_SNAPSHOT  durable-snapshot mark (records at or before the seq in
+                 ``engine.json`` are dead weight and get truncated)
+    RT_POLICY    a MaintenancePolicy decision (JSON) — vacuum / grow /
+                 rebuild are replayed deterministically from the log
+
+Torn tails: a crash mid-append leaves a half frame (or a frame whose CRC
+fails) at the end of the *last* segment — readers stop there; resuming a
+writer truncates the torn bytes first. The same damage anywhere else is
+real corruption and raises ``WalError``.
+
+Fsync modes (``DurabilityConfig.fsync``): ``"always"`` fsyncs per
+record (strict durability), ``"batch"`` flushes per record to the OS
+and fsyncs at rotation/snapshot/close (crash-of-process safe, loses the
+page cache on power loss), ``"never"`` leaves flushing to the runtime
+(benchmark / bulk-load mode).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import struct
+import zlib
+from typing import Iterator, List, Optional, Tuple
+
+import numpy as np
+
+__all__ = ["DurabilityConfig", "Wal", "WalError",
+           "RT_UPSERT", "RT_DELETE", "RT_COMPACT", "RT_SNAPSHOT",
+           "RT_POLICY",
+           "encode_upsert", "decode_upsert", "encode_delete",
+           "decode_delete", "encode_policy", "decode_policy",
+           "iter_records", "wal_tail_seq"]
+
+RT_UPSERT = 1
+RT_DELETE = 2
+RT_COMPACT = 3
+RT_SNAPSHOT = 4
+RT_POLICY = 5
+
+_MAGIC = b"QPADWAL1"
+_HEAD = struct.Struct("<IQB")        # payload_len, seq, rtype (crc'd part)
+_CRC = struct.Struct("<I")
+_FRAME_MIN = _CRC.size + _HEAD.size
+_UPS_HDR = struct.Struct("<II")      # batch, dim
+
+_FSYNC_MODES = ("always", "batch", "never")
+
+
+class WalError(RuntimeError):
+    """Unrecoverable log damage: a bad frame *before* the tail of the
+    last segment (torn tails are expected and handled; this is not)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class DurabilityConfig:
+    """Write-ahead-log knobs (``SearchEngine.durable``)."""
+    fsync: str = "batch"             # "always" | "batch" | "never"
+    segment_bytes: int = 4 * 1024 * 1024   # rotate segments near this size
+
+    def __post_init__(self):
+        if self.fsync not in _FSYNC_MODES:
+            raise ValueError(
+                f"unknown fsync mode {self.fsync!r}; expected one of "
+                f"{_FSYNC_MODES}")
+        if self.segment_bytes < len(_MAGIC) + _FRAME_MIN:
+            raise ValueError("segment_bytes too small to hold one record")
+
+
+# --- record payload codecs ---------------------------------------------------
+
+def encode_upsert(ids, vectors) -> bytes:
+    """(B,) int32 ids + (B, D) f32 vectors -> one RT_UPSERT payload."""
+    ids = np.ascontiguousarray(ids, np.int32)
+    vectors = np.ascontiguousarray(vectors, np.float32)
+    b, d = vectors.shape
+    return (_UPS_HDR.pack(b, d) + ids.tobytes() + vectors.tobytes())
+
+
+def decode_upsert(payload: bytes):
+    """RT_UPSERT payload -> (ids (B,) int32, vectors (B, D) f32)."""
+    b, d = _UPS_HDR.unpack_from(payload)
+    off = _UPS_HDR.size
+    ids = np.frombuffer(payload, np.int32, count=b, offset=off)
+    vecs = np.frombuffer(payload, np.float32, count=b * d,
+                         offset=off + 4 * b).reshape(b, d)
+    return ids, vecs
+
+
+def encode_delete(ids) -> bytes:
+    """(B,) int32 ids -> one RT_DELETE payload."""
+    return np.ascontiguousarray(ids, np.int32).tobytes()
+
+
+def decode_delete(payload: bytes) -> np.ndarray:
+    """RT_DELETE payload -> (B,) int32 ids."""
+    return np.frombuffer(payload, np.int32)
+
+
+def encode_policy(decision: dict) -> bytes:
+    """A MaintenancePolicy decision -> one RT_POLICY payload (JSON)."""
+    return json.dumps(decision, sort_keys=True).encode()
+
+
+def decode_policy(payload: bytes) -> dict:
+    """RT_POLICY payload -> the decision dict."""
+    return json.loads(payload.decode())
+
+
+# --- segment reading ---------------------------------------------------------
+
+def _segment_first_seq(name: str) -> Optional[int]:
+    if not (name.startswith("wal-") and name.endswith(".log")):
+        return None
+    try:
+        return int(name[4:-4])
+    except ValueError:
+        return None
+
+
+def _list_segments(directory: str) -> List[Tuple[int, str]]:
+    if not os.path.isdir(directory):
+        return []
+    segs = []
+    for name in os.listdir(directory):
+        first = _segment_first_seq(name)
+        if first is not None:
+            segs.append((first, os.path.join(directory, name)))
+    return sorted(segs)
+
+
+def _read_segment(path: str, *, is_last: bool):
+    """Yield (seq, rtype, payload, end_offset) frames of one segment.
+
+    A bad/half frame ends iteration when ``is_last`` (torn tail, the
+    expected crash artifact) and raises ``WalError`` otherwise.
+    """
+    with open(path, "rb") as f:
+        data = f.read()
+    if data[:len(_MAGIC)] != _MAGIC:
+        raise WalError(f"bad segment magic in {path!r}")
+    off = len(_MAGIC)
+    while off < len(data):
+        frame_ok = False
+        if off + _FRAME_MIN <= len(data):
+            (crc,) = _CRC.unpack_from(data, off)
+            head = data[off + _CRC.size: off + _FRAME_MIN]
+            plen, seq, rtype = _HEAD.unpack(head)
+            end = off + _FRAME_MIN + plen
+            if end <= len(data):
+                payload = data[off + _FRAME_MIN: end]
+                frame_ok = zlib.crc32(head + payload) == crc
+        if not frame_ok:
+            if is_last:
+                return                      # torn tail: stop at last good
+            raise WalError(
+                f"corrupt WAL frame at {path!r}+{off} (not the log tail)")
+        yield seq, rtype, payload, end
+        off = end
+
+
+def iter_records(directory: str, after: int = -1
+                 ) -> Iterator[Tuple[int, int, bytes]]:
+    """Yield (seq, rtype, payload) for every record with ``seq > after``,
+    in order, across segments; stops cleanly at a torn tail."""
+    segs = _list_segments(directory)
+    for i, (first, path) in enumerate(segs):
+        nxt = segs[i + 1][0] if i + 1 < len(segs) else None
+        if nxt is not None and nxt - 1 <= after:
+            continue                        # fully covered by the snapshot
+        for seq, rtype, payload, _ in _read_segment(
+                path, is_last=(i == len(segs) - 1)):
+            if seq > after:
+                yield seq, rtype, payload
+
+
+def wal_tail_seq(directory: str) -> int:
+    """Seq of the last intact record on disk (-1 = empty/absent log)."""
+    last = -1
+    for seq, _, _ in iter_records(directory):
+        last = seq
+    return last
+
+
+# --- the writer --------------------------------------------------------------
+
+class Wal:
+    """Append-only writer over a directory of CRC-framed segments.
+
+    ``resume=True`` scans the existing log, truncates a torn tail, and
+    continues the sequence; the default refuses a non-empty directory
+    (recover through ``load_engine`` instead of silently forking
+    history). Counters (records/bytes/fsyncs/rotations) surface through
+    ``SearchEngine.stats()``.
+    """
+
+    def __init__(self, directory: str, config: DurabilityConfig = None, *,
+                 resume: bool = False):
+        self.directory = directory
+        self.config = config or DurabilityConfig()
+        self.counters = {"records": 0, "bytes": 0, "fsyncs": 0,
+                         "rotations": 0}
+        self.last_seq = -1
+        self._f = None
+        os.makedirs(directory, exist_ok=True)
+        segs = _list_segments(directory)
+        if segs and not resume:
+            raise RuntimeError(
+                f"WAL directory {directory!r} already holds segments; "
+                "re-open the engine with load_engine (which replays and "
+                "resumes) instead of starting a second history")
+        if segs:
+            self._resume(segs)
+        else:
+            self._open_segment(0)
+
+    def _resume(self, segs):
+        first, path = segs[-1]
+        end = len(_MAGIC)
+        for seq, _, _, off in _read_segment(path, is_last=True):
+            self.last_seq = seq
+            end = off
+        for f_seq, p in segs[:-1]:
+            for seq, _, _, _ in _read_segment(p, is_last=False):
+                self.last_seq = max(self.last_seq, seq)
+        if self.last_seq < 0 and len(segs) > 1:
+            self.last_seq = first - 1
+        self._f = open(path, "r+b")
+        self._f.truncate(end)               # drop the torn tail for good
+        self._f.seek(end)
+        self._path = path
+
+    def _open_segment(self, first_seq: int):
+        path = os.path.join(self.directory, f"wal-{first_seq:016d}.log")
+        self._f = open(path, "wb")
+        self._f.write(_MAGIC)
+        self._path = path
+
+    def _sync_file(self):
+        self._f.flush()
+        os.fsync(self._f.fileno())
+        self.counters["fsyncs"] += 1
+
+    def append(self, rtype: int, payload: bytes = b"") -> int:
+        """Append one record; returns its seq. Durability per the
+        configured fsync mode."""
+        if self._f is None:
+            raise RuntimeError("WAL is closed")
+        seq = self.last_seq + 1
+        head = _HEAD.pack(len(payload), seq, rtype)
+        frame = _CRC.pack(zlib.crc32(head + payload)) + head + payload
+        if (self._f.tell() + len(frame) > self.config.segment_bytes
+                and self._f.tell() > len(_MAGIC)):
+            self._sync_file()
+            self._f.close()
+            self._open_segment(seq)
+            self.counters["rotations"] += 1
+        self._f.write(frame)
+        if self.config.fsync == "always":
+            self._sync_file()
+        elif self.config.fsync == "batch":
+            self._f.flush()
+        self.last_seq = seq
+        self.counters["records"] += 1
+        self.counters["bytes"] += len(frame)
+        return seq
+
+    def sync(self):
+        """Force the appended records to disk (snapshot barrier)."""
+        if self._f is not None:
+            self._sync_file()
+
+    def truncate(self, upto_seq: int):
+        """Unlink segments whose every record has ``seq <= upto_seq``
+        (history covered by a durable snapshot). The open segment always
+        survives."""
+        segs = _list_segments(self.directory)
+        for i, (first, path) in enumerate(segs):
+            nxt = segs[i + 1][0] if i + 1 < len(segs) else None
+            if path != self._path and nxt is not None and nxt - 1 <= upto_seq:
+                os.unlink(path)
+
+    def close(self):
+        if self._f is not None:
+            if self.config.fsync != "never":
+                self._sync_file()
+            self._f.close()
+            self._f = None
+
+    def stats(self) -> dict:
+        """Counters + positions for ``SearchEngine.stats()``."""
+        return dict(self.counters, last_seq=self.last_seq,
+                    segments=len(_list_segments(self.directory)),
+                    fsync=self.config.fsync)

@@ -140,6 +140,11 @@ class IndexOps:
     payload_skeleton: Callable        # (leaf) -> payload-shaped tree of leaf
     #                                    placeholders (snapshot restore)
     quant_skeleton: Callable          # (leaf) -> frozen-quant-shaped tree
+    drift_stats: Optional[Callable] = None   # (frozen, rows) -> (B,) squared
+    #                                    reconstruction error of scan-space
+    #                                    rows under the frozen quantizers
+    #                                    (MaintenancePolicy drift signal;
+    #                                    None = kind is not quantized)
 
 
 _REGISTRY: dict = {}
@@ -202,6 +207,36 @@ def _encode_pq(codebooks, x):
 def _ivfpq_encode(centroids, codebooks, x):
     from .segments import ivfpq_encode
     return ivfpq_encode(centroids, codebooks, x)
+
+
+def _pq_decode(codebooks, codes):
+    """Reconstruct rows from PQ codes: (B, M) int32 -> (B, M*dsub) f32."""
+    m, kc, dsub = codebooks.shape
+    recon = jnp.take_along_axis(
+        codebooks[None], codes[:, :, None, None], axis=2)[:, :, 0, :]
+    return recon.reshape(codes.shape[0], m * dsub)
+
+
+# per-kind drift statistics (MaintenancePolicy): squared reconstruction
+# error of scan-space rows under the frozen quantizers — how much signal
+# the coded scan loses on *today's* data vs the build-time baseline
+
+def _ivf_drift_stats(frozen, rows):
+    assign = jnp.argmin(sq_dists(rows, frozen.centroids), axis=1)
+    return jnp.sum((rows - frozen.centroids[assign]) ** 2, axis=-1)
+
+
+def _pq_drift_stats(frozen, rows):
+    codes = _encode_pq(frozen.codebooks, rows)
+    return jnp.sum((rows - _pq_decode(frozen.codebooks, codes)) ** 2,
+                   axis=-1)
+
+
+def _ivfpq_drift_stats(frozen, rows):
+    assign, codes, _ = _ivfpq_encode(frozen.centroids, frozen.codebooks,
+                                     rows)
+    recon = frozen.centroids[assign] + _pq_decode(frozen.codebooks, codes)
+    return jnp.sum((rows - recon) ** 2, axis=-1)
 
 
 # --- flat: exact scan of the (reduced) vectors -------------------------------
@@ -359,7 +394,8 @@ register_index(IndexOps(
     stream_base_payload=_ivf_stream_base_payload,
     payload_skeleton=lambda leaf: IVFIndex(
         centroids=leaf, lists=leaf, vectors=leaf),
-    quant_skeleton=lambda leaf: leaf))
+    quant_skeleton=lambda leaf: leaf,
+    drift_stats=_ivf_drift_stats))
 
 
 # --- pq: product-quantized vectors, fused ADC scan ---------------------------
@@ -445,7 +481,8 @@ register_index(IndexOps(
     payload_skeleton=lambda leaf: PQIndex(
         codebooks=leaf, codes=leaf, lut_w=leaf, cbnorm=leaf),
     quant_skeleton=lambda leaf: PQQuant(
-        codebooks=leaf, lut_w=leaf, cbnorm=leaf)))
+        codebooks=leaf, lut_w=leaf, cbnorm=leaf),
+    drift_stats=_pq_drift_stats))
 
 
 # --- ivfpq: coarse quantizer + PQ-coded residuals ----------------------------
@@ -544,7 +581,8 @@ register_index(IndexOps(
         centroids=leaf, lists=leaf, codebooks=leaf, codes=leaf, bias=leaf,
         codes_cell=leaf, bias_cell=leaf, lut_w=leaf, cbnorm=leaf),
     quant_skeleton=lambda leaf: IVFPQQuant(
-        centroids=leaf, codebooks=leaf, lut_w=leaf, cbnorm=leaf)))
+        centroids=leaf, codebooks=leaf, lut_w=leaf, cbnorm=leaf),
+    drift_stats=_ivfpq_drift_stats))
 
 
 # derived from the registry: one register_index() call covers every scan /

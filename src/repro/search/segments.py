@@ -60,6 +60,7 @@ from typing import NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from .durability.policy import PolicyConfig
 from .ivf import sq_dists
 from .registry import Index, _pad_cells, _pad_rows, get_ops
 
@@ -83,6 +84,13 @@ class StreamConfig:
     #                                      delta_capacity
     write_bucket: int = 64           # min padded write-batch size; ragged
     #                                  batches round up to powers of two
+    background_compact: bool = False     # double-buffered compaction: fold
+    #                                      a copy off-thread while searches
+    #                                      keep serving the old store, then
+    #                                      swap atomically
+    policy: Optional[PolicyConfig] = None    # maintenance thresholds
+    #                                          (tombstone density, drift,
+    #                                          headroom); None = defaults
 
     def __post_init__(self):
         if self.delta_capacity < 1:
@@ -93,6 +101,11 @@ class StreamConfig:
             raise ValueError("cell_slack must be >= 1")
         if self.write_bucket < 1:
             raise ValueError("write_bucket must be >= 1")
+        if self.policy is not None and not isinstance(self.policy,
+                                                      PolicyConfig):
+            raise TypeError(
+                "StreamConfig.policy must be a "
+                "repro.search.durability.PolicyConfig (or None)")
 
 
 class FrozenParams(NamedTuple):

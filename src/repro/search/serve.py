@@ -91,6 +91,18 @@ that store — no recompiles per write — and ``search`` routes through
 ``repro.search.stream.stream_search_fn`` (or its sharded twin: base
 sharded, delta/tombstones replicated).
 
+Durability & maintenance (``repro.search.durability``):
+``engine.durable(dir)`` opens a write-ahead log that every mutation
+appends to before it runs, so ``load_engine(dir)`` replays the tail on
+top of the newest snapshot and recovers the exact pre-crash store;
+``StreamConfig(background_compact=True)`` double-buffers compaction
+(searches keep serving the old store until the atomic swap); a
+``MaintenancePolicy`` (``StreamConfig(policy=PolicyConfig(...))``)
+watches tombstone density, capacity headroom, and quantizer drift and
+triggers ``vacuum``/grow/``rebuild_quantizers`` — every decision logged
+to the WAL for deterministic replay. ``engine.stats()`` surfaces the
+counters.
+
 Index kinds (``IndexSpec.kind`` / ``ServeConfig.index``):
 
   "flat"   exact scan of the (reduced) vectors
@@ -107,15 +119,19 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import os
 from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import MPADConfig, MPADResult, fit_mpad
 from repro.kernels.pq_adc.lut import LUT_DTYPES
+from .durability.wal import (RT_COMPACT, RT_DELETE, RT_POLICY, RT_UPSERT,
+                             encode_delete, encode_policy, encode_upsert)
 from .registry import INDEX_KINDS, Index, ScanParams, get_ops
 from .segments import StreamConfig
 from .spec import IndexSpec, parse_spec, spec_from_config
@@ -515,9 +531,35 @@ class SearchEngine:
         #                              each one is a recompile point)
         self._delta_used = 0         # conservative host mirror of the delta
         #                              fill (overwrites counted as appends)
+        # durability + maintenance (repro.search.durability)
+        self.crash_hook = None       # optional callable(point_name) fired at
+        #                              named lifecycle points ("wal_appended",
+        #                              "compact_begin", "compact_task",
+        #                              "compact_swap", "compact_done",
+        #                              "vacuum", "rebuild") — plug
+        #                              FailureInjector.maybe_fail in for
+        #                              crash drills, or block in it to
+        #                              schedule background compaction
+        self._replaying = False      # WAL replay in flight: appends and
+        #                              policy auto-decisions disabled
+        self._wal = None             # durability.wal.Wal once durable()
+        self._durability = None      # its DurabilityConfig
+        self._durable_dir = None     # snapshot+wal directory
+        self._replayed = 0           # records applied by recovery
+        self._policy = None          # MaintenancePolicy (streaming engines)
+        self._policy_active = False  # auto-decisions only when the user
+        #                              configured StreamConfig.policy
+        self._compact_future = None  # pending background compaction
+        self._compact_executor = None
+        self._compact_tail = []      # writes logged during the pending
+        #                              compaction, re-applied at the swap
+        self._tail_rows = 0
+        self._counters = {"compactions": 0, "swaps": 0, "vacuums": 0,
+                          "rebuilds": 0, "policy_grows": 0}
         if store is not None:        # restored mid-delta snapshot
             self._delta_used = int(store.delta_count)
             self._stream_programs()
+            self._stream_policy_init()
         elif config.stream is not None:
             self._init_stream()
 
@@ -627,6 +669,27 @@ class SearchEngine:
                 leaf.delete()
         self.state = None
         self._stream_programs()
+        self._stream_policy_init()
+
+    def _stream_policy_init(self):
+        """Create the MaintenancePolicy and (when the user configured one)
+        seed its drift baseline: mean encode error of a sample of the base
+        rows under the freshly trained frozen quantizers."""
+        from .durability.policy import MaintenancePolicy
+        scfg = self.config.stream
+        self._policy = MaintenancePolicy(scfg.policy)
+        self._policy_active = scfg.policy is not None
+        if not self._policy_active:
+            return
+        ops = get_ops(self.config.index)
+        n = int(self.store.n_rows)
+        if ops.drift_stats is None or n == 0:
+            return
+        from .segments import _project
+        rows = self.store.corpus[:min(n, 1024)]
+        err = ops.drift_stats(self.frozen,
+                              _project(self.frozen.proj, rows))
+        self._policy.observe_build_error(float(jnp.mean(err)))
 
     def _stream_programs(self):
         """Jit the streaming read/write programs (fresh closures: per-engine
@@ -659,52 +722,168 @@ class SearchEngine:
             _engine_stream_sharded,
             static_argnames=_SEARCH_STATICS + ("mesh", "axis"))
 
+    def _crash(self, point: str):
+        if self.crash_hook is not None:
+            self.crash_hook(point)
+
+    def _wal_append(self, rtype: int, payload: bytes = b""):
+        """Log one record *before* the mutation it describes (no-op when
+        the engine is not durable or is replaying its own log)."""
+        if self._wal is None or self._replaying:
+            return
+        self._wal.append(rtype, payload)
+        self._crash("wal_appended")
+
+    def _pad_write(self, ids, vectors=None):
+        """Pad a write batch up to its ``write_bucket`` bucket (-1 id
+        pads are no-ops in the write programs)."""
+        ids = jnp.asarray(ids, jnp.int32).reshape(-1)
+        n = ids.shape[0]
+        bucket = _bucket(n, self.config.stream.write_bucket)
+        if bucket != n:
+            ids = jnp.pad(ids, (0, bucket - n), constant_values=-1)
+        if vectors is None:
+            return ids, None
+        vectors = jnp.asarray(vectors, jnp.float32).reshape(n, -1)
+        if bucket != n:
+            vectors = jnp.pad(vectors, ((0, bucket - n), (0, 0)))
+        return ids, vectors
+
+    def _compact_point(self) -> int:
+        """Delta fill (rows) that triggers auto-compaction."""
+        scfg = self.config.stream
+        fill = scfg.compact_threshold
+        if self._policy is not None and self._policy.config.delta_fill:
+            fill = self._policy.config.delta_fill
+        return max(1, min(scfg.delta_capacity,
+                          int(fill * scfg.delta_capacity)))
+
+    def _ensure_delta_room(self, chunk: int, cap: int, point: int):
+        """Pre-write maintenance: compact (blocking or double-buffered)
+        so the next ``chunk`` delta rows fit."""
+        if self._compact_future is not None:
+            if (self._delta_used + chunk > cap
+                    or self._tail_rows + chunk > point):
+                self.finish_compact()
+            else:
+                return      # the pending fold reclaims the delta at the swap
+        if self._delta_used + chunk > point:
+            if (self._compact_future is None
+                    and self.config.stream.background_compact
+                    and self._delta_used + chunk <= cap):
+                self.begin_compact()
+            else:
+                self.compact()
+
     def upsert(self, ids: jax.Array, vectors: jax.Array):
         """Insert or overwrite rows by external id (ids (B,), vectors
         (B, D)). Pure in-place delta appends — no recompilation (batches
         pad to ``StreamConfig.write_bucket``-floored power-of-two buckets)
         and no index rebuild; the delta auto-compacts into the base at
-        ``compact_threshold``. Returns ``self``.
+        ``compact_threshold`` (double-buffered off-thread under
+        ``StreamConfig(background_compact=True)``). On a durable engine
+        each chunk is WAL-logged before it lands. Returns ``self``.
         """
         self._require_stream()
-        scfg = self.config.stream
-        ids = jnp.asarray(ids, jnp.int32).reshape(-1)
-        vectors = jnp.asarray(vectors, jnp.float32).reshape(ids.shape[0], -1)
-        cap = scfg.delta_capacity
-        point = max(1, min(cap, int(scfg.compact_threshold * cap)))
+        self._poll_compaction()
+        ids = np.asarray(ids, np.int32).reshape(-1)
+        vectors = np.asarray(vectors, np.float32).reshape(ids.shape[0], -1)
+        cap = self.config.stream.delta_capacity
+        point = self._compact_point()
         b = 0
         while b < ids.shape[0]:
             chunk = min(ids.shape[0] - b, point)
-            if self._delta_used + chunk > point:
-                self.compact()
+            if not self._replaying:
+                self._ensure_delta_room(chunk, cap, point)
             cid, cv = ids[b:b + chunk], vectors[b:b + chunk]
-            bucket = _bucket(chunk, scfg.write_bucket)
-            if bucket != chunk:
-                cid = jnp.pad(cid, (0, bucket - chunk), constant_values=-1)
-                cv = jnp.pad(cv, ((0, bucket - chunk), (0, 0)))
+            self._wal_append(RT_UPSERT, encode_upsert(cid, cv))
+            if self._compact_future is not None:
+                # the pending fold donated a pre-begin copy; replay this
+                # write onto the folded store at the swap
+                self._compact_tail.append(("upsert", cid.copy(), cv.copy()))
+                self._tail_rows += chunk
+            pid, pv = self._pad_write(cid, cv)
             # dropped stays 0 by construction (the chunking above never
             # exceeds the compact point), so it is not synced to host here
             self.store, _ = self._upsert_program(self.store, self.frozen,
-                                                 cid, cv)
+                                                 pid, pv)
             self._delta_used += chunk
             b += chunk
         return self
 
     def delete(self, ids: jax.Array):
         """Delete rows by external id: tombstone base copies, punch delta
-        holes. Absent ids are no-ops. Returns ``self``."""
+        holes. Absent ids are no-ops. WAL-logged on a durable engine;
+        with a configured ``StreamConfig.policy``, a dense-enough
+        tombstone bitmap triggers ``vacuum`` (the reclaim path deletes
+        alone never had). Returns ``self``."""
         self._require_stream()
-        ids = jnp.asarray(ids, jnp.int32).reshape(-1)
-        bucket = _bucket(ids.shape[0], self.config.stream.write_bucket)
-        if bucket != ids.shape[0]:
-            ids = jnp.pad(ids, (0, bucket - ids.shape[0]),
-                          constant_values=-1)
-        self.store = self._delete_program(self.store, ids)
+        self._poll_compaction()
+        ids = np.asarray(ids, np.int32).reshape(-1)
+        self._wal_append(RT_DELETE, encode_delete(ids))
+        if self._compact_future is not None:
+            self._compact_tail.append(("delete", ids.copy(), None))
+        pid, _ = self._pad_write(ids)
+        self.store = self._delete_program(self.store, pid)
+        if not self._replaying and self._policy_active:
+            dead = int(jnp.sum(self.store.dead))
+            decision = self._policy.decide_delete(
+                dead=dead, allocated=int(self.store.n_rows))
+            if decision.kind == "vacuum":
+                self.vacuum()
         return self
+
+    # --- compaction (blocking and double-buffered) ------------------------
+
+    def _run_compact(self, store):
+        """The fold + grow-retry loop over ``store`` (donated). Returns
+        (folded store, grows)."""
+        from .segments import grow_store
+        scfg = self.config.stream
+        store, dropped = self._compact_program(store, self.frozen)
+        grows = 0
+        while int(dropped):
+            # one delta's worth of cell slack covers the worst case (every
+            # delta row landing in one cell), so a single grow suffices
+            store = grow_store(store,
+                               row_extra=4 * scfg.delta_capacity,
+                               cell_extra=scfg.delta_capacity)
+            grows += 1
+            store, dropped = self._compact_program(store, self.frozen)
+        return store, grows
+
+    def _compact_task(self, store):
+        self._crash("compact_task")
+        return self._run_compact(store)
+
+    def _install_compacted(self, store, grows, tail, tail_rows):
+        """Re-apply the tail writes recorded during the fold, then swap
+        the folded store in atomically (a single reference assignment —
+        searches observe the old store or the new one, never a mix)."""
+        for kind, tids, tvecs in tail:
+            pid, pv = self._pad_write(tids, tvecs)
+            if kind == "upsert":
+                store, _ = self._upsert_program(store, self.frozen, pid, pv)
+            else:
+                store = self._delete_program(store, pid)
+        self._crash("compact_swap")
+        self.store = store
+        self._delta_used = tail_rows
+        self.grow_count += grows
+        self._counters["compactions"] += 1
+        self._counters["swaps"] += 1
+        if self._stream_sharded_base is not None:
+            self._shard_stream_base()        # re-lay the (grown) base out
+        self._crash("compact_done")
+        if not self._replaying:
+            self._post_compact_maintenance()
 
     def compact(self):
         """Fold the delta segment into the base index (re-coding against
-        the frozen quantizers — shapes and compiled programs survive).
+        the frozen quantizers — shapes and compiled programs survive),
+        blocking until the swap. A pending ``begin_compact`` is finished
+        first. On a durable engine the COMPACT barrier is logged before
+        the fold, so recovery redoes an interrupted compaction.
 
         If the append would overflow the pre-allocated row capacity or a
         posting cell's slack, the store grows host-side and the compaction
@@ -713,22 +892,268 @@ class SearchEngine:
         Returns ``self``.
         """
         self._require_stream()
-        from .segments import grow_store
-        scfg = self.config.stream
-        store, dropped = self._compact_program(self.store, self.frozen)
-        while int(dropped):
-            # one delta's worth of cell slack covers the worst case (every
-            # delta row landing in one cell), so a single grow suffices
-            store = grow_store(store,
-                               row_extra=4 * scfg.delta_capacity,
-                               cell_extra=scfg.delta_capacity)
-            self.grow_count += 1
-            store, dropped = self._compact_program(store, self.frozen)
-        self.store = store
-        self._delta_used = 0
-        if self._stream_sharded_base is not None:
-            self._shard_stream_base()        # re-lay the (grown) base out
+        if self._compact_future is not None:
+            self.finish_compact()
+        self._observe_drift()
+        self._wal_append(RT_COMPACT)
+        self._crash("compact_begin")
+        store, grows = self._run_compact(self.store)
+        self._install_compacted(store, grows, (), 0)
         return self
+
+    def begin_compact(self):
+        """Start a double-buffered compaction: fold a *copy* of the store
+        on a worker thread while searches (and further writes) keep
+        serving the live store; ``finish_compact`` (or the automatic poll
+        at the next search/write once the fold is done) re-applies the
+        writes that landed meanwhile and swaps atomically. No-op if a
+        compaction is already pending. Returns ``self``."""
+        self._require_stream()
+        if self._compact_future is not None:
+            return self
+        self._observe_drift()
+        self._wal_append(RT_COMPACT)
+        self._crash("compact_begin")
+        snapshot = jax.tree.map(jnp.array, self.store)   # the double buffer
+        self._compact_tail = []
+        self._tail_rows = 0
+        if self._compact_executor is None:
+            from concurrent.futures import ThreadPoolExecutor
+            self._compact_executor = ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix="qpad-compact")
+        self._compact_future = self._compact_executor.submit(
+            self._compact_task, snapshot)
+        return self
+
+    def finish_compact(self):
+        """Complete a pending ``begin_compact``: wait for the fold,
+        re-apply the tail writes, swap. No-op without one. Returns
+        ``self``."""
+        self._require_stream()
+        fut = self._compact_future
+        if fut is None:
+            return self
+        try:
+            store, grows = fut.result()
+        finally:
+            self._compact_future = None
+        tail, self._compact_tail = self._compact_tail, []
+        rows, self._tail_rows = self._tail_rows, 0
+        self._install_compacted(store, grows, tail, rows)
+        return self
+
+    def _poll_compaction(self):
+        """Swap in a background compaction that has finished folding —
+        called at every search/write entry, so the swap needs no timer."""
+        fut = self._compact_future
+        if fut is not None and fut.done():
+            self.finish_compact()
+
+    # --- maintenance policy ----------------------------------------------
+
+    def _lut_noise_floor(self) -> float:
+        """The smallest drift worth acting on: below the LUT
+        quantization error bound the coded scan could not express the
+        difference anyway."""
+        cb = self.frozen.cbnorm if self.frozen is not None else None
+        if cb is None or self.config.index not in ("pq", "ivfpq"):
+            return 0.0
+        from repro.kernels.pq_adc.lut import lut_error_bound
+        return float(lut_error_bound(cb[None], self.config.lut_dtype)[0])
+
+    def _observe_drift(self):
+        """Feed the encode error of the delta rows about to be folded
+        into the policy's drift estimate."""
+        if not self._policy_active or self._replaying:
+            return
+        ops = get_ops(self.config.index)
+        if ops.drift_stats is None:
+            return
+        store = self.store
+        rows = (store.delta_reduced if store.delta_reduced is not None
+                else store.delta_vectors)
+        cap = store.delta_ids.shape[0]
+        alive = (jnp.arange(cap) < store.delta_count) & (store.delta_ids >= 0)
+        n = int(jnp.sum(alive))
+        if n == 0:
+            return
+        err = ops.drift_stats(self.frozen, rows)
+        self._policy.observe_encode_error(
+            float(jnp.sum(jnp.where(alive, err, 0.0))) / n, n)
+
+    def _post_compact_maintenance(self):
+        """Run the post-compaction policy decision (grow / rebuild)."""
+        if not self._policy_active:
+            return
+        scfg = self.config.stream
+        free = int(self.store.corpus.shape[0]) - int(self.store.n_rows)
+        decision = self._policy.decide_post_compact(
+            free_rows=free, delta_capacity=scfg.delta_capacity,
+            noise_floor=self._lut_noise_floor())
+        if decision.kind == "grow":
+            from .segments import grow_store
+            self._wal_append(RT_POLICY, encode_policy(
+                {"decision": "grow", **decision.params}))
+            self.store = grow_store(self.store, **decision.params)
+            self._counters["policy_grows"] += 1
+            if self._stream_sharded_base is not None:
+                self._shard_stream_base()
+        elif decision.kind == "rebuild":
+            self.rebuild_quantizers()
+
+    def _gather_live(self):
+        """Host-side gather of every live row (base survivors in row
+        order, then live delta rows in slot order — a deterministic
+        order, so WAL replay of vacuum/rebuild reproduces the store
+        exactly). Returns (vectors (L, D) f32, external ids (L,) i32)."""
+        store = self.store
+        row_ids = np.asarray(store.row_ids)
+        live = (row_ids >= 0) & ~np.asarray(store.dead)
+        cap = store.delta_ids.shape[0]
+        dids = np.asarray(store.delta_ids)
+        alive = (np.arange(cap) < int(store.delta_count)) & (dids >= 0)
+        vectors = np.concatenate([np.asarray(store.corpus)[live],
+                                  np.asarray(store.delta_vectors)[alive]])
+        ext = np.concatenate([row_ids[live], dids[alive]]).astype(np.int32)
+        return vectors, ext
+
+    def vacuum(self):
+        """Reclaim tombstoned rows: rewrite the base over the live rows
+        (delta folded in) against the FROZEN quantizers — no retraining.
+        The masked scan stops paying for dead rows; shapes shrink back to
+        ``StreamConfig`` capacities, so the write programs recompile once
+        (rare by construction: the tombstone-density policy gates it).
+        WAL-logged as a policy decision. Returns ``self``."""
+        self._require_stream()
+        if self._compact_future is not None:
+            self.finish_compact()
+        self._wal_append(RT_POLICY, encode_policy({"decision": "vacuum"}))
+        self._crash("vacuum")
+        self._do_vacuum()
+        return self
+
+    def _do_vacuum(self):
+        from .segments import make_mutable, rebuild_state
+        vectors, ext = self._gather_live()
+        state = rebuild_state(self.frozen, vectors)
+        store, frozen = make_mutable(state, self.config.stream)
+        store = store._replace(row_ids=store.row_ids.at[:len(ext)].set(
+            jnp.asarray(ext)))
+        self.store, self.frozen = store, frozen
+        self._delta_used = 0
+        self._counters["vacuums"] += 1
+        if self._stream_sharded_base is not None:
+            self._shard_stream_base()
+
+    def rebuild_quantizers(self, seed: Optional[int] = None):
+        """Full quantizer retrain over the live rows through the ordinary
+        build path (new MPAD fit + index train, fresh drift baseline),
+        keeping external ids. The drift-policy escape hatch for when the
+        frozen quantizers no longer fit the data; every compiled program
+        re-keys (new constants), so this is the expensive, rare op the
+        whole streaming design exists to avoid needing often. WAL-logged
+        with its seed for deterministic replay. Returns ``self``."""
+        self._require_stream()
+        if self._compact_future is not None:
+            self.finish_compact()
+        if seed is None:
+            seed = self.config.seed + 1 + self._counters["rebuilds"]
+        self._wal_append(RT_POLICY, encode_policy(
+            {"decision": "rebuild", "seed": int(seed)}))
+        self._crash("rebuild")
+        self._do_rebuild(int(seed))
+        return self
+
+    def _do_rebuild(self, seed: int):
+        vectors, ext = self._gather_live()
+        cfg = dataclasses.replace(self.config, seed=seed)
+        fresh = SearchEngine(vectors, cfg)
+        store = fresh.store._replace(
+            row_ids=fresh.store.row_ids.at[:len(ext)].set(jnp.asarray(ext)))
+        decisions = self._policy.decisions if self._policy else {}
+        self.config = cfg
+        self.store, self.frozen = store, fresh.frozen
+        self.reducer = fresh.reducer
+        self._policy = fresh._policy         # fresh drift baseline
+        if self._policy is not None:
+            self._policy.decisions = decisions
+        self._delta_used = 0
+        self._counters["rebuilds"] += 1
+        self._stream_programs()              # new constants: re-key caches
+        if self._stream_sharded_base is not None:
+            self._shard_stream_base()
+
+    def _apply_policy_record(self, decision: dict):
+        """Replay one RT_POLICY record (recovery path)."""
+        kind = decision.get("decision")
+        if kind == "vacuum":
+            self._do_vacuum()
+        elif kind == "grow":
+            from .segments import grow_store
+            self.store = grow_store(
+                self.store, row_extra=int(decision["row_extra"]),
+                cell_extra=int(decision["cell_extra"]))
+            self._counters["policy_grows"] += 1
+        elif kind == "rebuild":
+            self._do_rebuild(int(decision["seed"]))
+        else:
+            raise ValueError(f"unknown policy decision {decision!r}")
+
+    # --- durability -------------------------------------------------------
+
+    def durable(self, directory: str, config=None):
+        """Make this streaming engine durable: open a write-ahead log
+        under ``directory`` and take the initial durable snapshot there.
+        From here on every ``upsert``/``delete``/``compact``/policy
+        decision is logged *before* it mutates the store, ``save()`` to
+        the same directory marks + truncates the log, and
+        ``load_engine(directory)`` recovers the exact live store after a
+        crash (snapshot + WAL-tail replay). ``config`` is a
+        ``repro.search.durability.DurabilityConfig`` (fsync mode, segment
+        size). Returns ``self``."""
+        from .durability.wal import DurabilityConfig, Wal
+        self._require_stream()
+        if self._wal is not None:
+            raise RuntimeError(
+                "this engine is already durable; one WAL per engine "
+                f"(directory {self._durable_dir!r})")
+        config = config or DurabilityConfig()
+        os.makedirs(directory, exist_ok=True)
+        self._wal = Wal(os.path.join(directory, "wal"), config)
+        self._durability = config
+        self._durable_dir = os.path.abspath(directory)
+        self.save(directory)                 # the initial durable snapshot
+        return self
+
+    def stats(self) -> dict:
+        """Durability / maintenance / serving counters, one dict: stream
+        fill and tombstones, compaction+swap+vacuum+rebuild counts,
+        policy decisions and drift state, WAL records/bytes/fsyncs and
+        replay count. The public window benches and tests use instead of
+        poking private fields."""
+        s = {"index": self.config.index,
+             "streaming": self.store is not None,
+             "sharded": (self.sharded_state is not None
+                         or self._stream_sharded_base is not None),
+             "compile_count": self.compile_count}
+        if self.store is not None:
+            store = self.store
+            s["stream"] = {
+                "n_rows": int(store.n_rows),
+                "row_capacity": int(store.corpus.shape[0]),
+                "delta_used": self._delta_used,
+                "delta_count": int(store.delta_count),
+                "delta_capacity": int(store.delta_ids.shape[0]),
+                "tombstones": int(jnp.sum(store.dead)),
+                "grow_count": self.grow_count,
+                "compaction_pending": self._compact_future is not None,
+            }
+            s["maintenance"] = dict(self._counters)
+            if self._policy is not None:
+                s["policy"] = self._policy.stats()
+        if self._wal is not None:
+            s["wal"] = dict(self._wal.stats(), replayed=self._replayed)
+        return s
 
     def _shard_stream_base(self):
         from repro.parallel.engine import shard_stream
@@ -766,6 +1191,8 @@ class SearchEngine:
                 raise ValueError(
                     "donate=True is not supported on a streaming engine: "
                     "the dense StreamStore backs upsert/delete/compact")
+            if self._compact_future is not None:
+                self.finish_compact()    # lay out the post-fold base, once
             self._shard_stream_base()
             return self
         if self.state is None:
@@ -825,14 +1252,10 @@ class SearchEngine:
                   interpret=cfg.pq_interpret if coded else True,
                   lut_dtype=cfg.lut_dtype if coded else "f32")
         if self.store is not None:
+            self._poll_compaction()     # swap in a finished background fold
             if self._stream_sharded_base is not None:
-                from .stream import StreamReplica
-                repl = StreamReplica(
-                    row_ids=self.store.row_ids, dead=self.store.dead,
-                    delta_vectors=self.store.delta_vectors,
-                    delta_reduced=self.store.delta_reduced,
-                    delta_ids=self.store.delta_ids,
-                    delta_count=self.store.delta_count)
+                from .stream import replica_from_store
+                repl = replica_from_store(self.store)
                 d, ids = self._stream_sharded_program(
                     self._stream_sharded_base, repl, queries, k,
                     mesh=self._mesh, axis=self._shard_axis, **kw)

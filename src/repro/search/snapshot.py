@@ -22,6 +22,13 @@ device mesh: the dense leaves are placed through
 shard-agnostic npz files — the elastic-scaling primitive) and the engine
 is then partitioned with the usual layout pass (``shard``; read-only
 restores donate the transient dense copy, so there is no standing 2x).
+
+On a **durable** engine (``engine.durable(dir)``) the snapshot directory
+also holds the write-ahead log: ``save_engine`` commits crash-consistently
+(fresh checkpoint step -> fsync'd metadata replace -> WAL snapshot-mark +
+truncate) and ``load_engine`` replays the log tail on top of the restored
+store, so recovery lands on the exact pre-crash state (see
+``repro.search.durability``).
 """
 from __future__ import annotations
 
@@ -34,8 +41,11 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.runtime.checkpoint import (latest_checkpoint, restore_checkpoint,
-                                      restore_resharded, save_checkpoint)
+from repro.runtime.checkpoint import (checkpoint_step, latest_checkpoint,
+                                      restore_checkpoint, restore_resharded,
+                                      save_checkpoint)
+from .durability.policy import PolicyConfig
+from .durability.wal import RT_SNAPSHOT, DurabilityConfig, Wal
 from .registry import Index, get_ops
 from .segments import FrozenParams, StreamConfig, StreamStore
 from .serve import EngineState, SearchEngine, config_from_spec
@@ -113,6 +123,14 @@ def save_engine(engine: SearchEngine, directory: str) -> str:
     Returns the checkpoint path. Raises if the dense arrays are gone
     (``shard(donate=True)``) — snapshot before donating, or snapshot the
     streaming store, which always stays dense.
+
+    The write is **crash-consistent across the directory**: arrays land
+    under a fresh (incremented) checkpoint step, the metadata commits via
+    fsync'd temp-file + ``os.replace``, and only *after* that commit is
+    the engine's WAL (when this is its durable directory) marked with a
+    SNAPSHOT record and truncated up to the saved sequence — a crash at
+    any point leaves either the old snapshot + full log or the new
+    snapshot + tail, never a mix.
     """
     streaming = engine.store is not None
     if not streaming and engine.state is None:
@@ -120,6 +138,15 @@ def save_engine(engine: SearchEngine, directory: str) -> str:
             "nothing to save: the dense EngineState was released by "
             "shard(donate=True) — call save() before donating the dense "
             "buffers")
+    if streaming and engine._compact_future is not None:
+        engine.finish_compact()      # snapshot the post-swap store
+    wal = None
+    wal_seq = -1
+    if (engine._wal is not None
+            and os.path.abspath(directory) == engine._durable_dir):
+        wal = engine._wal
+        wal.sync()                   # everything the snapshot covers is on
+        wal_seq = wal.last_seq       # disk before the snapshot claims it
     cfg = engine.config
     spec = engine.spec
     flat_alias = False
@@ -137,6 +164,18 @@ def save_engine(engine: SearchEngine, directory: str) -> str:
             flat_alias = True
             state = state._replace(index=Index("flat", None))
         tree = {"state": state}
+    # fresh step per save: the metadata names its checkpoint, so a crash
+    # between the array write and the metadata commit leaves the previous
+    # (still-named, still-retained) snapshot fully intact
+    prev = latest_checkpoint(directory)
+    step = checkpoint_step(prev) + 1 if prev else 0
+    path = save_checkpoint(directory, step, tree)
+    if wal is not None:
+        # the mark is itself covered by wal_seq: a no-op on replay, so
+        # writing it before the metadata commit is safe either way the
+        # commit goes — and afterwards replay starts strictly past it
+        wal_seq = wal.append(RT_SNAPSHOT, str(wal_seq).encode())
+        wal.sync()
     meta = {
         "schema": _SCHEMA,
         "spec": format_spec(spec),
@@ -145,15 +184,23 @@ def save_engine(engine: SearchEngine, directory: str) -> str:
         "has_proj": has_proj,
         "flat_alias": flat_alias,
         "store_fields": store_fields,
+        "ckpt": os.path.basename(path),
         "runtime": {f: getattr(cfg, f) for f in _RUNTIME_FIELDS},
         "stream": (dataclasses.asdict(cfg.stream)
                    if cfg.stream is not None else None),
+        "wal_seq": wal_seq,
+        "durability": (dataclasses.asdict(engine._durability)
+                       if wal is not None else None),
     }
-    path = save_checkpoint(directory, 0, tree)
     tmp = os.path.join(directory, SNAPSHOT_META + ".tmp")
     with open(tmp, "w") as f:
         json.dump(meta, f, indent=2)
+        f.flush()
+        os.fsync(f.fileno())         # the commit point of the snapshot
     os.replace(tmp, os.path.join(directory, SNAPSHOT_META))
+    if wal is not None:
+        # snapshot durable: records at or before wal_seq are dead weight
+        wal.truncate(wal_seq)
     return path
 
 
@@ -183,9 +230,17 @@ def load_engine(directory: str, mesh: Optional[Mesh] = None,
     if meta.get("schema") != _SCHEMA:
         raise ValueError(
             f"unknown snapshot schema {meta.get('schema')!r} in {meta_path}")
-    path = latest_checkpoint(directory)
-    if path is None:
-        raise FileNotFoundError(f"no checkpoint file in {directory!r}")
+    if meta.get("ckpt"):
+        # the metadata names its checkpoint: immune to a stray newer
+        # array file whose metadata commit never happened (crash mid-save)
+        path = os.path.join(directory, meta["ckpt"])
+        if not os.path.isfile(path):
+            raise FileNotFoundError(
+                f"snapshot metadata names missing checkpoint {path!r}")
+    else:
+        path = latest_checkpoint(directory)
+        if path is None:
+            raise FileNotFoundError(f"no checkpoint file in {directory!r}")
     spec = parse_spec(meta["spec"])
     if "stream" in runtime_overrides:
         raise ValueError(
@@ -194,7 +249,10 @@ def load_engine(directory: str, mesh: Optional[Mesh] = None,
             "restore, then compact/rebuild to re-provision")
     runtime = dict(meta["runtime"])
     if meta["stream"] is not None:
-        runtime["stream"] = StreamConfig(**meta["stream"])
+        skw = dict(meta["stream"])
+        if skw.get("policy") is not None:
+            skw["policy"] = PolicyConfig(**skw["policy"])
+        runtime["stream"] = StreamConfig(**skw)
     runtime.update(runtime_overrides)
     config = config_from_spec(spec, **runtime)
     skeleton = _snapshot_skeleton(meta["kind"], meta["has_proj"],
@@ -217,6 +275,18 @@ def load_engine(directory: str, mesh: Optional[Mesh] = None,
         if meta["flat_alias"]:
             state = state._replace(index=Index("flat", state.corpus))
         engine = SearchEngine._restore(config, state=state)
+    if meta.get("durability") is not None:
+        # crash recovery: replay the WAL tail (records after the saved
+        # sequence) through the engine's own write programs, then resume
+        # appending to the same log — recovered == never-crashed
+        from .durability.recovery import replay
+        dcfg = DurabilityConfig(**meta["durability"])
+        wal_dir = os.path.join(directory, "wal")
+        stats = replay(engine, wal_dir, after_seq=meta.get("wal_seq", -1))
+        engine._replayed = stats.records
+        engine._wal = Wal(wal_dir, dcfg, resume=True)
+        engine._durability = dcfg
+        engine._durable_dir = os.path.abspath(directory)
     if mesh is not None:
         engine.shard(mesh, axis=axis,
                      donate=not meta["streaming"])

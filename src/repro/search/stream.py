@@ -51,7 +51,8 @@ from .segments import FrozenParams, StreamStore, live_mask
 from .serve import (ShardedEngineState, _check_rerank_budget,
                     _dedupe_candidates)
 
-__all__ = ["stream_search_fn", "sharded_stream_search_fn", "StreamReplica"]
+__all__ = ["stream_search_fn", "sharded_stream_search_fn", "StreamReplica",
+           "replica_from_store"]
 
 
 class StreamReplica(NamedTuple):
@@ -65,6 +66,17 @@ class StreamReplica(NamedTuple):
     delta_reduced: Optional[jax.Array]   # (cap, m)
     delta_ids: jax.Array                 # (cap,)
     delta_count: jax.Array               # ()
+
+
+def replica_from_store(store: StreamStore) -> StreamReplica:
+    """Project the write-hot replicated leaves out of a ``StreamStore``
+    (free: a view of the same buffers, fresh every call so the sharded
+    read path always serves the latest writes)."""
+    return StreamReplica(
+        row_ids=store.row_ids, dead=store.dead,
+        delta_vectors=store.delta_vectors,
+        delta_reduced=store.delta_reduced,
+        delta_ids=store.delta_ids, delta_count=store.delta_count)
 
 
 def _check_stream_backend(kind: str, backend: str):
