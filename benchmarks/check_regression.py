@@ -14,6 +14,13 @@ absolute limit as the serving row). The ``durability`` section gates the
 WAL write-path overhead within the fresh file (WAL-on upsert throughput
 no more than ``--max-wal-overhead`` below WAL-off, default 0.25).
 
+Two scan-path gates run within the fresh file (same machine, same run, so
+no baseline needed): the quantized-LUT rows must hold ``qps >=
+--min-lut-qps-ratio`` (default 0.95) of the f32 row, and the batch-64
+fused-vs-staged speedup must stay >= ``--min-b64-speedup`` (default 1.0 —
+the compact small-batch scan and re-rank pre-filter exist to keep it
+there).
+
 A missing gated row in the FRESH file is itself a failure (the bench
 silently lost coverage); a missing row in the BASELINE only warns, so the
 gate can be introduced onto older baselines without a flag day.
@@ -118,9 +125,69 @@ def check_durability(baseline: dict, fresh: dict,
     return failures, report
 
 
+def check_lut_parity(fresh: dict, min_ratio: float = 0.95):
+    """Gate quantized-LUT throughput against f32 — within the fresh file.
+
+    The narrow LUTs (bf16/int8) exist to make the ADC scan cheaper; a
+    regression where they fall behind the f32 path (as the pre-uint8
+    dequantize-then-gather refs did) defeats their purpose, so each
+    quantized batch-256 ivfpq row must hold ``qps >= min_ratio * f32
+    qps``. Same-machine, same-run rows: the ratio is hardware-independent
+    and needs no baseline.
+    """
+    failures, report = [], []
+    f32 = find_row(fresh, index="ivfpq", lut_dtype="f32", batch=256)
+    if f32 is None:
+        failures.append("fresh bench is missing the ivfpq f32 batch-256 "
+                        "row (lut-parity gate)")
+        return failures, report
+    for lut in ("bf16", "int8"):
+        row = find_row(fresh, index="ivfpq", lut_dtype=lut, batch=256)
+        if row is None:
+            failures.append(f"fresh bench is missing the ivfpq {lut} "
+                            "batch-256 row (lut-parity gate)")
+            continue
+        ratio = row["qps"] / f32["qps"] if f32["qps"] else 1.0
+        report.append(f"lut {lut:4s}: {row['qps']} qps vs f32 "
+                      f"{f32['qps']} ({ratio:.2f}x, floor {min_ratio})")
+        if ratio < min_ratio:
+            failures.append(
+                f"quantized-LUT slowdown: ivfpq {lut} runs {row['qps']} "
+                f"qps vs f32 {f32['qps']} ({ratio:.2f}x < {min_ratio}x)")
+    return failures, report
+
+
+def check_small_batch(baseline: dict, fresh: dict,
+                      min_b64_speedup: float = 1.0):
+    """Gate the small-batch scan path — within the fresh file.
+
+    The batch-64 fused-vs-staged speedup must stay >= ``min_b64_speedup``
+    (the nprobe-proportional compact scan + re-rank pre-filter exist to
+    fix the small-batch regression, so losing them must fail CI). The
+    ``batch_sweep`` section is lost-coverage-checked against the baseline
+    like the other sections.
+    """
+    failures, report = [], []
+    if baseline.get("batch_sweep") and not fresh.get("batch_sweep"):
+        failures.append("fresh bench is missing the batch_sweep section")
+    row = find_row(fresh, key="staged_vs_fused", index="ivfpq", batch=64)
+    if row is None:
+        failures.append("fresh bench is missing the batch-64 "
+                        "staged_vs_fused row (small-batch gate)")
+        return failures, report
+    report.append(f"b64 fused : {row['speedup']:.2f}x vs staged "
+                  f"(floor {min_b64_speedup}x)")
+    if row["speedup"] < min_b64_speedup:
+        failures.append(
+            f"small-batch regression: batch-64 fused-vs-staged speedup "
+            f"{row['speedup']:.2f}x < {min_b64_speedup}x")
+    return failures, report
+
+
 def check(baseline: dict, fresh: dict, max_qps_drop: float = 0.20,
           max_recall_drop: float = 0.02, max_ups_drop: float = 0.25,
-          max_wal_overhead: float = 0.25):
+          max_wal_overhead: float = 0.25, min_lut_ratio: float = 0.95,
+          min_b64_speedup: float = 1.0):
     """Returns (failures, report_lines); empty failures == gate passes."""
     failures, report = [], []
     sf, sr = check_stream(baseline, fresh, max_ups_drop, max_recall_drop)
@@ -129,6 +196,12 @@ def check(baseline: dict, fresh: dict, max_qps_drop: float = 0.20,
     df, dr = check_durability(baseline, fresh, max_wal_overhead)
     failures += df
     report += dr
+    lf, lr = check_lut_parity(fresh, min_lut_ratio)
+    failures += lf
+    report += lr
+    bf, br = check_small_batch(baseline, fresh, min_b64_speedup)
+    failures += bf
+    report += br
     base = find_row(baseline, **GATED)
     new = find_row(fresh, **GATED)
     sel = " ".join(f"{k}={v}" for k, v in GATED.items())
@@ -172,6 +245,12 @@ def main(argv=None) -> int:
                     help="max fractional upsert-throughput cost of the WAL "
                          "(WAL-on vs WAL-off, within the fresh file; "
                          "default 0.25)")
+    ap.add_argument("--min-lut-qps-ratio", type=float, default=0.95,
+                    help="min bf16/int8 QPS as a fraction of the f32 row "
+                         "(within the fresh file; default 0.95)")
+    ap.add_argument("--min-b64-speedup", type=float, default=1.0,
+                    help="min batch-64 fused-vs-staged speedup (within the "
+                         "fresh file; default 1.0)")
     args = ap.parse_args(argv)
     with open(args.baseline) as f:
         baseline = json.load(f)
@@ -179,7 +258,8 @@ def main(argv=None) -> int:
         fresh = json.load(f)
     failures, report = check(baseline, fresh, args.max_qps_drop,
                              args.max_recall_drop, args.max_ups_drop,
-                             args.max_wal_overhead)
+                             args.max_wal_overhead, args.min_lut_qps_ratio,
+                             args.min_b64_speedup)
     for line in report:
         print(line)
     if failures:

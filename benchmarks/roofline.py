@@ -15,6 +15,11 @@ known_trip_count — XLA's builtin cost_analysis counts them once).
 
 MODEL_FLOPS is the analytic 6·N·D (dense) / 6·N_active·D (MoE) GLOBAL
 count; utilization = MODEL_FLOPS / (dot_flops_per_dev * n_devices).
+
+``--adc [BENCH_serve.json]`` prints the serving-side roofline term
+instead: analytic bytes moved per query by the gathered ADC scan
+(candidate codes + LUT + base/ids/scores), uint8 vs int32 stored codes and
+padded vs compact gather width, from the bench's ``scan`` section.
 """
 from __future__ import annotations
 
@@ -27,7 +32,69 @@ PEAK_FLOPS = 197e12         # bf16 / chip
 HBM_BW = 819e9              # bytes/s / chip
 LINK_BW = 50e9              # bytes/s / ICI link
 
-__all__ = ["load_cells", "roofline_row", "main"]
+LUT_BYTES = {"f32": 4, "bf16": 2, "int8": 1}
+
+__all__ = ["load_cells", "roofline_row", "adc_scan_bytes", "adc_report",
+           "main"]
+
+
+def adc_scan_bytes(width: int, m: int, kc: int, code_bytes: int,
+                   lut_dtype: str = "f32") -> dict:
+    """Analytic bytes moved per query by the gathered ivfpq ADC scan.
+
+    ``width`` candidates each pull an M-byte-ish code row (``m *
+    code_bytes`` — the term the uint8 end-to-end path shrank 4x by never
+    materialising an int32 copy) plus a f32 base term and an id; the
+    per-query LUT (``m * kc`` entries at the quantized width) is written
+    once by the table build and read back by the gather; the scan emits
+    one f32 score per candidate. Deliberately an operand-level model (like
+    the HLO ``memory_term`` above): fusion-internal traffic excluded.
+    """
+    lut = m * kc * LUT_BYTES[lut_dtype] * 2     # build write + gather read
+    codes = width * m * code_bytes
+    base_ids = width * (4 + 4)
+    scores = width * 4
+    return {"lut_bytes": lut, "code_bytes": codes,
+            "base_id_bytes": base_ids, "score_bytes": scores,
+            "total_bytes": lut + codes + base_ids + scores}
+
+
+def adc_report(bench_json: str = "BENCH_serve.json"):
+    """Print per-query ADC-scan bytes for every (code width x gather
+    width x lut_dtype) corner, anchored on the bench's measured ``scan``
+    section. Returns the rows."""
+    with open(bench_json) as f:
+        doc = json.load(f)
+    scan = doc.get("scan")
+    cfg = doc.get("config", {})
+    if scan is None:
+        raise SystemExit(f"{bench_json} has no 'scan' section; regenerate "
+                         "with: python -m benchmarks.run --fast --json")
+    m, kc = cfg["pq_subspaces"], cfg["pq_centroids"]
+    padded = scan["padded_scan_width"]
+    compact = scan["compact_scan_cap"] or padded
+    stored = scan["code_dtype"]
+    rows = []
+    hdr = (f"{'scan':8s} {'codes':6s} {'lut':5s} {'width':>6s} "
+           f"{'code_B':>9s} {'lut_B':>8s} {'total_B':>9s} {'vs_worst':>8s}")
+    print(f"ADC scan bytes/query (m={m} kc={kc}, stored codes {stored}, "
+          f"nprobe={scan['nprobe']} max_cell={scan['max_cell']})")
+    print(hdr)
+    print("-" * len(hdr))
+    worst = None
+    for label, width in (("padded", padded), ("compact", compact)):
+        for code_name, cb in (("int32", 4), ("uint8", 1)):
+            for lut in ("f32", "bf16", "int8"):
+                r = adc_scan_bytes(width, m, kc, cb, lut)
+                r.update(scan=label, codes=code_name, lut_dtype=lut,
+                         width=width)
+                worst = worst or r["total_bytes"]
+                r["frac_of_worst"] = r["total_bytes"] / worst
+                rows.append(r)
+                print(f"{label:8s} {code_name:6s} {lut:5s} {width:6d} "
+                      f"{r['code_bytes']:9d} {r['lut_bytes']:8d} "
+                      f"{r['total_bytes']:9d} {r['frac_of_worst']:8.3f}")
+    return rows
 
 
 def load_cells(art_dir: str, mesh: str = "pod_16x16"):
@@ -94,7 +161,15 @@ def main():
     ap.add_argument("--artifacts", default="benchmarks/artifacts/dryrun")
     ap.add_argument("--mesh", default="pod_16x16")
     ap.add_argument("--out", default="benchmarks/artifacts/roofline.json")
+    ap.add_argument("--adc", nargs="?", const="BENCH_serve.json",
+                    default=None, metavar="BENCH_JSON",
+                    help="report per-query ADC-scan bytes (uint8 vs int32 "
+                         "codes, padded vs compact width) from the bench "
+                         "JSON's scan section instead of the dry-run grid")
     args = ap.parse_args()
+    if args.adc is not None:
+        adc_report(args.adc)
+        return
     summarize(args.artifacts, args.mesh, args.out)
 
 

@@ -53,6 +53,34 @@ def _pctl(ts, p):
     return ts[min(len(ts) - 1, int(round(p / 100 * (len(ts) - 1))))]
 
 
+def _timeit_interleaved(fns, reps=9, calls=1):
+    """Per-variant wall times (us) with the variants time-sliced
+    round-robin: every round times each variant once, in one process, so
+    machine-load drift hits all variants equally and the cross-variant
+    RATIOS the regression gates check stay trustworthy even when absolute
+    numbers wander (single-core CI boxes drift 20-30% between time
+    slices). ``fns`` is an ordered dict name -> nullary callable; every
+    variant is warmed once before any timing. Returns name -> us in ROUND
+    ORDER (same-index entries across variants are temporally adjacent, the
+    alignment paired-ratio estimators need; sort for percentiles).
+    ``calls`` > 1 times that many back-to-back invocations per turn and
+    records the per-call mean — the first call after a variant switch
+    runs with the other variant's working set still in cache, so
+    averaging a short burst keeps the interleaving fair to BOTH variants
+    instead of charging each one its neighbor's evictions. Callables may
+    be stateful (each is invoked exactly ``reps * calls + 1`` times)."""
+    for f in fns.values():
+        jax.block_until_ready(f())
+    ts = {name: [] for name in fns}
+    for _ in range(reps):
+        for name, f in fns.items():
+            t0 = time.perf_counter()
+            for _ in range(calls):
+                jax.block_until_ready(f())
+            ts[name].append((time.perf_counter() - t0) * 1e6 / calls)
+    return ts
+
+
 def bench_objective_backends(rows):
     """Table 3 (complexity): one objective eval, N=2048, n=64."""
     from repro.core.fast_objective import mu_b_fast_value_and_grad
@@ -235,12 +263,26 @@ def bench_serve_fused(rows, json_doc=None, fast=False):
                 ("ivf", "ivf256x8", ("f32",)),
                 ("pq", "pq16x256", ("f32", "bf16", "int8"))] + grid
     reps = 5 if fast else 9
-    doc_rows = []
+    doc_rows, sweep_rows = [], []
     for index, spec, luts in grid:
         eng = build_engine(corpus, spec)
+        # the bf16/int8-vs-f32 QPS ratio is a regression gate
+        # (check_regression.py), so the three LUT widths are timed
+        # interleaved — configs prebuilt so the timed call is search-only
+        cfgs = {lut: dataclasses.replace(eng.config, lut_dtype=lut)
+                for lut in luts}
+
+        def _lut_call(lut):
+            def go():
+                eng.config = cfgs[lut]
+                return eng.search(queries, k)
+            return go
+
+        ts_lut = _timeit_interleaved({lut: _lut_call(lut) for lut in luts},
+                                     reps=max(reps, 9), calls=2)
         for lut in luts:
-            eng.config = dataclasses.replace(eng.config, lut_dtype=lut)
-            ts = _timeit_dist(eng.search, queries, k, reps=reps)
+            eng.config = cfgs[lut]
+            ts = sorted(ts_lut[lut])
             p50, p95 = _pctl(ts, 50), _pctl(ts, 95)
             _, found = eng.search(queries, k)
             rec = float(recall_at_k(found, truth))
@@ -252,7 +294,47 @@ def bench_serve_fused(rows, json_doc=None, fast=False):
                                  p50_us=round(p50, 1), p95_us=round(p95, 1),
                                  us_per_query_p50=round(p50 / nq, 2),
                                  qps=round(qps), recall_at_10=round(rec, 4)))
+        # batch sweep: p50 latency across the traffic range {1, 8, 64, 256}.
+        # On the read-only ivfpq engine small buckets (<= compact_batch)
+        # take the nprobe-proportional compact scan whenever the posting-
+        # mass bound beats the padded width (bit-identical results, smaller
+        # program); the opt-in re-rank pre-filter (prefilter_batch) stays
+        # off here — on this corpus the PQ error bound is loose, so it
+        # admits nearly all candidates and costs more than it saves.
+        eng.config = dataclasses.replace(eng.config, lut_dtype=luts[0])
+        for b in (1, 8, 64, 256):
+            ts_b = _timeit_dist(eng.search, queries[:b], k, reps=reps)
+            p50_b = _pctl(ts_b, 50)
+            compact = (index == "ivfpq" and eng.last_bucket is not None
+                       and eng.last_bucket <= eng.config.compact_batch
+                       and eng._scan_cap(eng.config.nprobe) > 0)
+            rows.append((f"serve_sweep_{index}_b{b}", p50_b,
+                         f"us_per_q={p50_b / b:.1f} "
+                         f"qps={b / (p50_b * 1e-6):.0f} "
+                         f"compact={'Y' if compact else 'n'}"))
+            sweep_rows.append(dict(
+                index=index, lut_dtype=luts[0], batch=b,
+                p50_us=round(p50_b, 1),
+                us_per_query_p50=round(p50_b / b, 2),
+                qps=round(b / (p50_b * 1e-6)),
+                compact_scan=compact))
         if index == "ivfpq":
+            if json_doc is not None:
+                # scan-path metadata: what the compact scan + narrow codes
+                # buy per query (roofline.py turns these into bytes moved)
+                idxp = eng.state.index.payload
+                json_doc["scan"] = dict(
+                    index="ivfpq",
+                    code_dtype=str(idxp.codes.dtype),
+                    code_bytes_per_vector=(
+                        idxp.codes.dtype.itemsize * idxp.codes.shape[1]),
+                    nprobe=eng.config.nprobe,
+                    max_cell=int(idxp.lists.shape[1]),
+                    padded_scan_width=(eng.config.nprobe
+                                       * int(idxp.lists.shape[1])),
+                    compact_scan_cap=eng._scan_cap(eng.config.nprobe),
+                    compact_batch=eng.config.compact_batch,
+                    prefilter_batch=eng.config.prefilter_batch)
             # staged baseline: pre-PR pipeline = separate scan + re-rank
             # programs over the same index arrays
             idx = eng.state.index.payload        # the dense IVFPQIndex
@@ -266,14 +348,24 @@ def bench_serve_fused(rows, json_doc=None, fast=False):
 
             staged_rows = []
             for b in (64, nq):
-                ts_s = _timeit_dist(staged, queries[:b], k, reps=reps)
-                ts_f = _timeit_dist(eng.search, queries[:b], k, reps=reps)
-                p50_s, p50_f = _pctl(ts_s, 50), _pctl(ts_f, 50)
+                # the b64 speedup is a regression gate: staged and fused
+                # are timed back-to-back every round and the speedup is
+                # the MEDIAN PER-ROUND RATIO — pairing cancels machine
+                # drift that medians-of-separate-windows cannot; short
+                # calls, so extra rounds are cheap insurance
+                ts_sf = _timeit_interleaved(
+                    {"staged": lambda: staged(queries[:b], k),
+                     "fused": lambda: eng.search(queries[:b], k)},
+                    reps=max(reps, 11), calls=2)
+                p50_s = _pctl(sorted(ts_sf["staged"]), 50)
+                p50_f = _pctl(sorted(ts_sf["fused"]), 50)
                 _, f_s = staged(queries[:b], k)
                 _, f_f = eng.search(queries[:b], k)
                 rec_s = float(recall_at_k(f_s, truth[:b]))
                 rec_f = float(recall_at_k(f_f, truth[:b]))
-                speedup = p50_s / p50_f
+                speedup = _pctl(sorted(s / f for s, f in
+                                       zip(ts_sf["staged"],
+                                           ts_sf["fused"])), 50)
                 rows.append((f"serve_staged_vs_fused_ivfpq_b{b}", p50_f,
                              f"staged_us={p50_s:.0f} speedup={speedup:.2f}x "
                              f"recall_fused={rec_f:.4f}"))
@@ -287,6 +379,7 @@ def bench_serve_fused(rows, json_doc=None, fast=False):
                 json_doc["staged_vs_fused"] = staged_rows
     if json_doc is not None:
         json_doc["rows"] = doc_rows
+        json_doc["batch_sweep"] = sweep_rows
         json_doc["config"] = dict(corpus=n, dim=dim, batch=nq, k=k,
                                   **base_cfg)
 
@@ -412,26 +505,38 @@ def bench_durability(rows, json_doc=None, fast=False):
     batches = [rng.randn(wb, dim).astype(np.float32)
                for _ in range(reps + 1)]
 
-    def ups_rate(eng, base_id):
-        # the delta (cap 2048, point 1536) holds every batch: pure write
-        # path, no compaction inside the timed region
-        eng.upsert(np.arange(base_id, base_id + wb), batches[0])  # warmup
-        jax.block_until_ready(eng.store.delta_count)
-        t0 = time.perf_counter()
-        for r in range(reps):
-            ids = np.arange(base_id + (r + 1) * wb, base_id + (r + 2) * wb)
-            eng.upsert(ids, batches[r + 1])
-        jax.block_until_ready(eng.store.delta_count)
-        return reps * wb / (time.perf_counter() - t0)
+    def writer(eng, base_id):
+        # per-batch stateful write thunk; the delta (cap 2048) holds every
+        # batch, so no compaction inside any timed region
+        step = [0]
+
+        def go():
+            r = step[0]
+            step[0] += 1
+            ids = np.arange(base_id + r * wb, base_id + (r + 1) * wb)
+            eng.upsert(ids, batches[r % len(batches)])
+            return eng.store.delta_count
+
+        return go
 
     work = tempfile.mkdtemp(prefix="qpad-bench-dur-")
     try:
         # --- WAL overhead on the write path -------------------------------
-        off = ups_rate(mk(), n)
-        eng = mk().durable(os.path.join(work, "wal_on"),
-                           DurabilityConfig(fsync="batch"))
-        on = ups_rate(eng, n)
-        overhead = max(0.0, 1.0 - on / off) if off else 0.0
+        # the overhead is a regression gate: WAL-off and WAL-on engines
+        # write alternately (interleaved) so the on/off ratio is immune to
+        # machine drift between the two measurement windows
+        eng_on = mk().durable(os.path.join(work, "wal_on"),
+                              DurabilityConfig(fsync="batch"))
+        ts_w = _timeit_interleaved(
+            {"off": writer(mk(), n), "on": writer(eng_on, n)},
+            reps=max(reps, 6))          # 7 batches/engine: under the delta cap
+        off = wb / (_pctl(sorted(ts_w["off"]), 50) * 1e-6)
+        on = wb / (_pctl(sorted(ts_w["on"]), 50) * 1e-6)
+        # throughput-loss fraction from the median per-round off/on time
+        # ratio (paired: each round's two writes are temporally adjacent)
+        overhead = max(0.0, 1.0 - _pctl(sorted(
+            t_off / t_on for t_off, t_on in
+            zip(ts_w["off"], ts_w["on"])), 50))
         rows.append(("durability_wal_overhead", 0.0,
                      f"ups_off={off:.0f} ups_on={on:.0f} "
                      f"overhead={overhead:.1%}"))

@@ -86,7 +86,10 @@ def _adc_kernel(n_total, k, lut_dtype, t_ref, *refs):
     if lut_dtype == "int8":
         acc = jnp.zeros((bq, bn), jnp.int32)
         for sub in range(m):                                 # M static: unroll
-            onehot = (c_ref[sub:sub + 1, :] == cent).astype(jnp.int8)
+            # codes arrive at stored width (uint8); widen the (1, BN) slice
+            # in-register — HBM traffic stays 1 byte/code
+            row = c_ref[sub:sub + 1, :].astype(jnp.int32)
+            onehot = (row == cent).astype(jnp.int8)
             acc = acc + jax.lax.dot_general(
                 tables[:, sub, :], onehot, (((1,), (0,)), ((), ())),
                 preferred_element_type=jnp.int32)            # int8 MXU path
@@ -94,7 +97,8 @@ def _adc_kernel(n_total, k, lut_dtype, t_ref, *refs):
     else:
         d2 = jnp.zeros((bq, bn), jnp.float32)
         for sub in range(m):                                 # M static: unroll
-            onehot = (c_ref[sub:sub + 1, :] == cent).astype(tables.dtype)
+            row = c_ref[sub:sub + 1, :].astype(jnp.int32)
+            onehot = (row == cent).astype(tables.dtype)
             d2 = d2 + jax.lax.dot_general(
                 tables[:, sub, :], onehot, (((1,), (0,)), ((), ())),
                 preferred_element_type=jnp.float32)          # MXU (BQ,K)@(K,BN)
@@ -115,22 +119,26 @@ def _adc_kernel(n_total, k, lut_dtype, t_ref, *refs):
                                              "interpret", "lut_dtype"))
 def pq_adc_topk_pallas(tables: jax.Array, codes: jax.Array, k: int,
                        block_q: int = 128, block_n: int = 512,
-                       interpret: bool = True, lut_dtype: str = "f32"):
+                       interpret: bool = True, lut_dtype: str = "f32",
+                       scale=None):
     """Fused ADC scan over a shared code matrix.
 
-    tables (Q, M, K) f32 (quantized internally per ``lut_dtype``);
-    codes (N, M) int. Returns (d2 (Q, k) ascending, idx (Q, k) int32 ids
-    into the code matrix).
+    tables (Q, M, K) f32 (quantized internally per ``lut_dtype``; ``scale``
+    optionally overrides the per-query int8 scale with a caller-certified
+    bound — see ``lut.quantize_lut``);
+    codes (N, M) int — kept at stored width (uint8 for K <= 256) through
+    the HBM->VMEM pipeline and widened in-register per subspace. Returns
+    (d2 (Q, k) ascending, idx (Q, k) int32 ids into the code matrix).
     """
     nq, m, kc = tables.shape
     n = codes.shape[0]
-    qt, scale = quantize_lut(tables, lut_dtype)
+    qt, scale = quantize_lut(tables, lut_dtype, scale)
     pad_q = (-nq) % block_q
     pad_n = (-n) % block_n
     tp = jnp.pad(qt, ((0, pad_q), (0, 0), (0, 0))) if pad_q else qt
     cp = jnp.pad(codes, ((0, pad_n), (0, 0))) if pad_n else codes
     grid = (tp.shape[0] // block_q, cp.shape[0] // block_n)
-    inputs = [tp, cp.T.astype(jnp.int32)]
+    inputs = [tp, cp.T]                       # codes at stored width (uint8)
     in_specs = [
         pl.BlockSpec((block_q, m, kc), lambda i, j: (i, 0, 0)),
         pl.BlockSpec((m, block_n), lambda i, j: (0, j)),
@@ -173,7 +181,8 @@ def _adc_gather_kernel(c_total, k, lut_dtype, t_ref, *refs):
         ti = tables.astype(jnp.int32)
         acc = jnp.zeros((bq, bn), jnp.int32)
         for sub in range(m):                                 # M static: unroll
-            hit = c_ref[:, :, sub][:, :, None] == cent
+            # uint8 codes widen in-register; gathered bytes stay narrow
+            hit = c_ref[:, :, sub].astype(jnp.int32)[:, :, None] == cent
             acc = acc + jnp.sum(
                 jnp.where(hit, ti[:, sub, :][:, None, :], 0), axis=2)
         lut = acc.astype(jnp.float32) * s_ref[...]           # (BQ,BN)*(BQ,1)
@@ -181,7 +190,7 @@ def _adc_gather_kernel(c_total, k, lut_dtype, t_ref, *refs):
         tf = tables.astype(jnp.float32)
         lut = jnp.zeros((bq, bn), jnp.float32)
         for sub in range(m):                                 # M static: unroll
-            onehot = (c_ref[:, :, sub][:, :, None] == cent
+            onehot = (c_ref[:, :, sub].astype(jnp.int32)[:, :, None] == cent
                       ).astype(jnp.float32)
             lut = lut + jnp.sum(tf[:, sub, :][:, None, :] * onehot, axis=2)
     d2 = base_ref[...].astype(jnp.float32) + lut
@@ -203,24 +212,28 @@ def _adc_gather_kernel(c_total, k, lut_dtype, t_ref, *refs):
 def pq_adc_gather_topk_pallas(tables: jax.Array, codes: jax.Array,
                               base: jax.Array, k: int,
                               block_q: int = 8, block_n: int = 256,
-                              interpret: bool = True, lut_dtype: str = "f32"):
+                              interpret: bool = True, lut_dtype: str = "f32",
+                              scale=None):
     """Fused ADC scan over per-query gathered candidate codes.
 
-    tables (Q, M, K) f32 (quantized internally per ``lut_dtype``);
-    codes (Q, C, M) int; base (Q, C) f32 additive term (+inf masks padded
-    candidates; never quantized). Returns (d2 (Q, k) ascending, idx (Q, k)
-    int32 candidate-slot ids in [0, C)).
+    tables (Q, M, K) f32 (quantized internally per ``lut_dtype``; ``scale``
+    optionally overrides the per-query int8 scale with a caller-certified
+    bound — see ``lut.quantize_lut``);
+    codes (Q, C, M) int — kept at stored width (uint8 for K <= 256), so
+    candidate-code HBM traffic is 1 byte/code; base (Q, C) f32 additive
+    term (+inf masks padded candidates; never quantized). Returns
+    (d2 (Q, k) ascending, idx (Q, k) int32 candidate-slot ids in [0, C)).
     """
     nq, m, kc = tables.shape
     c = codes.shape[1]
-    qt, scale = quantize_lut(tables, lut_dtype)
+    qt, scale = quantize_lut(tables, lut_dtype, scale)
     pad_q = (-nq) % block_q
     pad_c = (-c) % block_n
     tp = jnp.pad(qt, ((0, pad_q), (0, 0), (0, 0))) if pad_q else qt
     cp = jnp.pad(codes, ((0, pad_q), (0, pad_c), (0, 0)))
     bp = jnp.pad(base, ((0, pad_q), (0, pad_c)), constant_values=_INF)
     grid = (tp.shape[0] // block_q, cp.shape[1] // block_n)
-    inputs = [tp, cp.astype(jnp.int32), bp.astype(jnp.float32)]
+    inputs = [tp, cp, bp.astype(jnp.float32)]  # codes at stored width (uint8)
     in_specs = [
         pl.BlockSpec((block_q, m, kc), lambda i, j: (i, 0, 0)),
         pl.BlockSpec((block_q, block_n, m), lambda i, j: (i, j, 0)),

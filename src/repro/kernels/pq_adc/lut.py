@@ -6,14 +6,26 @@ working set 2x (bf16) or 4x (int8) and moves the one-hot contraction onto
 the low-precision MXU paths (bf16 x bf16 -> f32, int8 x int8 -> int32).
 
 int8 uses **per-query symmetric** quantization: one scale per query over
-its whole (M, K) table, ``scale = max|t| / 127``, so the integer partial
-sums accumulate exactly in int32 and a single f32 multiply at the end
-restores the distance unit. The absolute error per table entry is at most
-``scale / 2``, hence at most ``M * scale / 2`` per ADC distance — the bound
-asserted by the error tests in ``tests/test_pq_adc.py``.
+its whole (M, K) table, ``scale = max|t| / 127`` by default, so the
+integer partial sums accumulate exactly in int32 and a single f32 multiply
+at the end restores the distance unit. Callers may instead pass their own
+per-query ``scale`` (any certified upper bound on ``max|t| / 127`` keeps
+the grid clip-free) — the IVF-PQ scans derive one analytically from the
+codebook geometry so quantization costs no table-wide max reduction
+(``repro.search.ivfpq.ivfpq_lut_stats``). The absolute error per table
+entry is at most ``scale / 2``, hence at most ``M * scale / 2`` per ADC
+distance — the bound asserted by the error tests in
+``tests/test_pq_adc.py``.
 
 bf16 needs no scale (it is a rounding of the same dynamic range); the
 returned scale is 1 so both quantized formats share one calling convention.
+
+``snap_lut`` is the grid-snap twin of ``quantize_lut`` for backends where
+the narrow dtype only pays (jnp gathers on CPU): it rounds onto exactly
+the same bf16 / int8 grid but returns the values in f32 — int8 entries as
+exact small integers — so the scoring gather stays on the fast f32 path
+while every produced value (and hence every downstream sum) is
+bit-identical to the narrow-dtype pipeline.
 """
 from __future__ import annotations
 
@@ -21,7 +33,7 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["LUT_DTYPES", "center_lut", "quantize_lut", "dequantize_lut",
-           "lut_error_bound"]
+           "snap_lut", "snap_values", "lut_error_bound"]
 
 LUT_DTYPES = ("f32", "bf16", "int8")
 
@@ -41,11 +53,22 @@ def center_lut(tables: jax.Array):
 _JNP_DTYPE = {"f32": jnp.float32, "bf16": jnp.bfloat16, "int8": jnp.int8}
 
 
-def quantize_lut(tables: jax.Array, lut_dtype: str):
+def _int8_scale(tables: jax.Array, scale):
+    """Resolve the per-query int8 scale: caller-provided or max|t|/127."""
+    if scale is not None:
+        return jnp.asarray(scale, jnp.float32)
+    amax = jnp.max(jnp.abs(tables), axis=(1, 2))          # (Q,)
+    # floor well above the subnormal range: XLA flushes denormals to zero,
+    # and a zero scale would NaN the dequantized 0/0 tables
+    return jnp.maximum(amax, 1e-12) / 127.0
+
+
+def quantize_lut(tables: jax.Array, lut_dtype: str, scale=None):
     """(Q, M, K) f32 tables -> (qtables, scale (Q,) f32).
 
     ``qtables`` dtype follows ``lut_dtype``; ``scale`` is all-ones except
-    for int8 (per-query symmetric scale, strictly positive).
+    for int8 (per-query symmetric scale, strictly positive — defaults to
+    ``max|t| / 127``, or the caller's certified bound when given).
     """
     if lut_dtype not in LUT_DTYPES:
         raise ValueError(
@@ -56,12 +79,56 @@ def quantize_lut(tables: jax.Array, lut_dtype: str):
         return tables, ones
     if lut_dtype == "bf16":
         return tables.astype(jnp.bfloat16), ones
-    amax = jnp.max(jnp.abs(tables), axis=(1, 2))          # (Q,)
-    # floor well above the subnormal range: XLA flushes denormals to zero,
-    # and a zero scale would NaN the dequantized 0/0 tables
-    scale = jnp.maximum(amax, 1e-12) / 127.0
-    q = jnp.round(tables / scale[:, None, None])
-    return jnp.clip(q, -127, 127).astype(jnp.int8), scale
+    s = _int8_scale(tables, scale)
+    q = jnp.round(tables / s[:, None, None])
+    return jnp.clip(q, -127, 127).astype(jnp.int8), s
+
+
+def snap_values(x: jax.Array, lut_dtype: str, scale=None) -> jax.Array:
+    """Elementwise grid snap of f32 table values (any shape).
+
+    The snap commutes with gathers — ``snap(gather(t)) == gather(snap(t))``
+    — so scoring paths that gather in f32 (2-3x faster than a narrow-dtype
+    gather on CPU XLA) apply this to the *gathered* values instead, where
+    it fuses into the already-memory-bound subspace-sum pass:
+
+    * bf16: each value becomes its bf16 rounding widened back to f32 — the
+      very values the narrow pipeline gathers and widens per tile;
+    * int8: each value becomes the clipped integer code as an f32
+      (|v| <= 127; ``scale`` is REQUIRED and must broadcast against ``x``).
+      Sums of up to ``M`` such values stay exact in f32 (integers up to
+      ``127 * M`` are far below 2^24), so summing and then applying
+      ``scale`` once reproduces the int32-accumulate path bit for bit.
+
+    f32 passes through untouched.
+    """
+    if lut_dtype not in LUT_DTYPES:
+        raise ValueError(
+            f"unknown lut_dtype {lut_dtype!r}; expected one of {LUT_DTYPES}")
+    if lut_dtype == "f32":
+        return x
+    if lut_dtype == "bf16":
+        return x.astype(jnp.bfloat16).astype(jnp.float32)
+    return jnp.clip(jnp.round(x / scale), -127.0, 127.0)
+
+
+def snap_lut(tables: jax.Array, lut_dtype: str, scale=None):
+    """Round whole tables onto the ``lut_dtype`` grid but keep them f32.
+
+    Same (Q, M, K) -> (ftables, scale (Q,) f32) convention as
+    ``quantize_lut`` and the exact same grid (same rounding expression,
+    same ``scale`` resolution) — only the storage dtype differs (see
+    ``snap_values`` for the value semantics).
+    """
+    if lut_dtype not in LUT_DTYPES:
+        raise ValueError(
+            f"unknown lut_dtype {lut_dtype!r}; expected one of {LUT_DTYPES}")
+    tables = jnp.asarray(tables, jnp.float32)
+    ones = jnp.ones(tables.shape[:1], jnp.float32)
+    if lut_dtype in ("f32", "bf16"):
+        return snap_values(tables, lut_dtype), ones
+    s = _int8_scale(tables, scale)
+    return snap_values(tables, lut_dtype, s[:, None, None]), s
 
 
 def dequantize_lut(qtables: jax.Array, scale: jax.Array) -> jax.Array:
@@ -69,17 +136,18 @@ def dequantize_lut(qtables: jax.Array, scale: jax.Array) -> jax.Array:
     return qtables.astype(jnp.float32) * scale[:, None, None]
 
 
-def lut_error_bound(tables: jax.Array, lut_dtype: str) -> jax.Array:
+def lut_error_bound(tables: jax.Array, lut_dtype: str, scale=None) -> jax.Array:
     """Per-query upper bound on |quantized ADC score - f32 ADC score|.
 
-    int8: M * scale / 2 per summed table entry. bf16: relative rounding of
-    each entry (2^-8) summed over M. f32: zero.
+    int8: M * scale / 2 per summed table entry (pass the same ``scale`` the
+    scan quantized with, else the default ``max|t| / 127`` is assumed).
+    bf16: relative rounding of each entry (2^-8) summed over M. f32: zero.
     """
     tables = jnp.asarray(tables, jnp.float32)
     m = tables.shape[1]
-    amax = jnp.max(jnp.abs(tables), axis=(1, 2))
     if lut_dtype == "f32":
-        return jnp.zeros_like(amax)
+        return jnp.zeros(tables.shape[:1], jnp.float32)
     if lut_dtype == "bf16":
+        amax = jnp.max(jnp.abs(tables), axis=(1, 2))
         return m * amax * 2.0 ** -8
-    return m * (jnp.maximum(amax, 1e-12) / 127.0) / 2.0
+    return m * _int8_scale(tables, scale) / 2.0

@@ -53,6 +53,14 @@ def _parse_args():
                     help="ADC lookup-table precision (pq/ivfpq)")
     ap.add_argument("--pq-backend", choices=["jnp", "kernel"], default="jnp",
                     help="ADC scoring backend (kernel = fused Pallas scan)")
+    ap.add_argument("--interpret", dest="interpret", action="store_true",
+                    default=None,
+                    help="run the Pallas ADC kernel in interpret mode "
+                         "(CPU-safe smoke of --pq-backend kernel; the "
+                         "engine default)")
+    ap.add_argument("--no-interpret", dest="interpret", action="store_false",
+                    help="compile the Pallas ADC kernel for the real "
+                         "accelerator")
     ap.add_argument("--query-bucket", type=int, default=64,
                     help="min padded query-batch size; ragged batches round "
                          "up to powers of two and share compilations")
@@ -129,6 +137,8 @@ def main():
                                spread=0.4, center_scale=1.5)
     t0 = time.time()
     runtime = dict(query_bucket=args.query_bucket, fit_sample=4096)
+    if args.interpret is not None:
+        runtime["pq_interpret"] = args.interpret
     if args.stream:
         runtime["stream"] = StreamConfig(
             delta_capacity=args.delta_capacity,

@@ -40,9 +40,9 @@ from jax.sharding import PartitionSpec as P
 from .ivf import (IVFIndex, build_ivf, cell_vectors, ivf_local_scan,
                   ivf_scan, probe_cells, sq_dists)
 from .ivfpq import (IVFPQIndex, build_ivfpq, ivfpq_adc_scan,
-                    ivfpq_local_scan, ivfpq_scan)
+                    ivfpq_compact_scan, ivfpq_local_scan, ivfpq_scan)
 from .knn import _sq_dists, knn_scan, masked_topk
-from .pq import PQIndex, build_pq, pq_local_scan, pq_scan
+from .pq import PQIndex, adc_tables, build_pq, pq_local_scan, pq_scan
 
 __all__ = ["Index", "IndexOps", "ScanParams", "INDEX_KINDS",
            "register_index", "get_ops",
@@ -71,11 +71,20 @@ jax.tree_util.register_dataclass(Index, data_fields=["payload"],
 
 @dataclasses.dataclass(frozen=True)
 class ScanParams:
-    """Query-time scan knobs (trace-time constants, one bundle)."""
+    """Query-time scan knobs (trace-time constants, one bundle).
+
+    ``scan_cap > 0`` switches the ivfpq scan to the nprobe-proportional
+    compact variant (``ivfpq_compact_scan``): the candidate gather width
+    becomes ``scan_cap`` flat slots sized by actual posting mass instead
+    of ``nprobe * max_cell`` padded slots. The engine computes a cap that
+    covers any query's probed mass, so results stay bit-identical to the
+    padded scan. 0 = padded scan (the default; other kinds ignore it).
+    """
     nprobe: int = 8
     backend: str = "jnp"
     interpret: bool = True
     lut_dtype: str = "f32"
+    scan_cap: int = 0
 
 
 class ShardedIVF(NamedTuple):
@@ -100,6 +109,7 @@ class ShardedIVFPQ(NamedTuple):
     bias_cell: jax.Array    # (nlist_pad, mc) cell-sharded
     lut_w: jax.Array        # (d, M*K) replicated
     cbnorm: jax.Array       # (M, K) replicated
+    codebooks: jax.Array    # (M, K, dsub) replicated (analytic LUT stats)
 
 
 class PQQuant(NamedTuple):
@@ -423,7 +433,7 @@ def _pq_stream_scan(store, frozen, qr, n_cand, live, p):
     from repro.kernels.pq_adc.ref import pq_adc_scores_ref
     nq = qr.shape[0]
     m, kc = frozen.cbnorm.shape
-    tables = frozen.cbnorm[None] + (qr @ frozen.lut_w).reshape(nq, m, kc)
+    tables = adc_tables(frozen.lut_w, frozen.cbnorm, qr)
     const = jnp.sum(qr * qr, axis=1)
     if p.lut_dtype != "f32":
         tables, offs = center_lut(tables)
@@ -438,8 +448,10 @@ def _pq_stream_scan(store, frozen, qr, n_cand, live, p):
 
 def _pq_shard_payload(state, shards):
     ix = state.index.payload
+    # codes ship at stored width (uint8 for K <= 256); both backends widen
+    # in-register, so the sharded copy keeps the 4x memory saving
     return ShardedPQ(
-        codes=_pad_dim0(jnp.asarray(ix.codes, jnp.int32), shards),
+        codes=_pad_dim0(ix.codes, shards),
         lut_w=ix.lut_w, cbnorm=ix.cbnorm)
 
 
@@ -451,7 +463,7 @@ def _pq_store_parts(state, n_cap, cell_slack):
     # no ``reduced`` mirror: the coded base is scanned through its codes,
     # the delta through ``delta_reduced``, the re-rank through ``corpus``
     ix = state.index.payload
-    parts = {"codes": _pad_rows(jnp.asarray(ix.codes, jnp.int32), n_cap)}
+    parts = {"codes": _pad_rows(ix.codes, n_cap)}     # stored width (uint8)
     return parts, PQQuant(codebooks=ix.codebooks, lut_w=ix.lut_w,
                           cbnorm=ix.cbnorm)
 
@@ -461,8 +473,10 @@ def _pq_encode_delta(frozen, rows):
 
 
 def _pq_rebuild(frozen, reduced, shards):
+    code_dt = jnp.uint8 if frozen.codebooks.shape[1] <= 256 else jnp.int32
     return PQIndex(codebooks=frozen.codebooks,
-                   codes=_encode_pq(frozen.codebooks, reduced),
+                   codes=_encode_pq(frozen.codebooks,
+                                    reduced).astype(code_dt),
                    lut_w=frozen.lut_w, cbnorm=frozen.cbnorm)
 
 
@@ -494,7 +508,16 @@ def _ivfpq_build(key, reduced, spec):
 
 
 def _ivfpq_scan(state, qr, n_cand, p):
-    return ivfpq_scan(state.index.payload, qr, n_cand, p.nprobe,
+    ix = state.index.payload
+    if p.scan_cap > 0:
+        d2, ids = ivfpq_compact_scan(ix.centroids, ix.lists, ix.codes_cell,
+                                     ix.bias_cell, ix.lut_w, ix.cbnorm,
+                                     ix.codebooks, qr,
+                                     n_cand, p.nprobe, p.scan_cap,
+                                     backend=p.backend, interpret=p.interpret,
+                                     lut_dtype=p.lut_dtype)
+        return jnp.sqrt(jnp.maximum(d2, 0.0)), ids
+    return ivfpq_scan(ix, qr, n_cand, p.nprobe,
                       backend=p.backend, interpret=p.interpret,
                       lut_dtype=p.lut_dtype)
 
@@ -502,15 +525,16 @@ def _ivfpq_scan(state, qr, n_cand, p):
 def _ivfpq_local_scan(sstate, qr, n_cand, p, axis, slack, live=None):
     ix = sstate.index.payload
     return ivfpq_local_scan(ix.centroids, ix.lists, ix.codes_cell,
-                            ix.bias_cell, ix.lut_w, ix.cbnorm, qr, n_cand,
-                            p.nprobe, axis, backend=p.backend,
+                            ix.bias_cell, ix.lut_w, ix.cbnorm, ix.codebooks,
+                            qr, n_cand, p.nprobe, axis, backend=p.backend,
                             interpret=p.interpret, lut_dtype=p.lut_dtype,
                             live=live)
 
 
 def _ivfpq_stream_scan(store, frozen, qr, n_cand, live, p):
     return ivfpq_adc_scan(frozen.centroids, store.lists, store.codes_cell,
-                          store.bias_cell, frozen.lut_w, frozen.cbnorm, qr,
+                          store.bias_cell, frozen.lut_w, frozen.cbnorm,
+                          frozen.codebooks, qr,
                           n_cand, p.nprobe, p.backend, p.interpret,
                           p.lut_dtype, live=live)
 
@@ -521,18 +545,19 @@ def _ivfpq_shard_payload(state, shards):
         centroids=ix.centroids, lists=_pad_dim0(ix.lists, shards, fill=-1),
         codes_cell=_pad_dim0(ix.codes_cell, shards),
         bias_cell=_pad_dim0(ix.bias_cell, shards),
-        lut_w=ix.lut_w, cbnorm=ix.cbnorm)
+        lut_w=ix.lut_w, cbnorm=ix.cbnorm, codebooks=ix.codebooks)
 
 
 def _ivfpq_payload_specs(payload, axis):
     return ShardedIVFPQ(centroids=P(), lists=P(axis), codes_cell=P(axis),
-                        bias_cell=P(axis), lut_w=P(), cbnorm=P())
+                        bias_cell=P(axis), lut_w=P(), cbnorm=P(),
+                        codebooks=P())
 
 
 def _ivfpq_store_parts(state, n_cap, cell_slack):
     ix = state.index.payload
     parts = {
-        "codes": _pad_rows(jnp.asarray(ix.codes, jnp.int32), n_cap),
+        "codes": _pad_rows(ix.codes, n_cap),          # stored width (uint8)
         "bias": _pad_rows(ix.bias, n_cap),
         "lists": _pad_cells(ix.lists, cell_slack, fill=-1),
         "codes_cell": _pad_cells(ix.codes_cell, cell_slack),
@@ -553,19 +578,26 @@ def _ivfpq_rebuild(frozen, reduced, shards):
     lists = posting_lists(assign, frozen.centroids.shape[0], shards)
     lid = jnp.maximum(lists, 0)
     code_dt = jnp.uint8 if frozen.codebooks.shape[1] <= 256 else jnp.int32
+    recon = frozen.centroids[assign] + _pq_decode(frozen.codebooks, codes)
+    rerr = jnp.sqrt(jnp.sum((reduced - recon) ** 2, axis=1))
     return IVFPQIndex(
         centroids=frozen.centroids, lists=lists,
-        codebooks=frozen.codebooks, codes=codes, bias=bias,
+        codebooks=frozen.codebooks, codes=codes.astype(code_dt), bias=bias,
+        rerr=rerr.astype(jnp.float32),
         codes_cell=codes[lid].astype(code_dt),
         bias_cell=jnp.where(lists >= 0, bias[lid], 0.0).astype(jnp.float32),
         lut_w=frozen.lut_w, cbnorm=frozen.cbnorm)
 
 
 def _ivfpq_stream_base_payload(store, frozen, corpus_owned):
+    # rerr stays zero here: the re-rank pre-filter never engages on
+    # streaming engines (the scan must stay zero-recompile under churn),
+    # and a zero bound only ever *keeps* candidates — never unsafe
     return IVFPQIndex(
         centroids=frozen.centroids, lists=_own(store.lists),
         codebooks=frozen.codebooks, codes=_own(store.codes),
-        bias=_own(store.bias), codes_cell=_own(store.codes_cell),
+        bias=_own(store.bias), rerr=jnp.zeros_like(store.bias),
+        codes_cell=_own(store.codes_cell),
         bias_cell=_own(store.bias_cell),
         lut_w=frozen.lut_w, cbnorm=frozen.cbnorm)
 
@@ -579,7 +611,7 @@ register_index(IndexOps(
     stream_base_payload=_ivfpq_stream_base_payload,
     payload_skeleton=lambda leaf: IVFPQIndex(
         centroids=leaf, lists=leaf, codebooks=leaf, codes=leaf, bias=leaf,
-        codes_cell=leaf, bias_cell=leaf, lut_w=leaf, cbnorm=leaf),
+        rerr=leaf, codes_cell=leaf, bias_cell=leaf, lut_w=leaf, cbnorm=leaf),
     quant_skeleton=lambda leaf: IVFPQQuant(
         centroids=leaf, codebooks=leaf, lut_w=leaf, cbnorm=leaf),
     drift_stats=_ivfpq_drift_stats))

@@ -156,7 +156,7 @@ class StreamStore(NamedTuple):
     dead: jax.Array                 # (n_cap,) bool tombstone bitmap
     reduced: Optional[jax.Array]    # (n_cap, m) scan-space rows (None = no
     #                                 projection; scan from ``corpus``)
-    codes: Optional[jax.Array]      # (n_cap, M) int32 pq/ivfpq row codes
+    codes: Optional[jax.Array]      # (n_cap, M) uint8/int32 pq/ivfpq codes
     bias: Optional[jax.Array]       # (n_cap,) f32 ivfpq cross term
     lists: Optional[jax.Array]      # (nlist, mc_cap) posting lists, -1 pad
     codes_cell: Optional[jax.Array]  # (nlist, mc_cap, M) cell-major codes
@@ -355,7 +355,8 @@ def compact_fn(store: StreamStore, frozen: FrozenParams
     row_ids = store.row_ids.at[dest].set(store.delta_ids, mode="drop")
     reduced = (store.reduced.at[dest].set(store.delta_reduced, mode="drop")
                if store.reduced is not None else None)
-    new_codes = (store.codes.at[dest].set(codes, mode="drop")
+    new_codes = (store.codes.at[dest].set(
+        codes.astype(store.codes.dtype), mode="drop")
                  if store.codes is not None else None)
     new_bias = (store.bias.at[dest].set(bias, mode="drop")
                 if store.bias is not None else None)

@@ -129,7 +129,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import MPADConfig, MPADResult, fit_mpad
-from repro.kernels.pq_adc.lut import LUT_DTYPES
+from repro.kernels.pq_adc.lut import LUT_DTYPES, lut_error_bound
 from .durability.wal import (RT_COMPACT, RT_DELETE, RT_POLICY, RT_UPSERT,
                              encode_delete, encode_policy, encode_upsert)
 from .registry import INDEX_KINDS, Index, ScanParams, get_ops
@@ -143,7 +143,7 @@ __all__ = ["ServeConfig", "SearchEngine", "EngineState",
 
 _ADC_BACKENDS = ("jnp", "kernel")
 _SEARCH_STATICS = ("k", "nprobe", "rerank", "backend", "interpret",
-                   "lut_dtype")
+                   "lut_dtype", "scan_cap", "prefilter")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -174,6 +174,22 @@ class ServeConfig:
     small_batch: int = 8                 # batches <= this take their own
     #                                      power-of-two bucket instead of the
     #                                      query_bucket floor (0 disables)
+    compact_batch: int = 64              # ivfpq read-only engines: buckets
+    #                                      <= this take the nprobe-
+    #                                      proportional compact scan when the
+    #                                      posting-mass bound beats the padded
+    #                                      gather; returned ids stay
+    #                                      bit-identical (0 disables)
+    prefilter_batch: int = 0             # ivfpq read-only engines without a
+    #                                      projection: buckets <= this shrink
+    #                                      the exact re-rank to certified ADC
+    #                                      survivors. Ids stay bit-identical,
+    #                                      but it only pays when the PQ
+    #                                      reconstruction error is small next
+    #                                      to neighbor gaps (else the bound
+    #                                      admits everyone and the full-width
+    #                                      fallback runs anyway), so it is
+    #                                      opt-in (0 disables, the default)
     mpad: Optional[MPADConfig] = None    # defaults derived from target_dim
     fit_sample: int = 2048               # rows used to fit the projection
     seed: int = 0
@@ -210,6 +226,12 @@ class ServeConfig:
         if self.small_batch < 0:
             raise ValueError("small_batch must be >= 0 (0 disables the "
                              "small-batch bucket floor path)")
+        if self.compact_batch < 0:
+            raise ValueError("compact_batch must be >= 0 (0 disables the "
+                             "compact small-batch scan)")
+        if self.prefilter_batch < 0:
+            raise ValueError("prefilter_batch must be >= 0 (0 disables the "
+                             "re-rank candidate pre-filter)")
         if (self.stream is not None and self.index == "pq"
                 and self.pq_backend == "kernel"):
             raise ValueError(
@@ -326,6 +348,76 @@ def exact_rerank(queries: jax.Array, corpus: jax.Array, cand: jax.Array,
     return jnp.sqrt(jnp.maximum(-neg, 0.0)), ids
 
 
+def _prefiltered_rerank(state: EngineState, queries: jax.Array,
+                        qr: jax.Array, d_scan: jax.Array, cand: jax.Array,
+                        k: int, r_s: int, lut_dtype: str):
+    """Exact re-rank behind the in-scan candidate pre-filter.
+
+    The ivfpq ADC scan already scored every candidate; with no projection
+    the scan space IS the re-rank space, so per-candidate bounds on the
+    true distance d = ||q - x|| follow from the stored per-row PQ
+    reconstruction error ``rerr = ||x - x̂||`` (triangle inequality) plus
+    the LUT quantization bound b (``lut_error_bound``; 0 for f32):
+
+        LB = max(0, sqrt(max(d2 - b, 0)) - rerr) <= d
+        UB = sqrt(d2 + b) + rerr                 >= d
+
+    The k-th smallest UB is a certified threshold W >= d_(k): any
+    candidate with LB > W has d > d_(k) strictly and cannot be a true
+    top-k member (ties at d_(k) always satisfy LB <= d = d_(k) <= W, so
+    the tie-break pool is preserved and the returned IDS are
+    bit-identical; distances can wiggle by reduction-order ULPs since the
+    narrower gather vectorizes the feature sum differently).
+    When every query's survivor count fits the static width ``r_s``, the
+    survivors are stably compacted left and the exact gather runs r_s
+    wide instead of rerank wide — the stage that dominates small batches.
+    Otherwise (rare: W is loose only when rerr is large) the full-width
+    re-rank runs unchanged.
+    """
+    ix = state.index.payload
+    n = state.corpus.shape[0]
+    valid = cand >= 0
+    rerr = ix.rerr[jnp.clip(cand, 0, n - 1)]                # (Q, C)
+    if lut_dtype != "f32":
+        # same matmul + (int8) scale the scan ran on the same operands
+        # (``ivfpq_lut_stats``) — XLA CSEs the repeats, and the bound is
+        # computed on exactly the grid the scan quantized onto: the raw
+        # tables for bf16 (relative rounding, no centering), the analytic
+        # centered scale for int8
+        from .ivfpq import ivfpq_lut_stats
+        from .pq import adc_tables
+        tables = adc_tables(ix.lut_w, ix.cbnorm, qr)
+        scale = None
+        if lut_dtype == "int8":
+            _, scale = ivfpq_lut_stats(ix.codebooks, ix.cbnorm, qr,
+                                       lut_dtype)
+        b = lut_error_bound(tables, lut_dtype, scale)[:, None]    # (Q, 1)
+    else:
+        b = jnp.zeros((1, 1), jnp.float32)
+    d2 = jnp.square(d_scan)
+    ub = jnp.sqrt(jnp.maximum(d2 + b, 0.0)) + rerr
+    lb = jnp.maximum(jnp.sqrt(jnp.maximum(d2 - b, 0.0)) - rerr, 0.0)
+    ub = jnp.where(valid, ub, jnp.inf)
+    negk, _ = jax.lax.top_k(-ub, k)
+    w = -negk[:, -1:]                                       # (Q, 1) = W
+    # relative slack absorbs the sqrt/square round-trips; slack only KEEPS
+    # extra candidates, never drops more — safety is one-sided
+    keep = valid & (lb <= w + 1e-3 * (1.0 + jnp.abs(w)))
+
+    def _tight(_):
+        order = jnp.argsort(~keep, axis=1, stable=True)[:, :r_s]
+        cc = jnp.take_along_axis(cand, order, axis=1)
+        kk = jnp.take_along_axis(keep, order, axis=1)
+        return exact_rerank(queries, state.corpus,
+                            jnp.where(kk, cc, -1), k)
+
+    def _full(_):
+        return exact_rerank(queries, state.corpus, cand, k)
+
+    fits = jnp.max(jnp.sum(keep.astype(jnp.int32), axis=1)) <= r_s
+    return jax.lax.cond(fits, _tight, _full, None)
+
+
 def _check_rerank_budget(approximate: bool, rerank: int, k: int):
     if approximate and rerank < k:
         raise ValueError(
@@ -337,7 +429,8 @@ def _check_rerank_budget(approximate: bool, rerank: int, k: int):
 
 def search_fn(state: EngineState, queries: jax.Array, k: int, *,
               nprobe: int = 8, rerank: int = 64, backend: str = "jnp",
-              interpret: bool = True, lut_dtype: str = "f32"):
+              interpret: bool = True, lut_dtype: str = "f32",
+              scan_cap: int = 0, prefilter: int = 0):
     """The entire query pipeline as one pure traceable function.
 
     project -> probe/scan (dispatched on ``state.index.kind`` through the
@@ -348,6 +441,15 @@ def search_fn(state: EngineState, queries: jax.Array, k: int, *,
     row-independent, so padded query rows never perturb real results.
     Returns (dists (Q,k), ids (Q,k)); distances in the original space when
     re-ranking is active, else in the serving (reduced) space.
+
+    ``scan_cap > 0`` (ivfpq) sizes the candidate gather by actual posting
+    mass instead of ``nprobe * max_cell`` (``ivfpq_compact_scan``);
+    ``prefilter > 0`` (ivfpq, no projection) shrinks the exact re-rank to
+    that many certified survivors (``_prefiltered_rerank``). Both are
+    engaged by ``SearchEngine`` for small buckets and keep the returned
+    ids bit-identical to the defaults (the compact scan keeps distances
+    bit-identical too; the pre-filter's narrower re-rank gather can move
+    distances by reduction-order ULPs).
     """
     ops = get_ops(state.index.kind)
     queries = jnp.asarray(queries, jnp.float32)
@@ -361,8 +463,17 @@ def search_fn(state: EngineState, queries: jax.Array, k: int, *,
     _check_rerank_budget(approximate, rerank, k)
     n_cand = rerank if approximate else k
     p = ScanParams(nprobe=nprobe, backend=backend, interpret=interpret,
-                   lut_dtype=lut_dtype)
-    _, cand = ops.scan(state, qr, n_cand, p)
+                   lut_dtype=lut_dtype, scan_cap=scan_cap)
+    d_scan, cand = ops.scan(state, qr, n_cand, p)
+    if prefilter > 0:
+        if state.index.kind != "ivfpq" or state.proj is not None:
+            raise ValueError(
+                "prefilter needs an ivfpq index with no Reduce stage: the "
+                "certified distance bounds require the scan space to be "
+                "the re-rank space")
+        if prefilter < n_cand:
+            return _prefiltered_rerank(state, queries, qr, d_scan, cand,
+                                       k, prefilter, lut_dtype)
     return exact_rerank(queries, state.corpus, cand, k)
 
 
@@ -391,8 +502,15 @@ def _sharded_rerank(queries: jax.Array, corpus_loc: jax.Array,
 
 def _sharded_core(sstate: ShardedEngineState, queries: jax.Array, *, k: int,
                   nprobe: int, rerank: int, backend: str,
-                  interpret: bool, lut_dtype: str, axis: str, slack: int):
+                  interpret: bool, lut_dtype: str, axis: str, slack: int,
+                  scan_cap: int = 0, prefilter: int = 0):
     """The shard_map body: the full per-shard pipeline + distributed merge."""
+    if scan_cap or prefilter:
+        raise ValueError(
+            "scan_cap/prefilter are single-device read-only fast paths: "
+            "the compact scan sizes on the unsharded posting mass and the "
+            "pre-filter bounds assume the full candidate row — leave both "
+            "0 on the sharded path")
     ops = get_ops(sstate.index.kind)
     queries = jnp.asarray(queries, jnp.float32)
     if sstate.proj is not None:
@@ -420,7 +538,8 @@ def _sharded_core(sstate: ShardedEngineState, queries: jax.Array, *, k: int,
 def sharded_search_fn(sstate: ShardedEngineState, queries: jax.Array, k: int,
                       *, mesh: Mesh, axis: str = "data",
                       nprobe: int = 8, rerank: int = 64, backend: str = "jnp",
-                      interpret: bool = True, lut_dtype: str = "f32"):
+                      interpret: bool = True, lut_dtype: str = "f32",
+                      scan_cap: int = 0, prefilter: int = 0):
     """``search_fn`` partitioned over the ``axis`` of ``mesh``.
 
     Same contract and — by construction of the distributed merge — the same
@@ -433,7 +552,7 @@ def sharded_search_fn(sstate: ShardedEngineState, queries: jax.Array, k: int,
     core = functools.partial(
         _sharded_core, k=k, nprobe=nprobe, rerank=rerank,
         backend=backend, interpret=interpret, lut_dtype=lut_dtype, axis=axis,
-        slack=mesh.shape[axis] - 1)
+        slack=mesh.shape[axis] - 1, scan_cap=scan_cap, prefilter=prefilter)
     f = shard_map(core, mesh=mesh, in_specs=(specs, P()),
                   out_specs=(P(), P()), check_rep=False)
     return f(sstate, queries)
@@ -511,6 +630,9 @@ class SearchEngine:
         self.last_bucket: Optional[int] = None   # padded size of the last
         #                                          served batch (shape pin
         #                                          for latency tests)
+        self._scan_caps: dict = {}   # nprobe -> compact-scan gather width
+        #                              (host-side, cached: one posting-mass
+        #                              sync per nprobe per engine)
         self.sharded_state: Optional[ShardedEngineState] = None
         self._mesh: Optional[Mesh] = None
         self._shard_axis = "data"
@@ -1222,6 +1344,29 @@ class SearchEngine:
                 static_argnames=_SEARCH_STATICS + ("mesh", "axis"))
         return self
 
+    def _scan_cap(self, nprobe: int) -> int:
+        """Compact-scan gather width for this engine at ``nprobe``: the
+        worst-case probed posting mass (sum of the ``nprobe`` largest cell
+        fills), rounded up to a lane multiple — so the capped gather can
+        NEVER truncate a query's candidates and results stay bit-identical
+        to the padded scan. Returns 0 (disabled) unless the bound beats the
+        padded ``nprobe * max_cell`` gather by a wide margin: each compact
+        slot costs ~1.5x a padded slot (the prefix-sum slot mapping and the
+        2D cell/slot gathers), so a cap must remove well over a third of
+        the slots to win — in practice that means a few outlier-huge cells,
+        the regime the cap exists for, not mild skew. Host-side and cached:
+        the posting-mass sync runs once per (engine, nprobe)."""
+        cap = self._scan_caps.get(nprobe)
+        if cap is None:
+            lists = self.state.index.payload.lists
+            lens = np.asarray(jnp.sum(lists >= 0, axis=1))
+            top = np.sort(lens)[-nprobe:]
+            cap = -(-int(top.sum()) // 128) * 128
+            if cap * 8 >= nprobe * lists.shape[1] * 5:
+                cap = 0
+            self._scan_caps[nprobe] = cap
+        return cap
+
     def search(self, queries: jax.Array, k: int):
         """Returns (dists (Q,k), ids (Q,k)); distances in the original space
         when re-ranking is active, else in the serving (reduced) space.
@@ -1250,7 +1395,29 @@ class SearchEngine:
                   rerank=cfg.rerank,
                   backend=cfg.pq_backend if coded else "jnp",
                   interpret=cfg.pq_interpret if coded else True,
-                  lut_dtype=cfg.lut_dtype if coded else "f32")
+                  lut_dtype=cfg.lut_dtype if coded else "f32",
+                  scan_cap=0, prefilter=0)
+        # small read-only ivfpq buckets: size the candidate gather by the
+        # actual probed posting mass (compact scan) and — when the scan
+        # space is the re-rank space — shrink the exact re-rank to the
+        # certified survivors. Both are bit-identical to the defaults, so
+        # engaging them per bucket only re-keys the cache, never results.
+        # They engage independently: the compact scan wins whenever the
+        # posting-mass bound clears _scan_cap's margin, but the pre-filter
+        # pays only when the quantization/PQ error bound is tight enough to
+        # actually cut survivors — on loose-bound corpora everyone survives,
+        # the full-width fallback runs anyway, and the bound + partition
+        # work is pure loss (~0.4-1.0ms per batch-64 call measured), so it
+        # rides its own opt-in knob.
+        if (cfg.index == "ivfpq" and self.store is None
+                and self.sharded_state is None):
+            if 0 < bucket <= cfg.compact_batch:
+                kw["scan_cap"] = self._scan_cap(cfg.nprobe)
+            if (0 < bucket <= cfg.prefilter_batch
+                    and cfg.target_dim is None):
+                r_s = max(2 * k, cfg.rerank // 2)
+                if r_s < cfg.rerank:
+                    kw["prefilter"] = r_s
         if self.store is not None:
             self._poll_compaction()     # swap in a finished background fold
             if self._stream_sharded_base is not None:

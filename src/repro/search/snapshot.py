@@ -56,8 +56,8 @@ __all__ = ["save_engine", "load_engine", "SNAPSHOT_META"]
 SNAPSHOT_META = "engine.json"
 _SCHEMA = "qpad.engine_snapshot.v1"
 # engine knobs a pipeline spec does not carry; persisted verbatim
-_RUNTIME_FIELDS = ("query_bucket", "small_batch", "fit_sample", "seed",
-                   "pq_interpret")
+_RUNTIME_FIELDS = ("query_bucket", "small_batch", "compact_batch",
+                   "prefilter_batch", "fit_sample", "seed", "pq_interpret")
 
 
 class _Leaf:

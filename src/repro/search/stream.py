@@ -129,7 +129,8 @@ def _to_external(ids, row_ids, delta_ids):
 def stream_search_fn(store: StreamStore, frozen: FrozenParams,
                      queries: jax.Array, k: int, *,
                      nprobe: int = 8, rerank: int = 64, backend: str = "jnp",
-                     interpret: bool = True, lut_dtype: str = "f32"):
+                     interpret: bool = True, lut_dtype: str = "f32",
+                     scan_cap: int = 0, prefilter: int = 0):
     """The mutable-engine query pipeline as one pure traceable function.
 
     project -> tombstone-masked base probe/scan (``IndexOps.stream_scan``
@@ -137,6 +138,12 @@ def stream_search_fn(store: StreamStore, frozen: FrozenParams,
     exact re-rank -> external-id top-k.
     Returns (dists (Q, k), external ids (Q, k)); -1 ids pad short rows.
     """
+    if scan_cap or prefilter:
+        raise ValueError(
+            "scan_cap/prefilter are read-only fast paths: the compact "
+            "scan's posting-mass cap goes stale under writes and the "
+            "pre-filter bounds ignore tombstones — leave both 0 on the "
+            "streaming path")
     kind = frozen.quant.kind
     ops = get_ops(kind)
     _check_adc_args(backend, lut_dtype)
@@ -225,7 +232,8 @@ def sharded_stream_search_fn(sbase: ShardedEngineState, repl: StreamReplica,
                              axis: str = "data",
                              nprobe: int = 8, rerank: int = 64,
                              backend: str = "jnp", interpret: bool = True,
-                             lut_dtype: str = "f32"):
+                             lut_dtype: str = "f32",
+                             scan_cap: int = 0, prefilter: int = 0):
     """``stream_search_fn`` with the base partitioned over ``mesh``.
 
     Same results as the single-device streaming search on the unsharded
@@ -234,6 +242,10 @@ def sharded_stream_search_fn(sbase: ShardedEngineState, repl: StreamReplica,
     math. Jit with ``mesh``/``axis`` static.
     """
     from repro.parallel.sharding import engine_state_specs
+    if scan_cap or prefilter:
+        raise ValueError(
+            "scan_cap/prefilter are single-device read-only fast paths — "
+            "leave both 0 on the sharded streaming path")
     _check_stream_backend(sbase.index.kind, backend)
     base_specs = engine_state_specs(sbase, axis)
     repl_specs = StreamReplica(*[None if getattr(repl, f) is None else P()

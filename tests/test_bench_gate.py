@@ -8,13 +8,22 @@ sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
 from benchmarks.check_regression import check, find_row  # noqa: E402
 
 
-def _doc(qps=8000, recall=0.93, ups=None, stream_recall=0.9):
+def _doc(qps=8000, recall=0.93, ups=None, stream_recall=0.9,
+         bf16_qps=7900, int8_qps=7800, b64_speedup=1.2, sweep=True):
     doc = {"rows": [
         {"index": "ivfpq", "lut_dtype": "int8", "batch": 256,
-         "qps": 7000, "recall_at_10": 0.92},
+         "qps": int8_qps, "recall_at_10": 0.92},
+        {"index": "ivfpq", "lut_dtype": "bf16", "batch": 256,
+         "qps": bf16_qps, "recall_at_10": 0.92},
         {"index": "ivfpq", "lut_dtype": "f32", "batch": 256,
          "qps": qps, "recall_at_10": recall},
+    ], "staged_vs_fused": [
+        {"index": "ivfpq", "batch": 64, "speedup": b64_speedup},
+        {"index": "ivfpq", "batch": 256, "speedup": 3.0},
     ]}
+    if sweep:
+        doc["batch_sweep"] = [
+            {"index": "ivfpq", "batch": b, "qps": 1000} for b in (1, 64)]
     if ups is not None:
         doc["stream"] = [
             {"scenario": "stream_90_10", "index": "ivfpq",
@@ -79,3 +88,42 @@ def test_stream_gate_fails_on_stream_recall_drop():
 def test_stream_gate_fails_when_fresh_rows_vanish():
     failures, _ = check(_doc(ups=5000), _doc())
     assert any("missing the stream row" in f for f in failures)
+
+
+# --- scan-path gates (within the fresh file) ---------------------------------
+
+def test_lut_parity_gate_passes_at_floor():
+    failures, _ = check(_doc(), _doc(bf16_qps=7600, int8_qps=7600))  # 0.95x
+    assert not failures
+
+
+def test_lut_parity_gate_fails_on_slow_quantized_lut():
+    failures, _ = check(_doc(), _doc(int8_qps=7000))         # 0.875x < 0.95x
+    assert any("quantized-LUT" in f for f in failures)
+    failures, _ = check(_doc(), _doc(bf16_qps=7000))
+    assert any("quantized-LUT" in f for f in failures)
+
+
+def test_lut_parity_gate_fails_when_quantized_row_missing():
+    fresh = _doc()
+    fresh["rows"] = [r for r in fresh["rows"] if r["lut_dtype"] != "bf16"]
+    failures, _ = check(_doc(), fresh)
+    assert any("bf16" in f and "missing" in f for f in failures)
+
+
+def test_small_batch_gate_fails_below_parity():
+    failures, _ = check(_doc(), _doc(b64_speedup=0.84))      # the old number
+    assert any("small-batch regression" in f for f in failures)
+
+
+def test_small_batch_gate_passes_at_parity():
+    failures, _ = check(_doc(), _doc(b64_speedup=1.0))
+    assert not failures
+
+
+def test_batch_sweep_lost_coverage_fails():
+    failures, _ = check(_doc(), _doc(sweep=False))
+    assert any("batch_sweep" in f for f in failures)
+    # a baseline that predates the sweep does not demand it of the fresh run
+    failures, _ = check(_doc(sweep=False), _doc(sweep=False))
+    assert not failures

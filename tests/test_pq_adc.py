@@ -12,6 +12,8 @@ from repro.kernels.pq_adc import (dequantize_lut, lut_error_bound,
                                   quantize_lut)
 from repro.search.pq import build_pq, pq_search
 
+pytestmark = pytest.mark.kernels
+
 
 def _tables_codes(key, nq, n, m, kc):
     tables = jax.random.uniform(jax.random.fold_in(key, 0), (nq, m, kc))
