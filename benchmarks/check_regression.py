@@ -91,15 +91,27 @@ def check_stream(baseline: dict, fresh: dict, max_ups_drop: float = 0.25,
 
 
 def check_durability(baseline: dict, fresh: dict,
-                     max_wal_overhead: float = 0.25):
-    """Gate the WAL write-path overhead.
+                     max_wal_overhead: float = 0.25,
+                     min_gc_speedup: float = 2.0,
+                     max_inc_frac: float = 0.10):
+    """Gate the durability/replication operations numbers.
 
-    Unlike the throughput gates this one is *within-file*: the fresh bench
-    already measures WAL-off vs WAL-on upsert throughput on the same
-    machine, so the overhead fraction is hardware-independent and gated
-    directly (``wal_overhead_frac`` <= ``--max-wal-overhead``). A baseline
-    without a ``durability`` section only means the gate predates it; a
-    FRESH file without one while the baseline has it is lost coverage.
+    Unlike the throughput gates these are *within-file*: the fresh bench
+    measures each pair on the same machine in the same run, so the ratios
+    are hardware-independent and need no baseline:
+
+    * WAL write-path overhead (``wal_overhead_frac`` <=
+      ``--max-wal-overhead``),
+    * group commit: the 8-thread fsync=always burst must run >=
+      ``--min-group-commit-speedup`` faster grouped than ungrouped (the
+      coalesced fsyncs are the whole point),
+    * incremental snapshots: the delta-only link's bytes must stay <=
+      ``--max-inc-snapshot-frac`` of the full checkpoint (delta-sized,
+      not base-sized).
+
+    A baseline without a ``durability`` section (or without the newer
+    subsections) only means the gate predates it; a FRESH file missing
+    something the baseline has is lost coverage.
     """
     failures, report = [], []
     new = fresh.get("durability")
@@ -122,6 +134,39 @@ def check_durability(baseline: dict, fresh: dict,
             f"{new['upserts_per_sec_wal_off']} -> "
             f"{new['upserts_per_sec_wal_on']} ups/s "
             f"({frac:.1%} > {max_wal_overhead:.0%})")
+    base_dur = baseline.get("durability") or {}
+    gc = new.get("group_commit")
+    if gc is None:
+        if base_dur.get("group_commit") is not None:
+            failures.append("fresh bench is missing durability.group_commit")
+    else:
+        report.append(
+            f"grp commit: {gc['appends_per_sec_ungrouped']} -> "
+            f"{gc['appends_per_sec_grouped']} appends/s "
+            f"({gc['speedup']:.2f}x, floor {min_gc_speedup}x; "
+            f"fsyncs {gc['fsyncs_grouped']}/{gc['fsyncs_ungrouped']})")
+        if gc["speedup"] < min_gc_speedup:
+            failures.append(
+                f"group-commit speedup too low: {gc['speedup']:.2f}x < "
+                f"{min_gc_speedup}x on the fsync=always burst")
+    inc = new.get("incremental_snapshot")
+    if inc is None:
+        if base_dur.get("incremental_snapshot") is not None:
+            failures.append(
+                "fresh bench is missing durability.incremental_snapshot")
+    else:
+        report.append(
+            f"inc snap  : {inc['incremental_bytes']} of "
+            f"{inc['full_bytes']} bytes "
+            f"({inc['bytes_frac']:.1%}, limit {max_inc_frac:.0%}; "
+            f"base_rows={inc['base_rows']} delta_rows={inc['delta_rows']})")
+        if inc["bytes_frac"] > max_inc_frac:
+            failures.append(
+                f"incremental snapshot too large: "
+                f"{inc['incremental_bytes']} bytes is "
+                f"{inc['bytes_frac']:.1%} of the {inc['full_bytes']}-byte "
+                f"full checkpoint (> {max_inc_frac:.0%} — the delta-only "
+                "link is scaling with base rows)")
     return failures, report
 
 
@@ -187,13 +232,15 @@ def check_small_batch(baseline: dict, fresh: dict,
 def check(baseline: dict, fresh: dict, max_qps_drop: float = 0.20,
           max_recall_drop: float = 0.02, max_ups_drop: float = 0.25,
           max_wal_overhead: float = 0.25, min_lut_ratio: float = 0.95,
-          min_b64_speedup: float = 1.0):
+          min_b64_speedup: float = 1.0, min_gc_speedup: float = 2.0,
+          max_inc_frac: float = 0.10):
     """Returns (failures, report_lines); empty failures == gate passes."""
     failures, report = [], []
     sf, sr = check_stream(baseline, fresh, max_ups_drop, max_recall_drop)
     failures += sf
     report += sr
-    df, dr = check_durability(baseline, fresh, max_wal_overhead)
+    df, dr = check_durability(baseline, fresh, max_wal_overhead,
+                              min_gc_speedup, max_inc_frac)
     failures += df
     report += dr
     lf, lr = check_lut_parity(fresh, min_lut_ratio)
@@ -251,6 +298,14 @@ def main(argv=None) -> int:
     ap.add_argument("--min-b64-speedup", type=float, default=1.0,
                     help="min batch-64 fused-vs-staged speedup (within the "
                          "fresh file; default 1.0)")
+    ap.add_argument("--min-group-commit-speedup", type=float, default=2.0,
+                    help="min grouped-vs-ungrouped speedup on the 8-thread "
+                         "fsync=always burst (within the fresh file; "
+                         "default 2.0)")
+    ap.add_argument("--max-inc-snapshot-frac", type=float, default=0.10,
+                    help="max incremental-snapshot bytes as a fraction of "
+                         "the full checkpoint (within the fresh file; "
+                         "default 0.10)")
     args = ap.parse_args(argv)
     with open(args.baseline) as f:
         baseline = json.load(f)
@@ -259,7 +314,9 @@ def main(argv=None) -> int:
     failures, report = check(baseline, fresh, args.max_qps_drop,
                              args.max_recall_drop, args.max_ups_drop,
                              args.max_wal_overhead, args.min_lut_qps_ratio,
-                             args.min_b64_speedup)
+                             args.min_b64_speedup,
+                             args.min_group_commit_speedup,
+                             args.max_inc_snapshot_frac)
     for line in report:
         print(line)
     if failures:

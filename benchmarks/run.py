@@ -481,10 +481,13 @@ def bench_durability(rows, json_doc=None, fast=False):
     import shutil
     import tempfile
 
+    import threading
+
     import numpy as np
 
     from repro.search import (DurabilityConfig, SearchEngine, ServeConfig,
-                              StreamConfig, load_engine)
+                              StreamConfig, Wal, load_engine)
+    from repro.search.durability.wal import RT_UPSERT, encode_upsert
     n, dim = (4096, 128) if fast else (16384, 128)
     wb = 256
     key = jax.random.key(0)
@@ -592,6 +595,63 @@ def bench_durability(rows, json_doc=None, fast=False):
                      f"baseline_p50={p50_base:.0f}us "
                      f"blocking_stall={stall_ms:.0f}ms "
                      f"samples={len(bg_ts)}"))
+
+        # --- group commit: concurrent fsync=always burst ------------------
+        # 8 writer threads of durable appends, grouped vs one-fsync-per-
+        # record: grouping coalesces the burst into shared commits (the
+        # regression gate asks >=2x). WAL-layer only — the fsync is the
+        # entire cost, so engine programs would just add noise.
+        gc_threads, gc_per = 8, (12 if fast else 24)
+        payload = encode_upsert(np.arange(32, dtype=np.int32),
+                                rng.randn(32, dim).astype(np.float32))
+
+        def burst(wal):
+            def writer():
+                for _ in range(gc_per):
+                    wal.append(RT_UPSERT, payload)
+            ths = [threading.Thread(target=writer)
+                   for _ in range(gc_threads)]
+            t0 = time.perf_counter()
+            for t in ths:
+                t.start()
+            for t in ths:
+                t.join()
+            dt = time.perf_counter() - t0
+            fsyncs = wal.stats()["fsyncs"]
+            wal.close()
+            return gc_threads * gc_per / dt, fsyncs
+
+        aps_off, fs_off = burst(Wal(os.path.join(work, "gc_off"),
+                                    DurabilityConfig(fsync="always")))
+        aps_on, fs_on = burst(Wal(
+            os.path.join(work, "gc_on"),
+            DurabilityConfig(fsync="always", group_commit_ms=2.0)))
+        gc_speedup = aps_on / aps_off
+        rows.append(("durability_group_commit", 0.0,
+                     f"grouped={aps_on:.0f}aps ungrouped={aps_off:.0f}aps "
+                     f"speedup={gc_speedup:.2f}x fsyncs={fs_on}/{fs_off}"))
+
+        # --- incremental vs full snapshot ---------------------------------
+        # a small-delta engine (cap 512): the incremental link carries the
+        # delta state only, so its bytes must not scale with base rows
+        inc_dir = os.path.join(work, "inc")
+        eng = mk(delta_capacity=512).durable(
+            inc_dir, DurabilityConfig(fsync="batch"))
+        t0 = time.perf_counter()
+        full_bytes = os.path.getsize(eng.save(inc_dir))
+        full_s = time.perf_counter() - t0
+        d_rows = 256
+        eng.upsert(np.arange(6 * n, 6 * n + d_rows),
+                   rng.randn(d_rows, dim).astype(np.float32))
+        jax.block_until_ready(eng.store.delta_count)
+        t0 = time.perf_counter()
+        inc_bytes = os.path.getsize(eng.save(inc_dir, incremental=True))
+        inc_s = time.perf_counter() - t0
+        inc_frac = inc_bytes / full_bytes
+        rows.append(("durability_inc_snapshot", inc_s * 1e6,
+                     f"base_rows={n} delta_rows={d_rows} "
+                     f"bytes={inc_bytes} full_bytes={full_bytes} "
+                     f"frac={inc_frac:.3f} full_s={full_s:.2f}"))
         if json_doc is not None:
             json_doc["durability"] = dict(
                 upserts_per_sec_wal_off=round(off),
@@ -602,7 +662,19 @@ def bench_durability(rows, json_doc=None, fast=False):
                 recovery_rows_per_sec=round(r_rows / rec_s),
                 search_p50_us_during_bg_compact=round(p50_bg, 1),
                 search_p50_us_baseline=round(p50_base, 1),
-                blocking_compact_stall_ms=round(stall_ms, 1))
+                blocking_compact_stall_ms=round(stall_ms, 1),
+                group_commit=dict(
+                    appends_per_sec_grouped=round(aps_on),
+                    appends_per_sec_ungrouped=round(aps_off),
+                    speedup=round(gc_speedup, 2),
+                    fsyncs_grouped=fs_on, fsyncs_ungrouped=fs_off,
+                    records=gc_threads * gc_per),
+                incremental_snapshot=dict(
+                    base_rows=n, delta_rows=d_rows,
+                    full_bytes=full_bytes, incremental_bytes=inc_bytes,
+                    bytes_frac=round(inc_frac, 4),
+                    full_seconds=round(full_s, 3),
+                    incremental_seconds=round(inc_s, 3)))
     finally:
         shutil.rmtree(work, ignore_errors=True)
 

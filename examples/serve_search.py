@@ -159,7 +159,7 @@ def main():
         _, ids_live = eng_s.search(queries[:nb], 1)
         _, ids_rec = eng_d.search(queries[:nb], 1)
         wal_equal = bool(jnp.all(ids_rec == ids_live))
-        replayed = eng_d.stats()["wal"]["replayed"]
+        replayed = eng_d.metrics().wal.replayed
 
     rec = float(recall_at_k(ids, truth))
     rec_pq = float(recall_at_k(ids_pq, truth))

@@ -13,9 +13,15 @@ serving.
 
 Durable streaming: ``--stream --durable DIR`` snapshots the engine to DIR
 and write-ahead-logs every mutation (``--fsync`` picks the durability/
-throughput trade-off), then serves from the crash-recovered engine;
+throughput trade-off; ``--group-commit-ms`` coalesces ``--fsync always``
+bursts into shared fsyncs), then serves from the crash-recovered engine;
 ``--background-compact`` folds the delta on a worker thread instead of
 blocking searches.
+
+Observability: ``--metrics-port N`` serves the engine's typed metrics
+snapshot (``SearchEngine.metrics()``) from a stdlib http.server thread —
+``GET /metrics`` is Prometheus text, ``GET /metrics.json`` the flattened
+JSON (port 0 binds an ephemeral port and prints it).
 
 Sharded serving: ``--shards N`` partitions the engine state over an N-way
 data mesh (``--mesh host`` simulates the N devices on CPU — useful for
@@ -95,6 +101,15 @@ def _parse_args():
     ap.add_argument("--background-compact", action="store_true",
                     help="--stream: fold the delta on a worker thread and "
                          "swap atomically instead of blocking searches")
+    ap.add_argument("--group-commit-ms", type=float, default=0.0,
+                    help="--durable --fsync always: coalesce concurrent "
+                         "WAL appends into shared fsyncs, waiting at most "
+                         "this long to gather a batch (0 = one fsync per "
+                         "record)")
+    ap.add_argument("--metrics-port", type=int, default=None, metavar="PORT",
+                    help="serve SearchEngine.metrics() over HTTP from a "
+                         "background thread: /metrics (Prometheus text), "
+                         "/metrics.json (JSON); 0 = ephemeral port")
     return ap.parse_args()
 
 
@@ -154,13 +169,17 @@ def main():
     if args.durable:
         from repro.search import DurabilityConfig
         t0 = time.time()
-        engine.durable(args.durable, DurabilityConfig(fsync=args.fsync))
+        engine.durable(args.durable, DurabilityConfig(
+            fsync=args.fsync, group_commit_ms=args.group_commit_ms))
         # reopen through the recovery path so the launcher exercises the
         # same snapshot+replay an operator would see after a crash
         engine = load_engine(args.durable)
         print(f"durable via {args.durable} in {time.time()-t0:.1f}s "
-              f"(fsync={args.fsync}; every write WAL-logged, served from "
-              "the recovered engine)")
+              f"(fsync={args.fsync}"
+              + (f", group_commit_ms={args.group_commit_ms}"
+                 if args.group_commit_ms else "")
+              + "; every write WAL-logged, served from the recovered "
+              "engine)")
     if args.snapshot_dir:
         t0 = time.time()
         engine.save(args.snapshot_dir)
@@ -174,6 +193,12 @@ def main():
               f"({args.corpus} rows -> ~{-(-args.corpus // args.shards)} "
               "per shard"
               + (", dense state donated" if args.donate else "") + ")")
+    metrics_srv = None
+    if args.metrics_port is not None:
+        from repro.search import MetricsServer
+        metrics_srv = MetricsServer(engine, port=args.metrics_port)
+        print(f"metrics at {metrics_srv.url} (Prometheus text; "
+              f"/metrics.json for JSON)")
 
     total, rec_sum = 0.0, 0.0
     write_s, rows_written = 0.0, 0
@@ -218,13 +243,24 @@ def main():
         engine.compact()
         print(f"final compact: {time.time()-t0:.2f}s "
               f"(base rows={int(engine.store.n_rows)})")
-        st = engine.stats()
-        if "wal" in st:
-            wal, mnt = st["wal"], st["maintenance"]
-            print(f"wal: {wal['records']} records / {wal['bytes']} bytes / "
-                  f"{wal['fsyncs']} fsyncs, {wal['replayed']} replayed; "
-                  f"compactions={mnt['compactions']} "
-                  f"vacuums={mnt['vacuums']} rebuilds={mnt['rebuilds']}")
+        m = engine.metrics()
+        if m.wal is not None:
+            print(f"wal: {m.wal.records} records / {m.wal.bytes} bytes / "
+                  f"{m.wal.fsyncs} fsyncs"
+                  + (f" ({m.wal.group_commits} group commits)"
+                     if m.wal.group_commits else "")
+                  + f", {m.wal.replayed} replayed; "
+                  f"compactions={m.compact.compactions} "
+                  f"vacuums={m.compact.vacuums} "
+                  f"rebuilds={m.compact.rebuilds}")
+    if metrics_srv is not None:
+        import urllib.request
+        with urllib.request.urlopen(metrics_srv.url, timeout=5) as r:
+            sample = r.read().decode().splitlines()
+        print("sample scrape (/metrics):")
+        for line in sample[:8]:
+            print(f"  {line}")
+        metrics_srv.close()
 
 
 if __name__ == "__main__":

@@ -17,8 +17,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["save_checkpoint", "restore_checkpoint", "latest_checkpoint",
-           "restore_resharded", "checkpoint_step"]
+__all__ = ["save_checkpoint", "save_arrays", "restore_checkpoint",
+           "latest_checkpoint", "restore_resharded", "checkpoint_step"]
 
 _STEP_RE = re.compile(r"ckpt_(\d+)\.npz$")
 
@@ -29,14 +29,18 @@ def _flatten(tree) -> dict:
             for path, leaf in flat}
 
 
-def save_checkpoint(ckpt_dir: str, step: int, state: Any,
-                    keep: int = 3) -> str:
+def save_arrays(ckpt_dir: str, step: int, arrays: dict,
+                keep: int = 3, protect=()) -> str:
+    """Write an already-flattened ``{keypath: array}`` mapping as one
+    checkpoint file (same atomic commit + retention as
+    ``save_checkpoint``). ``protect`` names checkpoint basenames
+    retention must never unlink — e.g. the full base an incremental
+    snapshot chain still references."""
     os.makedirs(ckpt_dir, exist_ok=True)
-    flat = _flatten(state)
     fd, tmp = tempfile.mkstemp(dir=ckpt_dir, suffix=".tmp")
     try:
         with os.fdopen(fd, "wb") as f:
-            np.savez(f, **flat)
+            np.savez(f, **arrays)
             f.flush()
             os.fsync(f.fileno())                 # bytes down before the name
         final = os.path.join(ckpt_dir, f"ckpt_{step:010d}.npz")
@@ -44,15 +48,23 @@ def save_checkpoint(ckpt_dir: str, step: int, state: Any,
     finally:
         if os.path.exists(tmp):
             os.unlink(tmp)
-    _apply_retention(ckpt_dir, keep)
+    _apply_retention(ckpt_dir, keep, protect=protect)
     return final
 
 
-def _apply_retention(ckpt_dir: str, keep: int):
+def save_checkpoint(ckpt_dir: str, step: int, state: Any,
+                    keep: int = 3, protect=()) -> str:
+    return save_arrays(ckpt_dir, step, _flatten(state), keep=keep,
+                       protect=protect)
+
+
+def _apply_retention(ckpt_dir: str, keep: int, protect=()):
+    protect = frozenset(protect)
     ckpts = sorted(
         f for f in os.listdir(ckpt_dir) if _STEP_RE.search(f))
     for f in ckpts[:-keep] if keep else []:
-        os.unlink(os.path.join(ckpt_dir, f))
+        if f not in protect:
+            os.unlink(os.path.join(ckpt_dir, f))
 
 
 def latest_checkpoint(ckpt_dir: str) -> Optional[str]:
@@ -67,27 +79,39 @@ def checkpoint_step(path: str) -> int:
     return int(m.group(1)) if m else -1
 
 
-def restore_checkpoint(path: str, template: Any) -> Any:
-    """Restore into the structure of ``template`` (shapes must match)."""
+def restore_checkpoint(path: str, template: Any,
+                       overlay: Optional[str] = None) -> Any:
+    """Restore into the structure of ``template`` (shapes must match).
+
+    ``overlay`` names a second (delta) checkpoint whose keys win over
+    ``path`` — how an incremental snapshot chain resolves: base arrays
+    from the full checkpoint, the delta/tombstone/id-map arrays from the
+    newest incremental."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+    over = {}
+    if overlay is not None:
+        with np.load(overlay) as d:
+            over = {k: d[k] for k in d.files}
     with np.load(path) as data:
-        flat, treedef = jax.tree_util.tree_flatten_with_path(template)
         leaves = []
         for kpath, leaf in flat:
-            arr = data[jax.tree_util.keystr(kpath)]
+            key = jax.tree_util.keystr(kpath)
+            arr = over[key] if key in over else data[key]
             if tuple(arr.shape) != tuple(leaf.shape):
                 raise ValueError(
-                    f"shape mismatch at {jax.tree_util.keystr(kpath)}: "
+                    f"shape mismatch at {key}: "
                     f"ckpt {arr.shape} vs template {leaf.shape}")
             leaves.append(jnp.asarray(arr, leaf.dtype))
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
-def restore_resharded(path: str, template: Any, shardings: Any) -> Any:
+def restore_resharded(path: str, template: Any, shardings: Any,
+                      overlay: Optional[str] = None) -> Any:
     """Restore onto a (possibly different) mesh: elastic scaling.
 
     ``shardings`` is a pytree of NamedSharding congruent with ``template``;
     each leaf is device_put directly to its target sharding, so restore on
     2x fewer/more hosts needs no conversion step.
     """
-    state = restore_checkpoint(path, template)
+    state = restore_checkpoint(path, template, overlay=overlay)
     return jax.tree.map(jax.device_put, state, shardings)

@@ -2,8 +2,10 @@
 PQ / IVF-PQ ANN indexes, the composable index-spec API (pipeline specs +
 the tagged index union + ops registry), the batched serving engine that
 integrates MPAD reduction, the streaming (mutable) layer on top of it,
-snapshot persistence, and the durability subsystem (write-ahead log,
-crash recovery, maintenance policy)."""
+snapshot persistence, the durability subsystem (write-ahead log, crash
+recovery, maintenance policy), the replication layer (WAL shipping +
+follower catch-up, incremental snapshot chains, group commit), and the
+typed metrics/observability surface."""
 from .knn import (knn_search, knn_search_blocked, masked_topk, recall_at_k,
                   amk_accuracy)
 from .ivf import (IVFIndex, balance_cells, build_ivf, cell_vectors,
@@ -23,8 +25,15 @@ from .serve import (EngineState, INDEX_KINDS, SearchEngine, ServeConfig,
 from .snapshot import load_engine, save_engine
 from .stream import (StreamReplica, replica_from_store,
                      sharded_stream_search_fn, stream_search_fn)
-from .durability import (Decision, DurabilityConfig, MaintenancePolicy,
-                         PolicyConfig, ReplayStats, Wal, WalError, replay)
+from .durability import (CatchUpStats, Decision, DivergenceError,
+                         DurabilityConfig, LocalDirSource, MaintenancePolicy,
+                         PolicyConfig, ReplayStats, ReplicationError, Wal,
+                         WalError, WalSource, catch_up, replay,
+                         replay_records, seed_follower)
+from .metrics import (CompactMetrics, EngineInfo, EngineMetrics,
+                      MetricsServer, PolicyMetrics, ReplicationMetrics,
+                      SnapshotMetrics, StreamMetrics, WalMetrics,
+                      collect_metrics, render_prometheus)
 
 __all__ = [
     "knn_search", "knn_search_blocked", "masked_topk", "recall_at_k",
@@ -48,5 +57,13 @@ __all__ = [
     "sharded_stream_search_fn",
     # durability: WAL + crash recovery + maintenance policy
     "DurabilityConfig", "Wal", "WalError", "replay", "ReplayStats",
+    "replay_records",
     "PolicyConfig", "MaintenancePolicy", "Decision",
+    # replication: WAL shipping + follower catch-up
+    "ReplicationError", "DivergenceError", "WalSource", "LocalDirSource",
+    "CatchUpStats", "catch_up", "seed_follower",
+    # typed metrics / observability
+    "EngineMetrics", "EngineInfo", "StreamMetrics", "CompactMetrics",
+    "PolicyMetrics", "WalMetrics", "SnapshotMetrics", "ReplicationMetrics",
+    "collect_metrics", "render_prometheus", "MetricsServer",
 ]

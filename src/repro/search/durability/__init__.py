@@ -14,18 +14,27 @@ Three pieces wire through the engine lifecycle
   fill, capacity headroom, and PQ encode-error drift, and decides
   between compact / vacuum / grow / quantizer rebuild; decisions are
   WAL records too, so recovery replays maintenance deterministically.
+* ``replication`` — WAL shipping: a primary's log segments move through
+  a ``WalSource`` transport; a follower seeded from any snapshot calls
+  ``catch_up`` repeatedly to tail them (divergence — a seq gap or
+  mid-stream CRC failure — raises ``DivergenceError``: re-seed).
 """
 from .policy import Decision, MaintenancePolicy, PolicyConfig
-from .recovery import ReplayStats, replay
+from .recovery import ReplayStats, replay, replay_records
+from .replication import (CatchUpStats, DivergenceError, LocalDirSource,
+                          ReplicationError, WalSource, catch_up,
+                          seed_follower)
 from .wal import (DurabilityConfig, Wal, WalError, decode_delete,
                   decode_policy, decode_upsert, encode_delete, encode_policy,
-                  encode_upsert, iter_records, wal_tail_seq)
+                  encode_upsert, iter_frames, iter_records, wal_tail_seq)
 
 __all__ = [
     "DurabilityConfig", "Wal", "WalError",
-    "iter_records", "wal_tail_seq",
+    "iter_frames", "iter_records", "wal_tail_seq",
     "encode_upsert", "decode_upsert", "encode_delete", "decode_delete",
     "encode_policy", "decode_policy",
     "PolicyConfig", "MaintenancePolicy", "Decision",
-    "ReplayStats", "replay",
+    "ReplayStats", "replay", "replay_records",
+    "ReplicationError", "DivergenceError", "WalSource", "LocalDirSource",
+    "CatchUpStats", "catch_up", "seed_follower",
 ]

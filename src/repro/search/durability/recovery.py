@@ -22,12 +22,12 @@ import dataclasses
 from .wal import (RT_COMPACT, RT_DELETE, RT_POLICY, RT_SNAPSHOT, RT_UPSERT,
                   decode_delete, decode_policy, decode_upsert, iter_records)
 
-__all__ = ["ReplayStats", "replay"]
+__all__ = ["ReplayStats", "replay", "replay_records"]
 
 
 @dataclasses.dataclass
 class ReplayStats:
-    """What one recovery pass applied (``SearchEngine.stats()`` keeps
+    """What one recovery pass applied (``SearchEngine.metrics()`` keeps
     the record count as ``wal.replayed``)."""
     records: int = 0
     upserts: int = 0
@@ -38,17 +38,21 @@ class ReplayStats:
     last_seq: int = -1
 
 
-def replay(engine, wal_dir: str, after_seq: int = -1) -> ReplayStats:
-    """Apply every WAL record with ``seq > after_seq`` to ``engine``.
+def replay_records(engine, records, stats: ReplayStats = None) -> ReplayStats:
+    """Apply an ordered iterable of ``(seq, rtype, payload)`` records to
+    ``engine`` — the shared apply loop under local crash recovery
+    (records read from the engine's own WAL directory) and follower
+    catch-up (records shipped from a primary through a transport).
 
-    ``engine`` is a streaming ``SearchEngine`` restored from the
-    snapshot the log tail extends. Stops cleanly at a torn tail (the
-    crash artifact); raises ``WalError`` on mid-log corruption.
+    Runs with the engine's ``_replaying`` flag up: WAL appends and
+    policy auto-decisions stay off, and RT_COMPACT / RT_POLICY barriers
+    are re-folded through the engine's own write programs — a follower
+    never copies folded arrays, it re-derives them deterministically.
     """
-    stats = ReplayStats(last_seq=after_seq)
+    stats = stats or ReplayStats()
     engine._replaying = True
     try:
-        for seq, rtype, payload in iter_records(wal_dir, after=after_seq):
+        for seq, rtype, payload in records:
             if rtype == RT_UPSERT:
                 ids, vectors = decode_upsert(payload)
                 engine.upsert(ids, vectors)
@@ -72,3 +76,15 @@ def replay(engine, wal_dir: str, after_seq: int = -1) -> ReplayStats:
     finally:
         engine._replaying = False
     return stats
+
+
+def replay(engine, wal_dir: str, after_seq: int = -1) -> ReplayStats:
+    """Apply every WAL record with ``seq > after_seq`` to ``engine``.
+
+    ``engine`` is a streaming ``SearchEngine`` restored from the
+    snapshot the log tail extends. Stops cleanly at a torn tail (the
+    crash artifact); raises ``WalError`` on mid-log corruption.
+    """
+    stats = ReplayStats(last_seq=after_seq)
+    return replay_records(engine, iter_records(wal_dir, after=after_seq),
+                          stats)

@@ -39,6 +39,14 @@ record (strict durability), ``"batch"`` flushes per record to the OS
 and fsyncs at rotation/snapshot/close (crash-of-process safe, loses the
 page cache on power loss), ``"never"`` leaves flushing to the runtime
 (benchmark / bulk-load mode).
+
+Group commit (``DurabilityConfig.group_commit_ms > 0``, requires
+``fsync="always"``): appends enqueue onto a dedicated commit thread that
+coalesces every record written while the previous fsync was in flight —
+plus a bounded ``group_commit_ms`` gathering window — into ONE fsync.
+``append`` still returns only after its covering sync (the strict
+durability contract holds); concurrent writers just share the disk
+flush instead of serializing one fsync per record.
 """
 from __future__ import annotations
 
@@ -46,6 +54,8 @@ import dataclasses
 import json
 import os
 import struct
+import threading
+import time
 import zlib
 from typing import Iterator, List, Optional, Tuple
 
@@ -56,7 +66,7 @@ __all__ = ["DurabilityConfig", "Wal", "WalError",
            "RT_POLICY",
            "encode_upsert", "decode_upsert", "encode_delete",
            "decode_delete", "encode_policy", "decode_policy",
-           "iter_records", "wal_tail_seq"]
+           "iter_frames", "iter_records", "wal_tail_seq"]
 
 RT_UPSERT = 1
 RT_DELETE = 2
@@ -71,6 +81,7 @@ _FRAME_MIN = _CRC.size + _HEAD.size
 _UPS_HDR = struct.Struct("<II")      # batch, dim
 
 _FSYNC_MODES = ("always", "batch", "never")
+_ROLES = ("primary", "follower")
 
 
 class WalError(RuntimeError):
@@ -80,9 +91,22 @@ class WalError(RuntimeError):
 
 @dataclasses.dataclass(frozen=True)
 class DurabilityConfig:
-    """Write-ahead-log knobs (``SearchEngine.durable``)."""
+    """Write-ahead-log + replication-role knobs (``SearchEngine.durable``).
+
+    ``role`` declares what this node is: a ``"primary"`` owns a local
+    WAL and accepts writes; a ``"follower"`` tails a primary's shipped
+    log (``repro.search.durability.replication``) and never opens a
+    local WAL — ``SearchEngine.durable`` rejects the combination.
+    ``group_commit_ms`` > 0 turns on group commit (see module docs);
+    it bounds the extra latency one append may wait to share its fsync
+    with neighbors, and only makes sense under ``fsync="always"`` —
+    the other modes never fsync per record, so there is nothing to
+    coalesce and the config is rejected as incoherent.
+    """
     fsync: str = "batch"             # "always" | "batch" | "never"
     segment_bytes: int = 4 * 1024 * 1024   # rotate segments near this size
+    role: str = "primary"            # "primary" | "follower"
+    group_commit_ms: float = 0.0     # > 0: coalesce fsyncs (fsync="always")
 
     def __post_init__(self):
         if self.fsync not in _FSYNC_MODES:
@@ -91,6 +115,18 @@ class DurabilityConfig:
                 f"{_FSYNC_MODES}")
         if self.segment_bytes < len(_MAGIC) + _FRAME_MIN:
             raise ValueError("segment_bytes too small to hold one record")
+        if self.role not in _ROLES:
+            raise ValueError(
+                f"unknown role {self.role!r}; expected one of {_ROLES}")
+        if self.group_commit_ms < 0:
+            raise ValueError("group_commit_ms must be >= 0")
+        if self.group_commit_ms > 0 and self.fsync != "always":
+            raise ValueError(
+                f"group_commit_ms={self.group_commit_ms} is incoherent with "
+                f"fsync={self.fsync!r}: group commit coalesces the per-record "
+                "fsyncs of fsync='always'; the other modes never fsync per "
+                "record. Use DurabilityConfig(fsync='always', "
+                "group_commit_ms=...) or drop group_commit_ms.")
 
 
 # --- record payload codecs ---------------------------------------------------
@@ -155,16 +191,17 @@ def _list_segments(directory: str) -> List[Tuple[int, str]]:
     return sorted(segs)
 
 
-def _read_segment(path: str, *, is_last: bool):
-    """Yield (seq, rtype, payload, end_offset) frames of one segment.
+def iter_frames(data: bytes, *, is_last: bool, name: str = "<bytes>"):
+    """Yield (seq, rtype, payload, end_offset) frames of one segment's
+    bytes — the shared parser under local recovery (``_read_segment``)
+    and WAL shipping (a transport fetches segment *bytes*; the follower
+    parses them with exactly the reader the primary would use).
 
     A bad/half frame ends iteration when ``is_last`` (torn tail, the
     expected crash artifact) and raises ``WalError`` otherwise.
     """
-    with open(path, "rb") as f:
-        data = f.read()
     if data[:len(_MAGIC)] != _MAGIC:
-        raise WalError(f"bad segment magic in {path!r}")
+        raise WalError(f"bad segment magic in {name!r}")
     off = len(_MAGIC)
     while off < len(data):
         frame_ok = False
@@ -180,9 +217,16 @@ def _read_segment(path: str, *, is_last: bool):
             if is_last:
                 return                      # torn tail: stop at last good
             raise WalError(
-                f"corrupt WAL frame at {path!r}+{off} (not the log tail)")
+                f"corrupt WAL frame at {name!r}+{off} (not the log tail)")
         yield seq, rtype, payload, end
         off = end
+
+
+def _read_segment(path: str, *, is_last: bool):
+    """``iter_frames`` over one on-disk segment file."""
+    with open(path, "rb") as f:
+        data = f.read()
+    yield from iter_frames(data, is_last=is_last, name=path)
 
 
 def iter_records(directory: str, after: int = -1
@@ -216,8 +260,18 @@ class Wal:
     ``resume=True`` scans the existing log, truncates a torn tail, and
     continues the sequence; the default refuses a non-empty directory
     (recover through ``load_engine`` instead of silently forking
-    history). Counters (records/bytes/fsyncs/rotations) surface through
-    ``SearchEngine.stats()``.
+    history). Counters (records/bytes/fsyncs/rotations/group_commits)
+    surface through ``SearchEngine.metrics()``.
+
+    The writer is thread-safe: concurrent ``append`` calls serialize on
+    an internal lock, and with ``group_commit_ms`` > 0 they share fsyncs
+    through the commit thread instead of each paying one.
+
+    ``floor_seq``: chained incremental snapshots reference a *base*
+    manifest whose WAL position pins how far history may be truncated —
+    a follower re-seeded from the base artifact still needs every record
+    past the base's ``wal_seq``. ``pin_floor`` records that bound and
+    ``truncate`` clamps to it.
     """
 
     def __init__(self, directory: str, config: DurabilityConfig = None, *,
@@ -225,9 +279,15 @@ class Wal:
         self.directory = directory
         self.config = config or DurabilityConfig()
         self.counters = {"records": 0, "bytes": 0, "fsyncs": 0,
-                         "rotations": 0}
+                         "rotations": 0, "group_commits": 0}
         self.last_seq = -1
+        self.floor_seq: Optional[int] = None
         self._f = None
+        self._mu = threading.Lock()
+        self._cv = threading.Condition(self._mu)
+        self._durable_seq = -1          # group mode: last fsync-covered seq
+        self._closing = False
+        self._committer: Optional[threading.Thread] = None
         os.makedirs(directory, exist_ok=True)
         segs = _list_segments(directory)
         if segs and not resume:
@@ -239,6 +299,16 @@ class Wal:
             self._resume(segs)
         else:
             self._open_segment(0)
+        self._durable_seq = self.last_seq
+        if self.config.group_commit_ms > 0:
+            self._committer = threading.Thread(
+                target=self._commit_loop, name="wal-group-commit",
+                daemon=True)
+            self._committer.start()
+
+    @property
+    def _grouped(self) -> bool:
+        return self._committer is not None
 
     def _resume(self, segs):
         first, path = segs[-1]
@@ -267,54 +337,132 @@ class Wal:
         os.fsync(self._f.fileno())
         self.counters["fsyncs"] += 1
 
-    def append(self, rtype: int, payload: bytes = b"") -> int:
+    def _commit_loop(self):
+        """Group-commit thread: one fsync covers every record appended
+        before it runs (records keep arriving while the previous fsync
+        is in flight — that disk time IS the natural batching window;
+        ``group_commit_ms`` adds a bounded extra gather)."""
+        window_s = self.config.group_commit_ms / 1e3
+        while True:
+            with self._cv:
+                while self.last_seq <= self._durable_seq and not self._closing:
+                    self._cv.wait()
+                if self._f is None or (self._closing
+                                       and self.last_seq <= self._durable_seq):
+                    self._cv.notify_all()
+                    return
+            if window_s > 0 and not self._closing:
+                time.sleep(window_s)        # bounded coalescing wait
+            with self._cv:
+                if self._f is None:
+                    self._cv.notify_all()
+                    return
+                target = self.last_seq
+                if target > self._durable_seq:
+                    self._sync_file()
+                    self.counters["group_commits"] += 1
+                    self._durable_seq = target
+                self._cv.notify_all()
+
+    def append(self, rtype: int, payload: bytes = b"", *,
+               wait: bool = True) -> int:
         """Append one record; returns its seq. Durability per the
-        configured fsync mode."""
-        if self._f is None:
-            raise RuntimeError("WAL is closed")
-        seq = self.last_seq + 1
-        head = _HEAD.pack(len(payload), seq, rtype)
-        frame = _CRC.pack(zlib.crc32(head + payload)) + head + payload
-        if (self._f.tell() + len(frame) > self.config.segment_bytes
-                and self._f.tell() > len(_MAGIC)):
-            self._sync_file()
-            self._f.close()
-            self._open_segment(seq)
-            self.counters["rotations"] += 1
-        self._f.write(frame)
-        if self.config.fsync == "always":
-            self._sync_file()
-        elif self.config.fsync == "batch":
-            self._f.flush()
-        self.last_seq = seq
-        self.counters["records"] += 1
-        self.counters["bytes"] += len(frame)
+        configured fsync mode; under group commit the call returns after
+        the fsync covering this record (``wait=False`` defers that to a
+        later ``wait_durable`` — for multi-record batches that only need
+        one durability point at the end)."""
+        with self._cv:
+            if self._f is None:
+                raise RuntimeError("WAL is closed")
+            seq = self.last_seq + 1
+            head = _HEAD.pack(len(payload), seq, rtype)
+            frame = _CRC.pack(zlib.crc32(head + payload)) + head + payload
+            if (self._f.tell() + len(frame) > self.config.segment_bytes
+                    and self._f.tell() > len(_MAGIC)):
+                self._sync_file()
+                self._f.close()
+                self._open_segment(seq)
+                self.counters["rotations"] += 1
+                self._durable_seq = seq - 1   # rotation synced everything
+            self._f.write(frame)
+            if self.config.fsync == "always":
+                if self._grouped:
+                    # Make the bytes visible to same-host readers now;
+                    # the commit thread owns the (expensive) fsync.
+                    self._f.flush()
+                    self._cv.notify_all()
+                else:
+                    self._sync_file()
+                    self._durable_seq = seq
+            elif self.config.fsync == "batch":
+                self._f.flush()
+            self.last_seq = seq
+            self.counters["records"] += 1
+            self.counters["bytes"] += len(frame)
+        if wait:
+            self.wait_durable(seq)
         return seq
+
+    def wait_durable(self, seq: Optional[int] = None):
+        """Block until record ``seq`` (default: the last appended) is
+        covered by an fsync. No-op outside group-commit mode — the other
+        fsync modes resolve durability inside ``append`` itself."""
+        if not self._grouped:
+            return
+        with self._cv:
+            target = self.last_seq if seq is None else seq
+            while self._durable_seq < target and self._f is not None:
+                self._cv.wait(timeout=1.0)
 
     def sync(self):
         """Force the appended records to disk (snapshot barrier)."""
-        if self._f is not None:
-            self._sync_file()
+        with self._cv:
+            if self._f is not None:
+                self._sync_file()
+                self._durable_seq = self.last_seq
+                self._cv.notify_all()
+
+    def pin_floor(self, seq: Optional[int]):
+        """Pin the truncation floor: records with ``seq > floor`` must
+        stay on disk (the newest *base* snapshot manifest still
+        references them). ``None`` lifts the pin."""
+        self.floor_seq = seq
 
     def truncate(self, upto_seq: int):
         """Unlink segments whose every record has ``seq <= upto_seq``
-        (history covered by a durable snapshot). The open segment always
-        survives."""
-        segs = _list_segments(self.directory)
-        for i, (first, path) in enumerate(segs):
-            nxt = segs[i + 1][0] if i + 1 < len(segs) else None
-            if path != self._path and nxt is not None and nxt - 1 <= upto_seq:
-                os.unlink(path)
+        (history covered by a durable snapshot), clamped to the pinned
+        ``floor_seq``. The open segment always survives."""
+        if self.floor_seq is not None:
+            upto_seq = min(upto_seq, self.floor_seq)
+        with self._mu:
+            segs = _list_segments(self.directory)
+            for i, (first, path) in enumerate(segs):
+                nxt = segs[i + 1][0] if i + 1 < len(segs) else None
+                if (path != self._path and nxt is not None
+                        and nxt - 1 <= upto_seq):
+                    os.unlink(path)
 
     def close(self):
-        if self._f is not None:
-            if self.config.fsync != "never":
-                self._sync_file()
-            self._f.close()
-            self._f = None
+        if self._committer is not None:
+            with self._cv:
+                self._closing = True
+                self._cv.notify_all()
+            self._committer.join()
+            self._committer = None
+        with self._cv:
+            if self._f is not None:
+                if self.config.fsync != "never":
+                    self._sync_file()
+                    self._durable_seq = self.last_seq
+                self._f.close()
+                self._f = None
+            self._cv.notify_all()
 
     def stats(self) -> dict:
-        """Counters + positions for ``SearchEngine.stats()``."""
+        """Counters + positions for ``SearchEngine.metrics()``."""
         return dict(self.counters, last_seq=self.last_seq,
+                    durable_seq=self._durable_seq,
+                    floor_seq=-1 if self.floor_seq is None else self.floor_seq,
                     segments=len(_list_segments(self.directory)),
-                    fsync=self.config.fsync)
+                    fsync=self.config.fsync,
+                    group_commit_ms=self.config.group_commit_ms)

@@ -668,6 +668,23 @@ class SearchEngine:
         self._durability = None      # its DurabilityConfig
         self._durable_dir = None     # snapshot+wal directory
         self._replayed = 0           # records applied by recovery
+        # replication (repro.search.durability.replication)
+        self._role = "primary"       # "follower" engines tail a shipped
+        #                              WAL and reject local writes
+        self._applied_seq = -1       # last WAL seq reflected in the store
+        #                              (snapshot position + replay/catch-up)
+        self._repl_catch_ups = 0     # catch_up passes completed
+        self._repl_records = 0       # shipped records applied
+        self._repl_source_tail = -1  # source tail at the last catch_up
+        # incremental snapshots (repro.search.snapshot)
+        self._base_ref = None        # the chain this engine can extend:
+        #                              {dir, ckpt, wal_seq, chain} of the
+        #                              newest full snapshot + incrementals
+        self._base_dirty = False     # base arrays rewritten since the base
+        #                              snapshot (compact/vacuum/rebuild/
+        #                              grow): the next save must be full
+        self._snap_counters = {"full": 0, "incremental": 0,
+                               "last_bytes": 0, "chain_depth": 0}
         self._policy = None          # MaintenancePolicy (streaming engines)
         self._policy_active = False  # auto-decisions only when the user
         #                              configured StreamConfig.policy
@@ -709,14 +726,25 @@ class SearchEngine:
         config, so query-time knob mutations are reflected)."""
         return self.config.to_spec()
 
-    def save(self, directory: str) -> str:
+    def save(self, directory: str, incremental: bool = False) -> str:
         """Snapshot the engine (spec + config + arrays) into ``directory``;
         restore with ``repro.search.load_engine``. Covers read-only and
         streaming engines (the delta segment and tombstones are saved
         as-is, so a mid-delta snapshot restores mid-delta). Returns the
-        checkpoint path."""
+        checkpoint path.
+
+        ``incremental=True`` persists only what changes between
+        snapshots of a streaming engine — the delta segment, tombstone
+        bitmap, id maps and WAL position — against the newest *full*
+        snapshot already in ``directory`` (chained manifests;
+        ``load_engine`` resolves the chain). Checkpoint cost stops
+        scaling with base size, and the result doubles as the cheap
+        re-seed artifact for followers. Requires a prior full ``save``
+        to the same directory and a base untouched since (after a
+        compaction / vacuum / rebuild / grow the next save must be
+        full); incoherent calls raise with the fix spelled out."""
         from .snapshot import save_engine
-        return save_engine(self, directory)
+        return save_engine(self, directory, incremental=incremental)
 
     @property
     def compile_count(self) -> int:
@@ -773,6 +801,13 @@ class SearchEngine:
                 "this engine is read-only; enable the write path with "
                 "engine.streaming(StreamConfig(...)) or "
                 "ServeConfig(stream=StreamConfig(...))")
+        if self._role == "follower" and not self._replaying:
+            from .durability.replication import ReplicationError
+            raise ReplicationError(
+                "this engine is a follower: its store is a replica of a "
+                "primary's WAL and local writes would fork the history. "
+                "Write to the primary and catch_up, or re-open the "
+                "snapshot without role='follower' to promote it.")
 
     def _init_stream(self):
         from .segments import make_mutable
@@ -848,13 +883,23 @@ class SearchEngine:
         if self.crash_hook is not None:
             self.crash_hook(point)
 
-    def _wal_append(self, rtype: int, payload: bytes = b""):
+    def _wal_append(self, rtype: int, payload: bytes = b"", *,
+                    wait: bool = True):
         """Log one record *before* the mutation it describes (no-op when
-        the engine is not durable or is replaying its own log)."""
+        the engine is not durable or is replaying its own log).
+        ``wait=False`` defers the group-commit durability wait — a
+        multi-chunk write batch waits once at the end
+        (``_wal_wait_durable``) instead of once per chunk."""
         if self._wal is None or self._replaying:
             return
-        self._wal.append(rtype, payload)
+        self._wal.append(rtype, payload, wait=wait)
         self._crash("wal_appended")
+
+    def _wal_wait_durable(self):
+        """Batch-end durability point for ``wait=False`` appends (no-op
+        outside group-commit mode)."""
+        if self._wal is not None and not self._replaying:
+            self._wal.wait_durable()
 
     def _pad_write(self, ids, vectors=None):
         """Pad a write batch up to its ``write_bucket`` bucket (-1 id
@@ -918,7 +963,7 @@ class SearchEngine:
             if not self._replaying:
                 self._ensure_delta_room(chunk, cap, point)
             cid, cv = ids[b:b + chunk], vectors[b:b + chunk]
-            self._wal_append(RT_UPSERT, encode_upsert(cid, cv))
+            self._wal_append(RT_UPSERT, encode_upsert(cid, cv), wait=False)
             if self._compact_future is not None:
                 # the pending fold donated a pre-begin copy; replay this
                 # write onto the folded store at the swap
@@ -931,6 +976,7 @@ class SearchEngine:
                                                  pid, pv)
             self._delta_used += chunk
             b += chunk
+        self._wal_wait_durable()     # one group-commit wait per batch
         return self
 
     def delete(self, ids: jax.Array):
@@ -991,6 +1037,7 @@ class SearchEngine:
         self._crash("compact_swap")
         self.store = store
         self._delta_used = tail_rows
+        self._base_dirty = True      # the fold rewrote the base arrays
         self.grow_count += grows
         self._counters["compactions"] += 1
         self._counters["swaps"] += 1
@@ -1117,6 +1164,7 @@ class SearchEngine:
             self._wal_append(RT_POLICY, encode_policy(
                 {"decision": "grow", **decision.params}))
             self.store = grow_store(self.store, **decision.params)
+            self._base_dirty = True
             self._counters["policy_grows"] += 1
             if self._stream_sharded_base is not None:
                 self._shard_stream_base()
@@ -1163,6 +1211,7 @@ class SearchEngine:
             jnp.asarray(ext)))
         self.store, self.frozen = store, frozen
         self._delta_used = 0
+        self._base_dirty = True
         self._counters["vacuums"] += 1
         if self._stream_sharded_base is not None:
             self._shard_stream_base()
@@ -1200,6 +1249,7 @@ class SearchEngine:
         if self._policy is not None:
             self._policy.decisions = decisions
         self._delta_used = 0
+        self._base_dirty = True
         self._counters["rebuilds"] += 1
         self._stream_programs()              # new constants: re-key caches
         if self._stream_sharded_base is not None:
@@ -1215,6 +1265,7 @@ class SearchEngine:
             self.store = grow_store(
                 self.store, row_extra=int(decision["row_extra"]),
                 cell_extra=int(decision["cell_extra"]))
+            self._base_dirty = True
             self._counters["policy_grows"] += 1
         elif kind == "rebuild":
             self._do_rebuild(int(decision["seed"]))
@@ -1240,6 +1291,14 @@ class SearchEngine:
                 "this engine is already durable; one WAL per engine "
                 f"(directory {self._durable_dir!r})")
         config = config or DurabilityConfig()
+        if config.role == "follower" or self._role == "follower":
+            raise ValueError(
+                "durable(role='follower') is incoherent: a follower "
+                "tails a primary's shipped WAL and never owns a local "
+                "one (local writes on a follower would fork the "
+                "history). Seed a follower with load_engine(snapshot, "
+                "role='follower') + durability.replication.catch_up; "
+                "use role='primary' (the default) for a writable node.")
         os.makedirs(directory, exist_ok=True)
         self._wal = Wal(os.path.join(directory, "wal"), config)
         self._durability = config
@@ -1247,12 +1306,32 @@ class SearchEngine:
         self.save(directory)                 # the initial durable snapshot
         return self
 
+    def metrics(self):
+        """The engine's typed metrics snapshot: an
+        ``repro.search.metrics.EngineMetrics`` of frozen dataclasses
+        with stable dotted names (``wal.records``, ``stream.fill``,
+        ``compact.pending``, ``policy.drift_ema``,
+        ``replication.follower_lag_seq``, ...). This is the
+        observability surface — benches, regression gates and the
+        launcher's ``--metrics-port`` endpoint consume it; sections that
+        do not apply to this engine are ``None``."""
+        from .metrics import collect_metrics
+        return collect_metrics(self)
+
     def stats(self) -> dict:
-        """Durability / maintenance / serving counters, one dict: stream
-        fill and tombstones, compaction+swap+vacuum+rebuild counts,
-        policy decisions and drift state, WAL records/bytes/fsyncs and
-        replay count. The public window benches and tests use instead of
-        poking private fields."""
+        """Deprecated: use ``metrics()`` — the typed ``EngineMetrics``
+        surface with stable dotted names. This ad-hoc dict view remains
+        for one release cycle and then goes away."""
+        import warnings
+        warnings.warn(
+            "SearchEngine.stats() is deprecated; use SearchEngine"
+            ".metrics() (typed EngineMetrics with stable dotted names)",
+            DeprecationWarning, stacklevel=2)
+        return self._stats_dict()
+
+    def _stats_dict(self) -> dict:
+        """The legacy ``stats()`` dict shape (kept verbatim while the
+        deprecation cycle runs)."""
         s = {"index": self.config.index,
              "streaming": self.store is not None,
              "sharded": (self.sharded_state is not None

@@ -110,6 +110,23 @@ def test_wal_roundtrip_and_rotation(tmp_path):
     wal.close()
 
 
+def test_wal_truncate_respects_pinned_floor(tmp_path):
+    """A pinned floor (the newest base snapshot's position) clamps
+    truncation: records past it survive even when the caller asks for
+    more — they are what re-seeds a base-seeded follower."""
+    d = str(tmp_path / "wal")
+    wal = Wal(d, DurabilityConfig(fsync="never", segment_bytes=128))
+    for i in range(20):
+        wal.append(RT_DELETE, encode_delete(np.arange(8)))
+    assert wal.stats()["floor_seq"] == -1            # unpinned
+    wal.pin_floor(5)
+    wal.truncate(15)                                 # clamped to 5
+    assert wal.stats()["floor_seq"] == 5
+    wal.close()                                      # flush buffered tail
+    remaining = [seq for seq, _, _ in iter_records(d)]
+    assert set(range(6, 20)).issubset(remaining)     # floor tail intact
+
+
 def test_wal_torn_tail_skipped_and_truncated_on_resume(tmp_path):
     """A half-written final frame (the crash artifact) is invisible to
     readers and removed by a resuming writer, which then continues the

@@ -1,0 +1,149 @@
+"""Typed metrics / observability surface.
+
+The contracts pinned here:
+
+* **stable dotted names** — ``EngineMetrics.flatten()`` exposes the
+  documented names (``wal.records``, ``wal.fsyncs``, ``stream.fill``,
+  ``compact.pending``, ``policy.drift_ema``,
+  ``replication.follower_lag_seq``, ...); sections that do not apply
+  drop out instead of renaming.
+* **deprecation** — ``SearchEngine.stats()`` still returns the exact
+  legacy dict shape but warns ``DeprecationWarning``; callers migrate to
+  ``metrics()``.
+* **renderings** — ``render_prometheus`` emits ``qpad_``-prefixed
+  samples with counter/gauge TYPE lines and an ``qpad_engine_info``
+  label set; ``MetricsServer`` serves both forms over HTTP from a
+  background thread (the launcher's ``--metrics-port``).
+"""
+import json
+import urllib.error
+import urllib.request
+
+import jax
+import numpy as np
+import pytest
+
+from repro.search import (DurabilityConfig, MetricsServer, PolicyConfig,
+                          SearchEngine, ServeConfig, StreamConfig,
+                          render_prometheus, seed_follower)
+
+pytestmark = pytest.mark.durability
+
+N, DIM, K = 600, 32, 10
+
+
+def _data(seed=0, n=N, d=DIM):
+    key = jax.random.key(seed)
+    centers = jax.random.normal(key, (12, d)) * 2
+    lab = jax.random.randint(jax.random.fold_in(key, 1), (n,), 0, 12)
+    return centers[lab] + 0.3 * jax.random.normal(
+        jax.random.fold_in(key, 2), (n, d))
+
+
+def _stream_cfg(**stream_kw):
+    stream_kw.setdefault("delta_capacity", 64)
+    return ServeConfig(index="flat", rerank=128, fit_sample=512,
+                       stream=StreamConfig(**stream_kw))
+
+
+def _rows(seed, n):
+    return np.asarray(_data(seed=seed, n=n), np.float32)
+
+
+def test_typed_surface_dotted_names():
+    """The documented dotted names are present with live values; the
+    sections that do not apply are None and absent from flatten()."""
+    eng = SearchEngine(_data(), _stream_cfg())
+    eng.upsert(np.arange(600, 620, dtype=np.int32), _rows(1, 20))
+    m = eng.metrics()
+    flat = m.flatten()
+    assert flat["engine.index"] == "flat"
+    assert flat["engine.streaming"] is True
+    assert flat["engine.role"] == "primary"
+    assert flat["engine.compile_count"] == eng.compile_count
+    assert flat["stream.delta_used"] == 20
+    assert flat["stream.fill"] == pytest.approx(20 / 64)
+    assert flat["compact.pending"] is False
+    assert m.wal is None and m.replication is None
+    assert not any(k.startswith(("wal.", "replication.")) for k in flat)
+    # read-only engines have no stream/compact/snapshot sections at all
+    ro = SearchEngine(_data(), ServeConfig(index="flat")).metrics()
+    assert ro.stream is None and ro.compact is None and ro.snapshot is None
+    assert ro.engine.streaming is False
+
+
+def test_typed_surface_wal_policy_and_follower_sections(tmp_path):
+    """Durable engines expose wal.* (fsyncs, floor), policy engines
+    policy.* (drift + decision counters), followers replication.*."""
+    live = str(tmp_path / "live")
+    eng = SearchEngine(_data(), _stream_cfg(
+        policy=PolicyConfig())).durable(
+        live, DurabilityConfig(fsync="batch"))
+    eng.upsert(np.arange(600, 620, dtype=np.int32), _rows(1, 20))
+    flat = eng.metrics().flatten()
+    assert flat["wal.records"] >= 2            # snapshot mark + upsert
+    assert flat["wal.fsyncs"] >= 1
+    assert flat["wal.durable_seq"] <= flat["wal.last_seq"]
+    assert flat["wal.floor_seq"] == 0          # pinned by the base snapshot
+    assert flat["wal.fsync"] == "batch"
+    assert flat["policy.observed_rows"] == 0
+    assert "policy.drift_ema" in flat
+    assert flat["snapshot.full"] == 1
+    eng._wal.sync()
+    fol = seed_follower(live)
+    ff = fol.metrics().flatten()
+    assert ff["engine.role"] == "follower"
+    assert ff["replication.follower_lag_seq"] >= 0
+    assert "wal.records" not in ff             # followers own no log
+
+
+def test_stats_is_a_deprecated_view():
+    """stats() warns but keeps the exact legacy shape for one cycle."""
+    eng = SearchEngine(_data(), _stream_cfg())
+    eng.upsert(np.arange(600, 620, dtype=np.int32), _rows(1, 20))
+    with pytest.warns(DeprecationWarning, match="metrics"):
+        st = eng.stats()
+    assert st["streaming"] and not st["sharded"]
+    assert st["stream"]["delta_used"] == 20
+    assert set(st["maintenance"]) == {"compactions", "swaps", "vacuums",
+                                      "rebuilds", "policy_grows"}
+    assert "wal" not in st
+
+
+def test_render_prometheus_text():
+    eng = SearchEngine(_data(), _stream_cfg())
+    eng.upsert(np.arange(600, 610, dtype=np.int32), _rows(1, 10))
+    text = render_prometheus(eng.metrics())
+    assert "# TYPE qpad_engine_compile_count counter" in text
+    assert "# TYPE qpad_stream_fill gauge" in text
+    assert "qpad_stream_delta_used 10" in text
+    assert "qpad_compact_pending 0" in text    # bools render as 0/1
+    assert 'engine_index="flat"' in text
+    assert text.rstrip().splitlines()[-1].startswith("qpad_engine_info{")
+
+
+def test_metrics_server_serves_both_forms(tmp_path):
+    """The --metrics-port endpoint: Prometheus text at /metrics, the
+    flattened JSON at /metrics.json, 404 elsewhere — all consuming only
+    the typed surface."""
+    eng = SearchEngine(_data(), _stream_cfg()).durable(
+        str(tmp_path / "live"), DurabilityConfig(fsync="batch"))
+    eng.upsert(np.arange(600, 620, dtype=np.int32), _rows(1, 20))
+    with MetricsServer(eng, port=0) as srv:
+        assert srv.port > 0
+        with urllib.request.urlopen(srv.url, timeout=10) as r:
+            assert r.status == 200
+            assert r.headers["Content-Type"].startswith("text/plain")
+            body = r.read().decode()
+        assert "qpad_wal_records" in body
+        assert "# TYPE qpad_wal_fsyncs counter" in body
+        base = f"http://{srv.host}:{srv.port}"
+        with urllib.request.urlopen(base + "/metrics.json",
+                                    timeout=10) as r:
+            doc = json.loads(r.read().decode())
+        assert doc["stream.delta_used"] == 20
+        assert doc["wal.records"] >= 2
+        assert doc["engine.role"] == "primary"
+        with pytest.raises(urllib.error.HTTPError) as exc:
+            urllib.request.urlopen(base + "/nope", timeout=10)
+        assert exc.value.code == 404

@@ -1,0 +1,462 @@
+"""Replication & operations layer: WAL shipping + follower catch-up,
+incremental snapshot chains, group commit.
+
+The contracts pinned here:
+
+* **follower parity** — a follower seeded from a primary snapshot and
+  caught up through the shipped WAL serves search ids identical to the
+  primary at EVERY record boundary, for flat / ivf / pq / ivfpq —
+  including across primary-side compaction and policy vacuum, which the
+  follower re-folds from the logged RT_COMPACT / RT_POLICY records
+  (folded arrays never ship).
+* **divergence** — a seq gap (the primary truncated history past the
+  follower), a CRC failure mid-shipment, or a rewound source raises
+  ``DivergenceError`` with re-seed instructions; a re-seeded follower
+  rejoins. Followers reject local writes; a primary cannot catch_up.
+* **incremental snapshots** — ``save(dir, incremental=True)`` writes a
+  delta-only chain link that ``load_engine`` resolves against the full
+  base; base-rewriting maintenance dirties the chain (full save
+  required); the chained base pins the WAL truncation floor so a
+  follower seeded from the base artifact can always catch up.
+* **group commit** — concurrent ``fsync="always"`` appends under
+  ``group_commit_ms`` coalesce into shared fsyncs with exact-once,
+  in-order records; append returns only after a covering sync.
+"""
+import json
+import os
+import shutil
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import MPADConfig
+from repro.runtime.fault import FailureInjector
+from repro.search import (DivergenceError, DurabilityConfig, LocalDirSource,
+                          PolicyConfig, ReplicationError, SearchEngine,
+                          ServeConfig, StreamConfig, Wal, catch_up,
+                          load_engine, seed_follower)
+from repro.search.durability.wal import (RT_UPSERT, decode_upsert,
+                                         encode_upsert, iter_records)
+
+pytestmark = pytest.mark.replication
+
+N, DIM, K = 600, 32, 10
+
+
+def _data(seed=0, n=N, d=DIM):
+    key = jax.random.key(seed)
+    centers = jax.random.normal(key, (12, d)) * 2
+    lab = jax.random.randint(jax.random.fold_in(key, 1), (n,), 0, 12)
+    return centers[lab] + 0.3 * jax.random.normal(
+        jax.random.fold_in(key, 2), (n, d))
+
+
+def _queries(nq=16):
+    x = _data()
+    return x[:nq] + 0.02 * jax.random.normal(jax.random.key(9), (nq, DIM))
+
+
+def _cfg(index, target_dim=None, **stream_kw):
+    stream_kw.setdefault("delta_capacity", 64)
+    kw = dict(target_dim=target_dim, rerank=128, index=index,
+              mpad=MPADConfig(m=8, iters=16) if target_dim else None,
+              fit_sample=512, stream=StreamConfig(**stream_kw))
+    if index in ("ivf", "ivfpq"):
+        kw.update(nlist=12, nprobe=12)
+    if index in ("pq", "ivfpq"):
+        kw.update(pq_subspaces=8, pq_centroids=64)
+    return ServeConfig(**kw)
+
+
+def _rows(seed, n):
+    return np.asarray(_data(seed=seed, n=n), np.float32)
+
+
+# each op sized under the delta compact point (48 of 64): ops map 1:1
+# onto WAL records, so an op boundary IS a record boundary
+_OPS = [
+    ("upsert", np.arange(600, 630, dtype=np.int32), 1),
+    ("delete", np.asarray([3, 5, 600, 604], np.int32), None),
+    ("upsert", np.arange(625, 640, dtype=np.int32), 2),
+    ("compact", None, None),
+    ("upsert", np.arange(640, 670, dtype=np.int32), 3),
+    ("delete", np.asarray([10, 11, 650], np.int32), None),
+    ("upsert", np.arange(7, 12, dtype=np.int32), 4),
+]
+
+
+def _apply_ops(eng, ops):
+    for op, ids, seed in ops:
+        if op == "upsert":
+            eng.upsert(ids, _rows(seed, len(ids)))
+        elif op == "delete":
+            eng.delete(ids)
+        else:
+            eng.compact()
+
+
+def _ids(eng, q):
+    return np.asarray(eng.search(q, K)[1])
+
+
+def _primary(tmp_path, index="flat", dcfg=None, **stream_kw):
+    live = str(tmp_path / "live")
+    eng = SearchEngine(_data(), _cfg(index, **stream_kw)).durable(
+        live, dcfg or DurabilityConfig(fsync="batch"))
+    return eng, live
+
+
+# --- follower catch-up parity ------------------------------------------------
+
+@pytest.mark.parametrize("index", ("flat", "ivf", "pq", "ivfpq"))
+def test_follower_parity_at_every_record_boundary(index, tmp_path):
+    """The acceptance property: after every primary op (one WAL record),
+    one catch_up pass lands the follower on search ids identical to the
+    primary — including across the compaction barrier at op 4, which the
+    follower re-folds from the RT_COMPACT record."""
+    q = _queries()
+    eng, live = _primary(tmp_path, index)
+    fol = seed_follower(live)
+    src = LocalDirSource(live)
+    np.testing.assert_array_equal(_ids(fol, q), _ids(eng, q))  # boundary 0
+    for i, op in enumerate(_OPS):
+        _apply_ops(eng, [op])
+        eng._wal.sync()
+        st = catch_up(fol, src)
+        assert st.records >= 1 and st.lag_seq == 0
+        np.testing.assert_array_equal(_ids(fol, q), _ids(eng, q),
+                                      err_msg=f"boundary {i + 1}")
+    # caught up: the next pass is a cheap no-op, and the typed metrics
+    # surface reports the replica position
+    again = catch_up(fol, src)
+    assert again.records == 0 and again.lag_seq == 0
+    m = fol.metrics()
+    assert m.replication is not None
+    assert m.replication.follower_lag_seq == 0
+    assert m.replication.applied_seq == eng._wal.last_seq
+
+
+def test_follower_refolds_vacuum_from_policy_record(tmp_path):
+    """A primary-side policy vacuum ships as RT_DELETE + RT_POLICY: the
+    follower runs the reclaim with its own write programs and lands on
+    identical ids — no folded arrays move."""
+    q = _queries()
+    eng, live = _primary(tmp_path, "ivf",
+                         policy=PolicyConfig(tombstone_density=0.2,
+                                             tombstone_min_dead=32))
+    fol = seed_follower(live)
+    eng.delete(np.arange(200, 500, dtype=np.int32))   # triggers vacuum
+    assert eng.metrics().compact.vacuums == 1
+    eng._wal.sync()
+    st = catch_up(fol, LocalDirSource(live))
+    assert st.deletes == 1 and st.policies == 1
+    assert fol.metrics().compact.vacuums == 1
+    np.testing.assert_array_equal(_ids(fol, q), _ids(eng, q))
+    got = _ids(fol, q)
+    assert not np.any((got >= 200) & (got < 500))
+
+
+def test_crash_mid_catch_up_reseeds_cleanly(tmp_path):
+    """A follower killed mid-catch-up (inside the re-fold of a shipped
+    compaction) did not advance its position; the operator re-seeds a
+    fresh follower from the snapshot and it reaches parity."""
+    q = _queries()
+    eng, live = _primary(tmp_path, "ivf")
+    _apply_ops(eng, _OPS)
+    eng._wal.sync()
+    fol = seed_follower(live)
+    injector = FailureInjector(fail_at={"compact_begin"})
+    fol.crash_hook = injector.maybe_fail
+    pos = fol._applied_seq
+    with pytest.raises(RuntimeError, match="injected failure"):
+        catch_up(fol, LocalDirSource(live))
+    assert fol._applied_seq == pos       # position advances only on success
+    fresh = seed_follower(live)
+    st = catch_up(fresh, LocalDirSource(live))
+    assert st.records == len(_OPS)
+    np.testing.assert_array_equal(_ids(fresh, q), _ids(eng, q))
+
+
+# --- divergence --------------------------------------------------------------
+
+def test_divergence_on_truncated_history(tmp_path):
+    """A full snapshot moves the WAL floor and truncates history; a
+    follower seeded before it cannot rejoin by tailing (seq gap), and the
+    error says so; re-seeding from the fresh snapshot rejoins."""
+    q = _queries()
+    eng, live = _primary(
+        tmp_path, "flat",
+        dcfg=DurabilityConfig(fsync="batch", segment_bytes=256))
+    stale_seed = str(tmp_path / "stale")
+    shutil.copytree(live, stale_seed)
+    _apply_ops(eng, _OPS[:3])
+    eng.save(live)                        # floor moves; prefix truncated
+    _apply_ops(eng, _OPS[3:])
+    eng._wal.sync()
+    stale = seed_follower(stale_seed)
+    with pytest.raises(DivergenceError, match="re-seed"):
+        catch_up(stale, LocalDirSource(live))
+    reseed = str(tmp_path / "reseed")
+    shutil.copytree(live, reseed, ignore=shutil.ignore_patterns("wal"))
+    fol = seed_follower(reseed)
+    catch_up(fol, LocalDirSource(live))
+    np.testing.assert_array_equal(_ids(fol, q), _ids(eng, q))
+
+
+def test_divergence_on_corrupt_shipment(tmp_path):
+    """CRC damage before the tail of the shipped stream is not a torn
+    tail: catch_up refuses to apply past it and demands a re-seed."""
+    eng, live = _primary(
+        tmp_path, "flat",
+        dcfg=DurabilityConfig(fsync="batch", segment_bytes=256))
+    _apply_ops(eng, _OPS)
+    eng._wal.sync()
+    ship = str(tmp_path / "ship")
+    shutil.copytree(os.path.join(live, "wal"), ship)
+    segs = sorted(f for f in os.listdir(ship) if f.endswith(".log"))
+    assert len(segs) > 2, "256-byte segments must have rotated"
+    path = os.path.join(ship, segs[1])    # mid-stream, NOT the last segment
+    data = bytearray(open(path, "rb").read())
+    data[-1] ^= 0xFF
+    open(path, "wb").write(bytes(data))
+    fol = seed_follower(live)
+    with pytest.raises(DivergenceError, match="[Rr]e-seed"):
+        catch_up(fol, LocalDirSource(ship))
+
+
+def test_divergence_on_rewound_source(tmp_path):
+    """A source whose tail is behind the follower's applied position is
+    not the history the follower came from."""
+    eng, live = _primary(tmp_path, "flat")
+    stale_src = str(tmp_path / "stale")
+    shutil.copytree(live, stale_src)
+    _apply_ops(eng, _OPS[:2])
+    eng._wal.sync()
+    fol = seed_follower(live)
+    catch_up(fol, LocalDirSource(live))   # follower is ahead of stale_src
+    with pytest.raises(DivergenceError, match="rewound"):
+        catch_up(fol, LocalDirSource(stale_src))
+
+
+def test_follower_rejects_local_writes_and_role_misuse(tmp_path):
+    """One history, one writer: followers reject upsert/delete and cannot
+    open a local WAL; a WAL-owning primary cannot catch_up; a read-only
+    engine cannot be a follower target."""
+    eng, live = _primary(tmp_path, "flat")
+    fol = seed_follower(live)
+    with pytest.raises(ReplicationError, match="follower"):
+        fol.upsert(np.asarray([900], np.int32), _rows(1, 1))
+    with pytest.raises(ReplicationError, match="follower"):
+        fol.delete(np.asarray([3], np.int32))
+    with pytest.raises(ReplicationError, match="follower"):
+        fol.durable(str(tmp_path / "fwal"))
+    with pytest.raises(ReplicationError, match="primary"):
+        catch_up(eng, LocalDirSource(live))
+    ro = SearchEngine(_data(), ServeConfig(index="flat"))
+    with pytest.raises(ReplicationError, match="streaming"):
+        catch_up(ro, LocalDirSource(live))
+    fresh = SearchEngine(_data(), _cfg("flat"))
+    with pytest.raises(ValueError, match="follower"):
+        fresh.durable(str(tmp_path / "d2"),
+                      DurabilityConfig(role="follower"))
+
+
+def test_durability_config_validation():
+    with pytest.raises(ValueError, match="role"):
+        DurabilityConfig(role="observer")
+    with pytest.raises(ValueError, match="group_commit_ms"):
+        DurabilityConfig(group_commit_ms=-1.0)
+    with pytest.raises(ValueError, match="always"):
+        DurabilityConfig(fsync="batch", group_commit_ms=2.0)
+    with pytest.raises(ValueError, match="always"):
+        DurabilityConfig(fsync="never", group_commit_ms=2.0)
+    DurabilityConfig(fsync="always", group_commit_ms=2.0)   # coherent
+
+
+# --- incremental snapshots ---------------------------------------------------
+
+def test_incremental_snapshot_chain_roundtrip(tmp_path):
+    """Delta-only chain links restore exactly: load resolves base +
+    newest incremental, each link supersedes the previous, and the link
+    is a fraction of the full checkpoint's bytes."""
+    q = _queries()
+    eng, live = _primary(tmp_path, "flat")
+    base_meta = json.load(open(os.path.join(live, "engine.json")))
+    full_bytes = os.path.getsize(os.path.join(live, base_meta["ckpt"]))
+    eng.upsert(np.arange(600, 620, dtype=np.int32), _rows(1, 20))
+    p1 = eng.save(live, incremental=True)
+    assert os.path.getsize(p1) < 0.5 * full_bytes
+    meta = json.load(open(os.path.join(live, "engine.json")))
+    assert meta["incremental"] and meta["base_ckpt"] == base_meta["ckpt"]
+    assert len(meta["chain"]) == 2
+    np.testing.assert_array_equal(_ids(load_engine(live), q), _ids(eng, q))
+    # second link: delete + overwrite land in the delta state only
+    eng.delete(np.asarray([3, 610], np.int32))
+    eng.upsert(np.arange(615, 625, dtype=np.int32), _rows(2, 10))
+    eng.save(live, incremental=True)
+    meta = json.load(open(os.path.join(live, "engine.json")))
+    assert len(meta["chain"]) == 3
+    assert eng.metrics().snapshot.chain_depth == 2
+    rec = load_engine(live)
+    np.testing.assert_array_equal(_ids(rec, q), _ids(eng, q))
+    # the restored engine replays nothing: the chain covered the log
+    assert rec._replayed == 0
+
+
+def test_incremental_requires_clean_durable_base(tmp_path):
+    """The chain invariants are enforced with actionable errors: no
+    durable base, base-rewriting maintenance, or a read-only engine all
+    refuse the delta-only path; a fresh full save reopens it."""
+    eng, live = _primary(tmp_path, "flat")
+    with pytest.raises(ValueError, match="durable base"):
+        eng.save(str(tmp_path / "elsewhere"), incremental=True)
+    eng.upsert(np.arange(600, 660, dtype=np.int32), _rows(1, 60))
+    # the auto-compaction rewrote the base arrays: chain is dead
+    assert eng.metrics().compact.compactions >= 1
+    with pytest.raises(ValueError, match="full snapshot"):
+        eng.save(live, incremental=True)
+    eng.save(live)                       # new base, new chain
+    eng.upsert(np.arange(700, 710, dtype=np.int32), _rows(2, 10))
+    eng.save(live, incremental=True)     # chains again
+    q = _queries()
+    np.testing.assert_array_equal(_ids(load_engine(live), q), _ids(eng, q))
+    free = SearchEngine(_data(), _cfg("flat"))
+    with pytest.raises(ValueError, match="durable base"):
+        free.save(str(tmp_path / "free"), incremental=True)
+    ro = SearchEngine(_data(), ServeConfig(index="flat"))
+    with pytest.raises(ValueError, match="read-only"):
+        ro.save(str(tmp_path / "ro"), incremental=True)
+
+
+def test_crash_mid_incremental_save_falls_back(tmp_path):
+    """A crash between the incremental array write and the manifest
+    commit leaves the previous manifest + WAL tail fully loadable, and a
+    retry completes the chain."""
+    q = _queries()
+    eng, live = _primary(tmp_path, "flat")
+    eng.upsert(np.arange(600, 620, dtype=np.int32), _rows(1, 20))
+    want = _ids(eng, q)
+    injector = FailureInjector(fail_at={"snapshot_arrays"})
+    eng.crash_hook = injector.maybe_fail
+    with pytest.raises(RuntimeError, match="injected failure"):
+        eng.save(live, incremental=True)
+    rec = load_engine(live)              # old manifest + replayed tail
+    assert rec._replayed == 1
+    np.testing.assert_array_equal(_ids(rec, q), want)
+    eng.crash_hook = None
+    eng.save(live, incremental=True)     # retry commits
+    rec = load_engine(live)
+    assert rec._replayed == 0
+    np.testing.assert_array_equal(_ids(rec, q), want)
+
+
+def test_incremental_pins_wal_floor_for_base_followers(tmp_path):
+    """Incremental truncation keeps every record past the chain BASE —
+    they are what re-seeds a follower built from the base artifact — and
+    the floor shows up in the WAL stats; a full save moves it."""
+    q = _queries()
+    eng, live = _primary(
+        tmp_path, "flat",
+        dcfg=DurabilityConfig(fsync="batch", segment_bytes=256))
+    base_seed = str(tmp_path / "seed")
+    shutil.copytree(live, base_seed)
+    base_seq = eng._wal.last_seq
+    for s in range(3):
+        eng.upsert(np.arange(600 + 10 * s, 610 + 10 * s, dtype=np.int32),
+                   _rows(s, 10))
+    eng.save(live, incremental=True)
+    assert eng._wal.stats()["floor_seq"] == base_seq
+    # every record past the base survived the truncation
+    seqs = [s for s, _, _ in
+            iter_records(os.path.join(live, "wal"), after=base_seq)]
+    assert seqs[0] == base_seq + 1
+    eng.upsert(np.arange(630, 640, dtype=np.int32), _rows(7, 10))
+    eng._wal.sync()
+    fol = seed_follower(base_seed)
+    catch_up(fol, LocalDirSource(live))
+    np.testing.assert_array_equal(_ids(fol, q), _ids(eng, q))
+    # a FULL save is a new chain base: the floor moves with it and the
+    # old base artifact can no longer tail this log
+    eng.save(live)
+    assert eng._wal.stats()["floor_seq"] > base_seq
+    eng.upsert(np.arange(650, 660, dtype=np.int32), _rows(8, 10))
+    eng._wal.sync()
+    stale = seed_follower(base_seed)
+    with pytest.raises(DivergenceError, match="re-seed"):
+        catch_up(stale, LocalDirSource(live))
+
+
+# --- group commit ------------------------------------------------------------
+
+def test_group_commit_concurrent_appends_exact_once(tmp_path):
+    """8 threads of fsync=always appends under a 2 ms gather window land
+    exact-once, in seq order, with far fewer fsyncs than records — and
+    every append returned only after a covering sync."""
+    d = str(tmp_path / "wal")
+    wal = Wal(d, DurabilityConfig(fsync="always", group_commit_ms=2.0))
+    n_threads, per = 8, 24
+    def writer(t):
+        for i in range(per):
+            rid = np.asarray([t * per + i], np.int32)
+            wal.append(RT_UPSERT,
+                       encode_upsert(rid, np.full((1, 4), float(t),
+                                                  np.float32)))
+    threads = [threading.Thread(target=writer, args=(t,))
+               for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    st = wal.stats()
+    total = n_threads * per
+    assert st["records"] == total
+    assert st["durable_seq"] == st["last_seq"] == total - 1
+    assert st["fsyncs"] < total          # coalesced
+    assert st["group_commits"] >= 1
+    wal.close()
+    got = list(iter_records(d))
+    assert [s for s, _, _ in got] == list(range(total))
+    ids = sorted(int(decode_upsert(p)[0][0]) for _, _, p in got)
+    assert ids == list(range(total))
+
+
+def test_group_commit_append_returns_durable(tmp_path):
+    """The durability contract is unchanged by grouping: append (and a
+    multi-chunk engine write batch) returns only once the covering fsync
+    has run."""
+    d = str(tmp_path / "wal")
+    wal = Wal(d, DurabilityConfig(fsync="always", group_commit_ms=2.0))
+    seq = wal.append(RT_UPSERT, encode_upsert(
+        np.asarray([1], np.int32), np.ones((1, 4), np.float32)))
+    assert wal.stats()["durable_seq"] >= seq
+    wal.close()
+    eng, live = _primary(
+        tmp_path, "flat",
+        dcfg=DurabilityConfig(fsync="always", group_commit_ms=2.0))
+    # 100 rows = 3 chunks: each appends wait=False, the batch waits once
+    eng.upsert(np.arange(600, 700, dtype=np.int32), _rows(1, 100))
+    st = eng._wal.stats()
+    assert st["durable_seq"] == st["last_seq"]
+    assert st["group_commit_ms"] == 2.0
+
+
+def test_group_commit_crash_after_append_recovers_the_write(tmp_path):
+    """A crash right after the WAL append (before the engine touched the
+    store) loses nothing: the grouped record is on disk and recovery
+    replays it — the log stays ahead of the store under grouping too."""
+    q = _queries()
+    eng, live = _primary(
+        tmp_path, "flat",
+        dcfg=DurabilityConfig(fsync="always", group_commit_ms=2.0))
+    injector = FailureInjector(fail_at={"wal_appended"})
+    eng.crash_hook = injector.maybe_fail
+    with pytest.raises(RuntimeError, match="injected failure"):
+        eng.upsert(np.arange(600, 620, dtype=np.int32), _rows(1, 20))
+    eng._wal.close()                     # the simulated process death
+    rec = load_engine(live)
+    assert rec._replayed == 1
+    oracle = SearchEngine(_data(), _cfg("flat"))
+    oracle.upsert(np.arange(600, 620, dtype=np.int32), _rows(1, 20))
+    np.testing.assert_array_equal(_ids(rec, q), _ids(oracle, q))
