@@ -21,6 +21,11 @@ fused-vs-staged speedup must stay >= ``--min-b64-speedup`` (default 1.0 —
 the compact small-batch scan and re-rank pre-filter exist to keep it
 there).
 
+The ``observability`` section gates the tracing overhead within the
+fresh file: an attached-but-inert tracer must cost <=
+``--max-trace-off-overhead`` (default 1%) of batch-256 ivfpq p50, and
+end-to-end histogram recording <= ``--max-hist-overhead`` (default 3%).
+
 A missing gated row in the FRESH file is itself a failure (the bench
 silently lost coverage); a missing row in the BASELINE only warns, so the
 gate can be introduced onto older baselines without a flag day.
@@ -170,6 +175,58 @@ def check_durability(baseline: dict, fresh: dict,
     return failures, report
 
 
+def check_observability(baseline: dict, fresh: dict,
+                        max_trace_off: float = 0.01,
+                        max_hist: float = 0.03):
+    """Gate the tracing overhead — within the fresh file.
+
+    The three postures (no tracer / tracer attached but inert /
+    histograms recording) run interleaved on the same ivfpq engine, so
+    the paired median ratios are hardware-independent:
+
+    * an inert tracer must cost <= ``--max-trace-off-overhead`` of p50
+      (default 1% — the serve path takes no timestamp when every
+      instrument is off),
+    * end-to-end histogram recording must cost <= ``--max-hist-overhead``
+      (default 3% — a block + bisect per search, nothing device-side).
+
+    The ``latency_breakdown`` section (per-stage deep-trace shares) is
+    lost-coverage-checked against the baseline like the other sections.
+    """
+    failures, report = [], []
+    new = fresh.get("observability")
+    if new is None:
+        if baseline.get("observability") is not None:
+            failures.append(
+                "fresh bench is missing the observability section")
+        else:
+            report.append("no observability section; skipping tracing-"
+                          "overhead gate")
+        return failures, report
+    report.append(
+        f"trace ovhd: inert {new['trace_off_overhead']:+.2%} "
+        f"(limit {max_trace_off:.0%}), histograms "
+        f"{new['hist_overhead']:+.2%} (limit {max_hist:.0%}) on "
+        f"base p50 {new['p50_us_base']}us")
+    if new["trace_off_overhead"] > max_trace_off:
+        failures.append(
+            f"inert-tracer overhead too high: "
+            f"{new['trace_off_overhead']:.2%} > {max_trace_off:.0%} "
+            f"({new['p50_us_base']}us -> {new['p50_us_traced_off']}us "
+            "p50 with an all-off tracer attached)")
+    if new["hist_overhead"] > max_hist:
+        failures.append(
+            f"histogram-recording overhead too high: "
+            f"{new['hist_overhead']:.2%} > {max_hist:.0%} "
+            f"({new['p50_us_base']}us -> {new['p50_us_hist_on']}us "
+            "p50 with e2e histograms on)")
+    if baseline.get("latency_breakdown") and not fresh.get(
+            "latency_breakdown"):
+        failures.append("fresh bench is missing the latency_breakdown "
+                        "section")
+    return failures, report
+
+
 def check_lut_parity(fresh: dict, min_ratio: float = 0.95):
     """Gate quantized-LUT throughput against f32 — within the fresh file.
 
@@ -233,7 +290,8 @@ def check(baseline: dict, fresh: dict, max_qps_drop: float = 0.20,
           max_recall_drop: float = 0.02, max_ups_drop: float = 0.25,
           max_wal_overhead: float = 0.25, min_lut_ratio: float = 0.95,
           min_b64_speedup: float = 1.0, min_gc_speedup: float = 2.0,
-          max_inc_frac: float = 0.10):
+          max_inc_frac: float = 0.10, max_trace_off: float = 0.01,
+          max_hist: float = 0.03):
     """Returns (failures, report_lines); empty failures == gate passes."""
     failures, report = [], []
     sf, sr = check_stream(baseline, fresh, max_ups_drop, max_recall_drop)
@@ -243,6 +301,9 @@ def check(baseline: dict, fresh: dict, max_qps_drop: float = 0.20,
                               min_gc_speedup, max_inc_frac)
     failures += df
     report += dr
+    of, orp = check_observability(baseline, fresh, max_trace_off, max_hist)
+    failures += of
+    report += orp
     lf, lr = check_lut_parity(fresh, min_lut_ratio)
     failures += lf
     report += lr
@@ -306,6 +367,12 @@ def main(argv=None) -> int:
                     help="max incremental-snapshot bytes as a fraction of "
                          "the full checkpoint (within the fresh file; "
                          "default 0.10)")
+    ap.add_argument("--max-trace-off-overhead", type=float, default=0.01,
+                    help="max fractional p50 cost of an attached-but-inert "
+                         "tracer (within the fresh file; default 0.01)")
+    ap.add_argument("--max-hist-overhead", type=float, default=0.03,
+                    help="max fractional p50 cost of e2e latency-histogram "
+                         "recording (within the fresh file; default 0.03)")
     args = ap.parse_args(argv)
     with open(args.baseline) as f:
         baseline = json.load(f)
@@ -316,7 +383,9 @@ def main(argv=None) -> int:
                              args.max_wal_overhead, args.min_lut_qps_ratio,
                              args.min_b64_speedup,
                              args.min_group_commit_speedup,
-                             args.max_inc_snapshot_frac)
+                             args.max_inc_snapshot_frac,
+                             args.max_trace_off_overhead,
+                             args.max_hist_overhead)
     for line in report:
         print(line)
     if failures:

@@ -15,10 +15,11 @@ def pq_adc_topk(tables: jax.Array, codes: jax.Array, k: int, *,
                 block_q: int = 128, block_n: int = 512,
                 interpret: bool = True, lut_dtype: str = "f32"):
     """Top-k ADC over shared codes: (dists (Q,k), idx (Q,k)), sqrt'd."""
-    d2, idx = pq_adc_topk_pallas(tables, codes, k, block_q=block_q,
-                                 block_n=block_n, interpret=interpret,
-                                 lut_dtype=lut_dtype)
-    return jnp.sqrt(jnp.maximum(d2, 0.0)), idx
+    with jax.named_scope("pq_adc.topk"):
+        d2, idx = pq_adc_topk_pallas(tables, codes, k, block_q=block_q,
+                                     block_n=block_n, interpret=interpret,
+                                     lut_dtype=lut_dtype)
+        return jnp.sqrt(jnp.maximum(d2, 0.0)), idx
 
 
 @functools.partial(jax.jit, static_argnames=("k", "slack", "block_q",
@@ -42,24 +43,26 @@ def pq_adc_topk_global(tables: jax.Array, codes: jax.Array, k: int, *,
     """
     n_loc = codes.shape[0]
     kk = min(k + slack, n_loc)
-    d2, idx = pq_adc_topk_pallas(tables, codes, kk, block_q=block_q,
-                                 block_n=block_n, interpret=interpret,
-                                 lut_dtype=lut_dtype)
-    gid = row_offset + idx
-    bad = (idx < 0) | (gid >= n_valid)
-    # (+inf, -1) pad convention + masked re-top-k mirror
-    # repro.search.knn.masked_topk (importing it here would cycle
-    # kernels -> search -> kernels); keep the two in step
-    d2 = jnp.where(bad, jnp.inf, d2)
-    gid = jnp.where(bad, -1, gid)
-    if kk > k:
-        neg, sel = jax.lax.top_k(-d2, k)
-        d2 = -neg
-        gid = jnp.take_along_axis(gid, sel, axis=1)
-    elif kk < k:
-        d2 = jnp.pad(d2, ((0, 0), (0, k - kk)), constant_values=jnp.inf)
-        gid = jnp.pad(gid, ((0, 0), (0, k - kk)), constant_values=-1)
-    return d2, gid
+    with jax.named_scope("pq_adc.topk_global"):
+        d2, idx = pq_adc_topk_pallas(tables, codes, kk, block_q=block_q,
+                                     block_n=block_n, interpret=interpret,
+                                     lut_dtype=lut_dtype)
+        gid = row_offset + idx
+        bad = (idx < 0) | (gid >= n_valid)
+        # (+inf, -1) pad convention + masked re-top-k mirror
+        # repro.search.knn.masked_topk (importing it here would cycle
+        # kernels -> search -> kernels); keep the two in step
+        d2 = jnp.where(bad, jnp.inf, d2)
+        gid = jnp.where(bad, -1, gid)
+        if kk > k:
+            neg, sel = jax.lax.top_k(-d2, k)
+            d2 = -neg
+            gid = jnp.take_along_axis(gid, sel, axis=1)
+        elif kk < k:
+            d2 = jnp.pad(d2, ((0, 0), (0, k - kk)),
+                         constant_values=jnp.inf)
+            gid = jnp.pad(gid, ((0, 0), (0, k - kk)), constant_values=-1)
+        return d2, gid
 
 
 @functools.partial(jax.jit, static_argnames=("k", "block_q", "block_n",
@@ -68,8 +71,10 @@ def pq_adc_gather_topk(tables: jax.Array, codes: jax.Array, base: jax.Array,
                        k: int, *, block_q: int = 8, block_n: int = 256,
                        interpret: bool = True, lut_dtype: str = "f32"):
     """Top-k ADC over per-query candidates: (dists (Q,k), slot idx (Q,k))."""
-    d2, idx = pq_adc_gather_topk_pallas(tables, codes, base, k,
-                                        block_q=block_q, block_n=block_n,
-                                        interpret=interpret,
-                                        lut_dtype=lut_dtype)
-    return jnp.sqrt(jnp.maximum(d2, 0.0)), idx
+    with jax.named_scope("pq_adc.gather_topk"):
+        d2, idx = pq_adc_gather_topk_pallas(tables, codes, base, k,
+                                            block_q=block_q,
+                                            block_n=block_n,
+                                            interpret=interpret,
+                                            lut_dtype=lut_dtype)
+        return jnp.sqrt(jnp.maximum(d2, 0.0)), idx

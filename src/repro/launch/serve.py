@@ -21,7 +21,14 @@ blocking searches.
 Observability: ``--metrics-port N`` serves the engine's typed metrics
 snapshot (``SearchEngine.metrics()``) from a stdlib http.server thread —
 ``GET /metrics`` is Prometheus text, ``GET /metrics.json`` the flattened
-JSON (port 0 binds an ephemeral port and prints it).
+JSON (port 0 binds an ephemeral port and prints it). Request-level
+tracing rides the same engine: ``--trace-dir DIR`` exports a
+Chrome-trace JSON of the served batches, ``--slow-query-ms T`` captures
+over-threshold queries into a ring buffer, ``--deep-trace-every N``
+re-runs 1-in-N batches through the staged pipeline for per-stage
+latency attribution, and ``--recall-every N`` shadow-checks 1-in-N
+batches against the exact scan to estimate live recall — any of these
+turns on the ``latency.*`` histograms in the scrape.
 
 Sharded serving: ``--shards N`` partitions the engine state over an N-way
 data mesh (``--mesh host`` simulates the N devices on CPU — useful for
@@ -110,6 +117,23 @@ def _parse_args():
                     help="serve SearchEngine.metrics() over HTTP from a "
                          "background thread: /metrics (Prometheus text), "
                          "/metrics.json (JSON); 0 = ephemeral port")
+    ap.add_argument("--trace-dir", default=None, metavar="DIR",
+                    help="export a Chrome-trace JSON of the served "
+                         "batches into DIR (open in chrome://tracing or "
+                         "Perfetto); implies latency histograms")
+    ap.add_argument("--slow-query-ms", type=float, default=None, metavar="T",
+                    help="capture searches slower than T ms into the "
+                         "tracer's slow-query ring buffer (printed at "
+                         "the end of the run)")
+    ap.add_argument("--deep-trace-every", type=int, default=0, metavar="N",
+                    help="re-run 1-in-N batches through the staged "
+                         "pipeline for exact per-stage latency "
+                         "attribution (0 = off; read-only unsharded "
+                         "engines only)")
+    ap.add_argument("--recall-every", type=int, default=0, metavar="N",
+                    help="shadow-check 1-in-N batches against an exact "
+                         "brute-force scan and maintain the "
+                         "recall.estimate_at_k gauge (0 = off)")
     return ap.parse_args()
 
 
@@ -193,6 +217,27 @@ def main():
               f"({args.corpus} rows -> ~{-(-args.corpus // args.shards)} "
               "per shard"
               + (", dense state donated" if args.donate else "") + ")")
+    tracing_on = (args.trace_dir is not None
+                  or args.slow_query_ms is not None
+                  or args.deep_trace_every or args.recall_every
+                  or args.metrics_port is not None)
+    if tracing_on:
+        # attach to the FINAL engine object (post durable/snapshot/shard
+        # swap-outs) so the tracer sees the served programs
+        engine.tracing(trace_dir=args.trace_dir,
+                       slow_query_ms=args.slow_query_ms,
+                       deep_trace_every=args.deep_trace_every,
+                       recall_every=args.recall_every)
+        knobs = ["histograms"]
+        if args.trace_dir is not None:
+            knobs.append(f"trace_dir={args.trace_dir}")
+        if args.slow_query_ms is not None:
+            knobs.append(f"slow_query_ms={args.slow_query_ms}")
+        if args.deep_trace_every:
+            knobs.append(f"deep_trace_every={args.deep_trace_every}")
+        if args.recall_every:
+            knobs.append(f"recall_every={args.recall_every}")
+        print(f"tracing on ({', '.join(knobs)})")
     metrics_srv = None
     if args.metrics_port is not None:
         from repro.search import MetricsServer
@@ -232,6 +277,18 @@ def main():
         total += dt
         rec_sum += rec
         print(f"batch {i}: {dt*1e3:7.1f} ms  recall@{args.k}={rec:.4f}")
+        if i == 0 and metrics_srv is not None and tracing_on:
+            # mid-traffic scrape: the histogram series must already be
+            # live after the first batch (the CI smoke greps for it)
+            import urllib.request
+            with urllib.request.urlopen(metrics_srv.url, timeout=5) as r:
+                mid = r.read().decode().splitlines()
+            hist = [ln for ln in mid
+                    if ln.startswith("qpad_latency_search_seconds")]
+            print(f"mid-traffic scrape: {len(mid)} lines, "
+                  f"{len(hist)} latency-histogram samples")
+            for line in hist[:3]:
+                print(f"  {line}")
     print(f"\nmean: {total/args.batches*1e3:.1f} ms/batch "
           f"({args.batch/(total/args.batches):.0f} qps), "
           f"recall={rec_sum/args.batches:.4f}")
@@ -253,6 +310,39 @@ def main():
                   f"compactions={m.compact.compactions} "
                   f"vacuums={m.compact.vacuums} "
                   f"rebuilds={m.compact.rebuilds}")
+    if tracing_on:
+        flat = engine.metrics().flatten()
+        print(f"latency: p50={flat['latency.search.p50']:.2f}ms "
+              f"p95={flat['latency.search.p95']:.2f}ms "
+              f"p99={flat['latency.search.p99']:.2f}ms over "
+              f"{flat['latency.queries']} traced searches")
+        if args.recall_every:
+            est = flat.get("recall.estimate_at_k")
+            if est is not None:
+                print(f"recall estimate: {est:.4f}@{flat['recall.k']} "
+                      f"({flat['recall.samples']} shadow samples)")
+        if args.deep_trace_every:
+            stages = sorted(
+                (name.split(".")[2], flat[name])
+                for name in flat
+                if name.startswith("latency.stages.")
+                and name.endswith(".p50"))
+            if stages:
+                share = ", ".join(f"{s}={ms:.2f}ms" for s, ms in stages)
+                print(f"deep-trace stage p50: {share} "
+                      f"({flat['latency.deep_traces']} samples)")
+        if args.slow_query_ms is not None:
+            log = engine.tracer.slow_query_log()
+            print(f"slow queries (>{args.slow_query_ms}ms): "
+                  f"{flat['latency.slow_queries']} captured, "
+                  f"{len(log)} in the ring")
+            for entry in log[-3:]:
+                print(f"  seq={entry['seq']} {entry['e2e_ms']:.2f}ms "
+                      f"batch={entry['batch']} bucket={entry['bucket']} "
+                      f"nprobe={entry['nprobe']} spec={entry['spec']}")
+        if args.trace_dir is not None:
+            path = engine.flush_trace()
+            print(f"trace written: {path}")
     if metrics_srv is not None:
         import urllib.request
         with urllib.request.urlopen(metrics_srv.url, timeout=5) as r:

@@ -4,8 +4,9 @@ the tagged index union + ops registry), the batched serving engine that
 integrates MPAD reduction, the streaming (mutable) layer on top of it,
 snapshot persistence, the durability subsystem (write-ahead log, crash
 recovery, maintenance policy), the replication layer (WAL shipping +
-follower catch-up, incremental snapshot chains, group commit), and the
-typed metrics/observability surface."""
+follower catch-up, incremental snapshot chains, group commit), the
+typed metrics surface, and request-level tracing (latency histograms,
+sampled deep traces, slow-query capture, online recall estimation)."""
 from .knn import (knn_search, knn_search_blocked, masked_topk, recall_at_k,
                   amk_accuracy)
 from .ivf import (IVFIndex, balance_cells, build_ivf, cell_vectors,
@@ -31,9 +32,11 @@ from .durability import (CatchUpStats, Decision, DivergenceError,
                          WalError, WalSource, catch_up, replay,
                          replay_records, seed_follower)
 from .metrics import (CompactMetrics, EngineInfo, EngineMetrics,
-                      MetricsServer, PolicyMetrics, ReplicationMetrics,
+                      HistogramSnapshot, LatencyMetrics, MetricsServer,
+                      PolicyMetrics, RecallMetrics, ReplicationMetrics,
                       SnapshotMetrics, StreamMetrics, WalMetrics,
                       collect_metrics, render_prometheus)
+from .tracing import TraceConfig, Tracer, deep_trace, jax_profile
 
 __all__ = [
     "knn_search", "knn_search_blocked", "masked_topk", "recall_at_k",
@@ -65,5 +68,8 @@ __all__ = [
     # typed metrics / observability
     "EngineMetrics", "EngineInfo", "StreamMetrics", "CompactMetrics",
     "PolicyMetrics", "WalMetrics", "SnapshotMetrics", "ReplicationMetrics",
+    "HistogramSnapshot", "LatencyMetrics", "RecallMetrics",
     "collect_metrics", "render_prometheus", "MetricsServer",
+    # request-level tracing
+    "TraceConfig", "Tracer", "deep_trace", "jax_profile",
 ]

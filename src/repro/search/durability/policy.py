@@ -53,8 +53,17 @@ class PolicyConfig:
     drift_min_rows: int = 256        # ... measured over at least this
     #                                  many folded rows
     auto_rebuild: bool = False       # False: surface "advise_rebuild" in
-    #                                  stats; True: rebuild through
+    #                                  metrics; True: rebuild through
     #                                  build_engine automatically
+    recall_floor: Optional[float] = None  # advise/trigger a rebuild when
+    #                                  the online recall estimate
+    #                                  (Tracer shadow-exact EMA, fed via
+    #                                  observe_recall) drops below this
+    #                                  (None disables; needs
+    #                                  engine.tracing(recall_every=N))
+    recall_min_samples: int = 8      # ... after at least this many
+    #                                  shadow-exact samples (one noisy
+    #                                  sample must not trigger retrains)
 
     def __post_init__(self):
         if not (0.0 < self.tombstone_density <= 1.0):
@@ -69,6 +78,11 @@ class PolicyConfig:
             raise ValueError("drift_ratio must be > 1")
         if self.drift_min_rows < 1:
             raise ValueError("drift_min_rows must be >= 1")
+        if (self.recall_floor is not None
+                and not 0.0 < self.recall_floor <= 1.0):
+            raise ValueError("recall_floor must be in (0, 1]")
+        if self.recall_min_samples < 1:
+            raise ValueError("recall_min_samples must be >= 1")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -88,8 +102,10 @@ class MaintenancePolicy:
 
     The engine feeds it observations (build-time baseline encode error,
     per-compaction encode error of the folded delta rows, tombstone and
-    capacity counts at decision points); it returns ``Decision``s and
-    keeps per-kind counters for ``SearchEngine.stats()``.
+    capacity counts at decision points, and — when a ``Tracer`` runs
+    shadow-exact sampling — the online recall estimate); it returns
+    ``Decision``s and keeps per-kind counters for
+    ``SearchEngine.metrics()``.
     """
 
     def __init__(self, config: Optional[PolicyConfig] = None):
@@ -97,6 +113,9 @@ class MaintenancePolicy:
         self.base_error: Optional[float] = None
         self.recent_error: Optional[float] = None
         self.recent_rows = 0
+        self.recall_ema: Optional[float] = None
+        self.recall_k: Optional[int] = None
+        self.recall_samples = 0
         self.decisions: dict = {}
 
     # --- observations ----------------------------------------------------
@@ -119,6 +138,19 @@ class MaintenancePolicy:
         else:
             self.recent_error = 0.5 * (self.recent_error + err)
         self.recent_rows += int(n_rows)
+
+    def observe_recall(self, recall: float, k: int):
+        """Fold one shadow-exact recall sample into the policy's view of
+        serving quality (the ``Tracer`` calls this on every sampled
+        query when a policy is configured). The EMA here intentionally
+        mirrors the tracer's gauge: the policy must act on the same
+        number the dashboards show."""
+        a = 0.1
+        recall = float(recall)
+        self.recall_ema = (recall if self.recall_ema is None
+                           else a * recall + (1.0 - a) * self.recall_ema)
+        self.recall_k = int(k)
+        self.recall_samples += 1
 
     def drift_ratio(self) -> Optional[float]:
         """recent/base encode-error ratio; None until both observed."""
@@ -161,6 +193,14 @@ class MaintenancePolicy:
                 kind, f"encode-error drift {ratio:.2f}x over "
                       f"{self.recent_rows} rows (threshold "
                       f"{c.drift_ratio}x)"))
+        if (c.recall_floor is not None and self.recall_ema is not None
+                and self.recall_samples >= c.recall_min_samples
+                and self.recall_ema < c.recall_floor):
+            kind = "rebuild" if c.auto_rebuild else "advise_rebuild"
+            return self._emit(Decision(
+                kind, f"online recall estimate {self.recall_ema:.3f}@"
+                      f"{self.recall_k} below floor {c.recall_floor} "
+                      f"({self.recall_samples} shadow samples)"))
         if c.grow_headroom > 0 and free_rows < c.grow_headroom * delta_capacity:
             return self._emit(Decision(
                 "grow", f"free rows {free_rows} below headroom "
@@ -170,9 +210,11 @@ class MaintenancePolicy:
         return _NONE
 
     def stats(self) -> dict:
-        """Counters + drift state for ``SearchEngine.stats()``."""
+        """Counters + drift/recall state for ``SearchEngine.metrics()``."""
         return {"decisions": dict(self.decisions),
                 "base_error": self.base_error,
                 "recent_error": self.recent_error,
                 "recent_rows": self.recent_rows,
-                "drift_ratio": self.drift_ratio()}
+                "drift_ratio": self.drift_ratio(),
+                "recall_ema": self.recall_ema,
+                "recall_samples": self.recall_samples}

@@ -29,6 +29,7 @@ from __future__ import annotations
 
 import dataclasses
 import os
+import time
 from typing import Iterator, List, Protocol, Tuple
 
 from .recovery import ReplayStats, replay_records
@@ -199,6 +200,12 @@ def catch_up(engine, source: WalSource, after_seq: int = None
     engine._repl_catch_ups += 1
     engine._repl_records += stats.records
     engine._repl_source_tail = tail
+    # wall-clock stamps behind replication.lag_seconds /
+    # .catch_up_age_seconds: every pass refreshes the staleness gauge,
+    # and a pass that drains the source pins the "fully caught up" time
+    engine._repl_last_catch_up_ts = time.time()
+    if tail - engine._applied_seq <= 0:
+        engine._repl_caught_up_ts = engine._repl_last_catch_up_ts
     return CatchUpStats(
         records=stats.records, upserts=stats.upserts, deletes=stats.deletes,
         compactions=stats.compactions, policies=stats.policies,

@@ -171,11 +171,29 @@ def ivfpq_adc_scan(centroids: jax.Array, lists: jax.Array,
     """
     _check_adc_args(backend, lut_dtype)
     q = jnp.asarray(q, jnp.float32)
-    nq = q.shape[0]
-    m, kc = cbnorm.shape
     # coarse probe: distances to every centroid, keep the nprobe nearest
     probe, cand, cd2p = probe_cells(centroids, lists, q,
                                     nprobe, n_cand)       # (Q,P),(Q,C),(Q,P)
+    return ivfpq_scan_given_probe(probe, cand, cd2p, codes_cell, bias_cell,
+                                  lut_w, cbnorm, codebooks, q, n_cand,
+                                  backend=backend, interpret=interpret,
+                                  lut_dtype=lut_dtype, live=live)
+
+
+def ivfpq_scan_given_probe(probe: jax.Array, cand: jax.Array,
+                           cd2p: jax.Array, codes_cell: jax.Array,
+                           bias_cell: jax.Array, lut_w: jax.Array,
+                           cbnorm: jax.Array, codebooks: jax.Array,
+                           q: jax.Array, n_cand: int, backend: str = "jnp",
+                           interpret: bool = True, lut_dtype: str = "f32",
+                           live=None):
+    """ADC scan given an already-computed coarse probe — the back half of
+    ``ivfpq_adc_scan``, split out so the deep-trace staged pipeline can
+    time probe and scan as separate programs with identical math.
+    """
+    q = jnp.asarray(q, jnp.float32)
+    nq = q.shape[0]
+    m, kc = cbnorm.shape
     # cell-independent query LUT over residual codebooks: (Q, M, K), ONE
     # dense matmul via the build-time block-diagonal factorization.
     # Only this LUT is quantized under lut_dtype; the coarse distance +
@@ -184,7 +202,7 @@ def ivfpq_adc_scan(centroids: jax.Array, lists: jax.Array,
     # candidate codes + bias through the cell-major mirrors: nprobe
     # contiguous (max_cell, M) row blocks per query, no scattered gather;
     # codes stay at stored width (uint8) — backends widen in-register
-    max_cell = lists.shape[1]
+    max_cell = codes_cell.shape[1]
     ccodes = codes_cell[probe].reshape(nq, -1, m)
     base = (jnp.repeat(cd2p, max_cell, axis=1)
             + bias_cell[probe].reshape(nq, -1))           # (Q, P*max_cell)

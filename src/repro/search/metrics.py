@@ -6,16 +6,25 @@ dataclasses of named counters and gauges with *stable dotted names*
 ``policy.drift_ema``, ``replication.follower_lag_seq``, ...). The dotted
 names are the contract: dashboards, the ``--metrics-port`` endpoint and
 ``benchmarks/check_regression.py`` key off them, so they only ever gain
-entries. The legacy ``SearchEngine.stats()`` dict is a deprecated thin
-view over this surface (one release cycle).
+entries. (The legacy ``SearchEngine.stats()`` dict view completed its
+deprecation cycle and is gone — ``metrics()`` is the only surface.)
+
+When the engine has a ``Tracer`` attached (``engine.tracing()``, see
+``repro.search.tracing``) two more sections appear: ``latency.*`` —
+end-to-end and per-stage histograms (``HistogramSnapshot``) flattened to
+``.p50/.p95/.p99/.count/.sum_ms`` plus slow-query counters — and
+``recall.*`` — the shadow-exact online recall estimate.
 
 Renderings:
 
 - ``EngineMetrics.flatten()`` — ``{dotted_name: value}`` for JSON.
 - ``render_prometheus(m)`` — Prometheus text exposition (dots become
-  underscores under a ``qpad_`` prefix; counters and gauges get TYPE
-  lines; string-valued entries ride on a ``qpad_engine_info`` label
-  set).
+  underscores under a ``qpad_`` prefix, names sanitized to the
+  Prometheus grammar; counters and gauges get TYPE lines;
+  ``HistogramSnapshot`` sections render as real ``histogram`` series
+  in seconds with cumulative ``_bucket``/``_sum``/``_count``;
+  string-valued entries ride on a ``qpad_engine_info`` label set with
+  escaped values).
 - ``MetricsServer`` — a stdlib ``http.server`` thread serving both
   (``/metrics`` Prometheus text, ``/metrics.json`` JSON); the
   launcher's ``--metrics-port`` flag.
@@ -24,13 +33,68 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import re
 import threading
-from typing import Mapping, Optional
+import time
+from typing import Mapping, Optional, Tuple
 
 __all__ = ["EngineInfo", "StreamMetrics", "CompactMetrics", "PolicyMetrics",
            "WalMetrics", "SnapshotMetrics", "ReplicationMetrics",
+           "HistogramSnapshot", "LatencyMetrics", "RecallMetrics",
            "EngineMetrics", "collect_metrics", "render_prometheus",
            "MetricsServer"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HistogramSnapshot:
+    """A frozen latency histogram: ``counts[i]`` observations at most
+    ``bounds_ms[i]`` milliseconds (trailing overflow bucket), plus the
+    exact sum/count. Percentiles interpolate linearly inside the winning
+    bucket — the usual fixed-boundary estimate, so their resolution is
+    the bucket width (log-spaced: ~a factor of 2)."""
+    bounds_ms: Tuple[float, ...]
+    counts: Tuple[int, ...]          # len(bounds_ms) + 1 (overflow)
+    sum_ms: float
+    count: int
+
+    def percentile(self, p: float) -> float:
+        """p in [0, 100] -> estimated latency in ms (0.0 when empty)."""
+        if self.count == 0:
+            return 0.0
+        target = (p / 100.0) * self.count
+        cum = 0
+        for i, c in enumerate(self.counts):
+            if c == 0:
+                continue
+            if cum + c >= target:
+                lo = self.bounds_ms[i - 1] if i > 0 else 0.0
+                hi = (self.bounds_ms[i] if i < len(self.bounds_ms)
+                      else self.bounds_ms[-1] * 2.0)
+                frac = (target - cum) / c
+                return lo + frac * (hi - lo)
+            cum += c
+        return self.bounds_ms[-1] * 2.0
+
+
+@dataclasses.dataclass(frozen=True)
+class LatencyMetrics:
+    """Request-latency section (present when a ``Tracer`` is attached)."""
+    search: HistogramSnapshot        # latency.search.{p50,p95,p99,...}
+    stages: Mapping[str, HistogramSnapshot]  # latency.stages.<stage>.*
+    #                                  (deep-trace samples only)
+    queries: int                     # latency.queries (traced searches)
+    slow_queries: int                # latency.slow_queries
+    slow_query_ms: Optional[float]   # latency.slow_query_ms (threshold)
+    deep_traces: int                 # latency.deep_traces
+
+
+@dataclasses.dataclass(frozen=True)
+class RecallMetrics:
+    """Online recall estimation (shadow-exact sampling)."""
+    estimate_at_k: Optional[float]   # recall.estimate_at_k (EMA gauge)
+    k: Optional[int]                 # recall.k (effective k of the checks)
+    samples: int                     # recall.samples
+    last: Optional[float]            # recall.last (newest raw sample)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -114,6 +178,12 @@ class ReplicationMetrics:
     follower_lag_seq: int            # replication.follower_lag_seq
     catch_ups: int                   # replication.catch_ups
     records_applied: int             # replication.records_applied
+    lag_seconds: Optional[float]     # replication.lag_seconds: wall time
+    #                                  since the follower last drained its
+    #                                  source (None until it first does)
+    catch_up_age_seconds: Optional[float]  # replication.catch_up_age_seconds:
+    #                                  wall time since the last catch_up
+    #                                  pass of any kind (staleness alarm)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -128,9 +198,14 @@ class EngineMetrics:
     wal: Optional[WalMetrics] = None
     snapshot: Optional[SnapshotMetrics] = None
     replication: Optional[ReplicationMetrics] = None
+    latency: Optional[LatencyMetrics] = None
+    recall: Optional[RecallMetrics] = None
 
     def flatten(self) -> dict:
-        """``{dotted_name: value}`` — the stable wire form."""
+        """``{dotted_name: value}`` — the stable wire form. Histogram
+        fields flatten to derived ``.p50/.p95/.p99/.count/.sum_ms``
+        entries (``latency.search.p50``, ``latency.stages.scan.p99``,
+        ...); the full bucket vectors stay behind ``histograms()``."""
         out = {}
         for section in dataclasses.fields(self):
             val = getattr(self, section.name)
@@ -139,15 +214,47 @@ class EngineMetrics:
             for f in dataclasses.fields(val):
                 v = getattr(val, f.name)
                 name = f"{section.name}.{f.name}"
-                if isinstance(v, Mapping):
+                if isinstance(v, HistogramSnapshot):
+                    out.update(_hist_entries(name, v))
+                elif isinstance(v, Mapping):
                     for k in sorted(v):
-                        out[f"{name}.{k}"] = v[k]
+                        if isinstance(v[k], HistogramSnapshot):
+                            out.update(_hist_entries(f"{name}.{k}", v[k]))
+                        else:
+                            out[f"{name}.{k}"] = v[k]
                 else:
                     out[name] = v
         return out
 
+    def histograms(self) -> dict:
+        """``{dotted_name: HistogramSnapshot}`` — the sections that
+        render as Prometheus ``histogram`` series."""
+        out = {}
+        for section in dataclasses.fields(self):
+            val = getattr(self, section.name)
+            if val is None:
+                continue
+            for f in dataclasses.fields(val):
+                v = getattr(val, f.name)
+                name = f"{section.name}.{f.name}"
+                if isinstance(v, HistogramSnapshot):
+                    out[name] = v
+                elif isinstance(v, Mapping):
+                    for k in sorted(v):
+                        if isinstance(v[k], HistogramSnapshot):
+                            out[f"{name}.{k}"] = v[k]
+        return out
+
     def to_json(self) -> str:
         return json.dumps(self.flatten(), sort_keys=True)
+
+
+def _hist_entries(name: str, h: HistogramSnapshot) -> dict:
+    return {f"{name}.p50": h.percentile(50.0),
+            f"{name}.p95": h.percentile(95.0),
+            f"{name}.p99": h.percentile(99.0),
+            f"{name}.count": h.count,
+            f"{name}.sum_ms": h.sum_ms}
 
 
 # Dotted names that are monotonically increasing counters; everything
@@ -160,6 +267,8 @@ _COUNTER_NAMES = frozenset((
     "wal.group_commits", "wal.replayed",
     "snapshot.full", "snapshot.incremental",
     "replication.catch_ups", "replication.records_applied",
+    "latency.queries", "latency.slow_queries", "latency.deep_traces",
+    "recall.samples",
 ))
 
 
@@ -167,25 +276,65 @@ def _is_counter(name: str) -> bool:
     return name in _COUNTER_NAMES or name.startswith("policy.decisions.")
 
 
+def _sanitize_name(name: str) -> str:
+    """Dotted metric name -> valid Prometheus identifier
+    (``[a-zA-Z_:][a-zA-Z0-9_:]*``). Spec-derived map keys can carry
+    digits/hyphens/arbitrary punctuation — every invalid byte becomes
+    ``_`` and a leading digit gets a ``_`` prefix."""
+    name = re.sub(r"[^a-zA-Z0-9_:]", "_", name)
+    if name and name[0].isdigit():
+        name = "_" + name
+    return name
+
+
+def _escape_label(value: str) -> str:
+    """Prometheus label-value escaping: backslash, double-quote and
+    newline (spec strings contain ``>``/``:`` which are legal, but a
+    quote or newline would tear the exposition)."""
+    return (value.replace("\\", "\\\\").replace('"', '\\"')
+            .replace("\n", "\\n"))
+
+
+def _render_histogram(lines: list, name: str, h: HistogramSnapshot):
+    """One Prometheus ``histogram`` series (in seconds, the Prometheus
+    base unit) with cumulative ``_bucket`` counts, ``_sum``, ``_count``."""
+    pname = _sanitize_name("qpad_" + name.replace(".", "_") + "_seconds")
+    lines.append(f"# TYPE {pname} histogram")
+    cum = 0
+    for bound_ms, count in zip(h.bounds_ms, h.counts):
+        cum += count
+        lines.append(f'{pname}_bucket{{le="{bound_ms / 1e3:.6g}"}} {cum}')
+    cum += h.counts[-1]
+    lines.append(f'{pname}_bucket{{le="+Inf"}} {cum}')
+    lines.append(f"{pname}_sum {h.sum_ms / 1e3:.9g}")
+    lines.append(f"{pname}_count {h.count}")
+
+
 def render_prometheus(m: EngineMetrics) -> str:
     """Prometheus text exposition of one metrics snapshot. Numeric
     entries become ``qpad_<dotted_with_underscores>`` samples with TYPE
-    lines; string entries (index kind, fsync mode, role, spec) become
-    labels on a single ``qpad_engine_info`` gauge."""
+    lines (names sanitized to the Prometheus grammar); histogram
+    sections become real ``histogram`` series in seconds
+    (``qpad_latency_search_seconds_bucket``/``_sum``/``_count``)
+    alongside the derived percentile gauges; string entries (index kind,
+    fsync mode, role, spec) become escaped labels on a single
+    ``qpad_engine_info`` gauge."""
     lines, info_labels = [], []
     for name, value in sorted(m.flatten().items()):
         if value is None:
             continue
         if isinstance(value, str):
-            key = name.replace(".", "_")
-            info_labels.append(f'{key}="{value}"')
+            key = _sanitize_name(name.replace(".", "_"))
+            info_labels.append(f'{key}="{_escape_label(value)}"')
             continue
-        pname = "qpad_" + name.replace(".", "_")
+        pname = _sanitize_name("qpad_" + name.replace(".", "_"))
         kind = "counter" if _is_counter(name) else "gauge"
         lines.append(f"# TYPE {pname} {kind}")
         if isinstance(value, bool):
             value = int(value)
         lines.append(f"{pname} {value}")
+    for name, h in sorted(m.histograms().items()):
+        _render_histogram(lines, name, h)
     lines.append("# TYPE qpad_engine_info gauge")
     lines.append("qpad_engine_info{%s} 1" % ",".join(info_labels))
     return "\n".join(lines) + "\n"
@@ -242,16 +391,27 @@ def collect_metrics(engine) -> EngineMetrics:
             replayed=engine._replayed, fsync=ws["fsync"],
             group_commit_ms=ws["group_commit_ms"])
     if engine._role == "follower":
+        now = time.time()
+        last_ts = getattr(engine, "_repl_last_catch_up_ts", None)
+        caught_ts = getattr(engine, "_repl_caught_up_ts", None)
         replication = ReplicationMetrics(
             applied_seq=engine._applied_seq,
             source_tail_seq=engine._repl_source_tail,
             follower_lag_seq=max(
                 0, engine._repl_source_tail - engine._applied_seq),
             catch_ups=engine._repl_catch_ups,
-            records_applied=engine._repl_records)
+            records_applied=engine._repl_records,
+            lag_seconds=(None if caught_ts is None else now - caught_ts),
+            catch_up_age_seconds=(None if last_ts is None
+                                  else now - last_ts))
+    latency = recall = None
+    tracer = getattr(engine, "_tracer", None)
+    if tracer is not None:
+        latency, recall = tracer.metrics_sections()
     return EngineMetrics(engine=info, stream=stream, compact=compact,
                          policy=policy, wal=wal, snapshot=snapshot,
-                         replication=replication)
+                         replication=replication, latency=latency,
+                         recall=recall)
 
 
 class MetricsServer:

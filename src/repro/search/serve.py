@@ -100,8 +100,10 @@ top of the newest snapshot and recovers the exact pre-crash store;
 ``MaintenancePolicy`` (``StreamConfig(policy=PolicyConfig(...))``)
 watches tombstone density, capacity headroom, and quantizer drift and
 triggers ``vacuum``/grow/``rebuild_quantizers`` — every decision logged
-to the WAL for deterministic replay. ``engine.stats()`` surfaces the
-counters.
+to the WAL for deterministic replay. ``engine.metrics()`` surfaces the
+counters; ``engine.tracing()`` (``repro.search.tracing``) adds latency
+histograms, sampled deep traces, slow-query capture, and online recall
+estimation on top.
 
 Index kinds (``IndexSpec.kind`` / ``ServeConfig.index``):
 
@@ -120,6 +122,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import os
+import time
 from typing import NamedTuple, Optional, Tuple
 
 import jax
@@ -453,9 +456,13 @@ def search_fn(state: EngineState, queries: jax.Array, k: int, *,
     """
     ops = get_ops(state.index.kind)
     queries = jnp.asarray(queries, jnp.float32)
+    # named_scope annotations label the stage boundaries inside the fused
+    # program for jax.profiler / Perfetto timelines (see
+    # repro.search.tracing); they are free at run time
     if state.proj is not None:
         matrix, mean = state.proj
-        qr = (queries - mean) @ matrix.T
+        with jax.named_scope("qpad.project"):
+            qr = (queries - mean) @ matrix.T
     else:
         qr = queries
     # lossy scoring (reduction and/or PQ codes) -> over-retrieve + re-rank
@@ -464,7 +471,8 @@ def search_fn(state: EngineState, queries: jax.Array, k: int, *,
     n_cand = rerank if approximate else k
     p = ScanParams(nprobe=nprobe, backend=backend, interpret=interpret,
                    lut_dtype=lut_dtype, scan_cap=scan_cap)
-    d_scan, cand = ops.scan(state, qr, n_cand, p)
+    with jax.named_scope("qpad.scan"):
+        d_scan, cand = ops.scan(state, qr, n_cand, p)
     if prefilter > 0:
         if state.index.kind != "ivfpq" or state.proj is not None:
             raise ValueError(
@@ -472,9 +480,11 @@ def search_fn(state: EngineState, queries: jax.Array, k: int, *,
                 "certified distance bounds require the scan space to be "
                 "the re-rank space")
         if prefilter < n_cand:
-            return _prefiltered_rerank(state, queries, qr, d_scan, cand,
-                                       k, prefilter, lut_dtype)
-    return exact_rerank(queries, state.corpus, cand, k)
+            with jax.named_scope("qpad.rerank"):
+                return _prefiltered_rerank(state, queries, qr, d_scan,
+                                           cand, k, prefilter, lut_dtype)
+    with jax.named_scope("qpad.rerank"):
+        return exact_rerank(queries, state.corpus, cand, k)
 
 
 # --- sharded serving (shard_map over a database-axis mesh) -------------------
@@ -515,7 +525,8 @@ def _sharded_core(sstate: ShardedEngineState, queries: jax.Array, *, k: int,
     queries = jnp.asarray(queries, jnp.float32)
     if sstate.proj is not None:
         matrix, mean = sstate.proj
-        qr = (queries - mean) @ matrix.T
+        with jax.named_scope("qpad.project"):
+            qr = (queries - mean) @ matrix.T
     else:
         qr = queries
     approximate = sstate.proj is not None or ops.lossy
@@ -523,16 +534,19 @@ def _sharded_core(sstate: ShardedEngineState, queries: jax.Array, *, k: int,
     n_cand = rerank if approximate else k
     p = ScanParams(nprobe=nprobe, backend=backend, interpret=interpret,
                    lut_dtype=lut_dtype)
-    d2, cand = ops.local_scan(sstate, qr, n_cand, p, axis, slack)
+    with jax.named_scope("qpad.scan"):
+        d2, cand = ops.local_scan(sstate, qr, n_cand, p, axis, slack)
     # distributed merge: every shard's local top-n_cand is a superset of the
     # global top-n_cand members it owns, so the merged set equals the
     # single-device candidate set exactly
-    d2g = jax.lax.all_gather(d2, axis, axis=1, tiled=True)   # (Q, S*n_cand)
-    idg = jax.lax.all_gather(cand, axis, axis=1, tiled=True)
-    neg, sel = jax.lax.top_k(-d2g, n_cand)
-    merged = jnp.take_along_axis(idg, sel, axis=1)
-    merged = jnp.where(jnp.isneginf(neg), -1, merged)
-    return _sharded_rerank(queries, sstate.corpus, merged, k, axis)
+    with jax.named_scope("qpad.merge"):
+        d2g = jax.lax.all_gather(d2, axis, axis=1, tiled=True)  # (Q, S*n_cand)
+        idg = jax.lax.all_gather(cand, axis, axis=1, tiled=True)
+        neg, sel = jax.lax.top_k(-d2g, n_cand)
+        merged = jnp.take_along_axis(idg, sel, axis=1)
+        merged = jnp.where(jnp.isneginf(neg), -1, merged)
+    with jax.named_scope("qpad.rerank"):
+        return _sharded_rerank(queries, sstate.corpus, merged, k, axis)
 
 
 def sharded_search_fn(sstate: ShardedEngineState, queries: jax.Array, k: int,
@@ -676,6 +690,16 @@ class SearchEngine:
         self._repl_catch_ups = 0     # catch_up passes completed
         self._repl_records = 0       # shipped records applied
         self._repl_source_tail = -1  # source tail at the last catch_up
+        self._repl_last_catch_up_ts = None   # wall clock of the last
+        #                              catch_up pass (staleness gauge)
+        self._repl_caught_up_ts = None       # wall clock of the last
+        #                              catch_up that drained the source
+        #                              (replication.lag_seconds)
+        # observability (repro.search.tracing): None until tracing() —
+        # the serve path takes zero extra work without a tracer
+        self._tracer = None
+        self._deep_warm: set = set() # deep-trace stage shapes already
+        #                              compiled (never time a compile)
         # incremental snapshots (repro.search.snapshot)
         self._base_ref = None        # the chain this engine can extend:
         #                              {dir, ckpt, wal_seq, chain} of the
@@ -1318,43 +1342,58 @@ class SearchEngine:
         from .metrics import collect_metrics
         return collect_metrics(self)
 
-    def stats(self) -> dict:
-        """Deprecated: use ``metrics()`` — the typed ``EngineMetrics``
-        surface with stable dotted names. This ad-hoc dict view remains
-        for one release cycle and then goes away."""
-        import warnings
-        warnings.warn(
-            "SearchEngine.stats() is deprecated; use SearchEngine"
-            ".metrics() (typed EngineMetrics with stable dotted names)",
-            DeprecationWarning, stacklevel=2)
-        return self._stats_dict()
+    def tracing(self, config=None, **knobs) -> "SearchEngine":
+        """Attach request-level observability (``repro.search.tracing``):
+        latency histograms into ``metrics().latency``, optional sampled
+        deep traces (``deep_trace_every=N``), slow-query capture
+        (``slow_query_ms=T``), shadow-exact recall estimation
+        (``recall_every=N``) and Chrome-trace export (``trace_dir=``).
 
-    def _stats_dict(self) -> dict:
-        """The legacy ``stats()`` dict shape (kept verbatim while the
-        deprecation cycle runs)."""
-        s = {"index": self.config.index,
-             "streaming": self.store is not None,
-             "sharded": (self.sharded_state is not None
-                         or self._stream_sharded_base is not None),
-             "compile_count": self.compile_count}
-        if self.store is not None:
-            store = self.store
-            s["stream"] = {
-                "n_rows": int(store.n_rows),
-                "row_capacity": int(store.corpus.shape[0]),
-                "delta_used": self._delta_used,
-                "delta_count": int(store.delta_count),
-                "delta_capacity": int(store.delta_ids.shape[0]),
-                "tombstones": int(jnp.sum(store.dead)),
-                "grow_count": self.grow_count,
-                "compaction_pending": self._compact_future is not None,
-            }
-            s["maintenance"] = dict(self._counters)
-            if self._policy is not None:
-                s["policy"] = self._policy.stats()
-        if self._wal is not None:
-            s["wal"] = dict(self._wal.stats(), replayed=self._replayed)
-        return s
+        Pass a ``TraceConfig`` or its fields as keyword knobs; calling
+        with no arguments attaches the cheap production default
+        (end-to-end histograms only). ``tracing(None)`` with an explicit
+        ``config=None`` and no knobs re-attaches defaults too; detach
+        with ``engine.tracer = None`` via the attribute. Returns ``self``
+        for chaining."""
+        from .tracing import TraceConfig, Tracer
+        if config is None:
+            config = TraceConfig(**knobs)
+        elif knobs:
+            config = dataclasses.replace(config, **knobs)
+        self._tracer = Tracer(config)
+        return self
+
+    @property
+    def tracer(self):
+        """The attached ``Tracer`` (None when tracing is off)."""
+        return self._tracer
+
+    @tracer.setter
+    def tracer(self, value):
+        self._tracer = value
+
+    @property
+    def trace_dir(self) -> Optional[str]:
+        """Chrome-trace export directory (None = event capture off).
+        Setting it attaches/updates the tracer in place."""
+        return (self._tracer.config.trace_dir
+                if self._tracer is not None else None)
+
+    @trace_dir.setter
+    def trace_dir(self, directory: Optional[str]):
+        from .tracing import TraceConfig, Tracer
+        if self._tracer is None:
+            self._tracer = Tracer(TraceConfig(trace_dir=directory))
+        else:
+            self._tracer.config = dataclasses.replace(
+                self._tracer.config, trace_dir=directory)
+
+    def flush_trace(self, path: Optional[str] = None) -> Optional[str]:
+        """Write buffered trace events as Chrome-trace JSON; returns the
+        path (None when no tracer / event capture is attached)."""
+        if self._tracer is None:
+            return None
+        return self._tracer.flush(path)
 
     def _shard_stream_base(self):
         from repro.parallel.engine import shard_stream
@@ -1497,6 +1536,11 @@ class SearchEngine:
                 r_s = max(2 * k, cfg.rerank // 2)
                 if r_s < cfg.rerank:
                     kw["prefilter"] = r_s
+        # tracing: one perf_counter read when a tracer is attached and
+        # active; with no tracer the serve path is exactly the old one
+        tracer = self._tracer
+        t0 = (time.perf_counter()
+              if tracer is not None and tracer.active else None)
         if self.store is not None:
             self._poll_compaction()     # swap in a finished background fold
             if self._stream_sharded_base is not None:
@@ -1514,6 +1558,10 @@ class SearchEngine:
                 axis=self._shard_axis, **kw)
         else:
             d, ids = self._program(self.state, queries, k, **kw)
+        if t0 is not None:
+            # blocks the result (an honest end-to-end number — the
+            # caller's own block becomes a no-op), then records/samples
+            tracer.on_search(self, queries, nq, k, kw, t0, d, ids)
         return d[:nq], ids[:nq]
 
 

@@ -152,7 +152,8 @@ def stream_search_fn(store: StreamStore, frozen: FrozenParams,
     qr = queries
     if frozen.proj is not None:
         matrix, mean = frozen.proj
-        qr = (queries - mean) @ matrix.T
+        with jax.named_scope("qpad.project"):
+            qr = (queries - mean) @ matrix.T
     approximate = frozen.proj is not None or ops.lossy
     _check_rerank_budget(approximate, rerank, k)
     n_cand = rerank if approximate else k
@@ -160,16 +161,21 @@ def stream_search_fn(store: StreamStore, frozen: FrozenParams,
     n_cap = store.corpus.shape[0]
     p = ScanParams(nprobe=nprobe, backend=backend, interpret=interpret,
                    lut_dtype=lut_dtype)
-    bd2, bids = ops.stream_scan(store, frozen, qr, n_cand, live, p)
+    with jax.named_scope("qpad.base_scan"):
+        bd2, bids = ops.stream_scan(store, frozen, qr, n_cand, live, p)
     delta_scan_rows = (store.delta_reduced
                        if store.delta_reduced is not None
                        else store.delta_vectors)
-    dd2, dids = _delta_scan(qr, delta_scan_rows, store.delta_ids,
-                            store.delta_count, n_cap, n_cand)
-    md2, mids = masked_topk(jnp.concatenate([bd2, dd2], axis=1),
-                            jnp.concatenate([bids, dids], axis=1), n_cand)
-    dists, internal = _stream_rerank(queries, store.corpus,
-                                     store.delta_vectors, mids, k)
+    with jax.named_scope("qpad.delta_scan"):
+        dd2, dids = _delta_scan(qr, delta_scan_rows, store.delta_ids,
+                                store.delta_count, n_cap, n_cand)
+    with jax.named_scope("qpad.merge"):
+        md2, mids = masked_topk(jnp.concatenate([bd2, dd2], axis=1),
+                                jnp.concatenate([bids, dids], axis=1),
+                                n_cand)
+    with jax.named_scope("qpad.rerank"):
+        dists, internal = _stream_rerank(queries, store.corpus,
+                                         store.delta_vectors, mids, k)
     return dists, _to_external(internal, store.row_ids, store.delta_ids)
 
 
@@ -186,7 +192,8 @@ def _stream_sharded_core(sbase: ShardedEngineState, repl: StreamReplica,
     qr = queries
     if sbase.proj is not None:
         matrix, mean = sbase.proj
-        qr = (queries - mean) @ matrix.T
+        with jax.named_scope("qpad.project"):
+            qr = (queries - mean) @ matrix.T
     approximate = sbase.proj is not None or ops.lossy
     _check_rerank_budget(approximate, rerank, k)
     n_cand = rerank if approximate else k
@@ -194,14 +201,16 @@ def _stream_sharded_core(sbase: ShardedEngineState, repl: StreamReplica,
     n_cap = repl.row_ids.shape[0]
     p = ScanParams(nprobe=nprobe, backend=backend, interpret=interpret,
                    lut_dtype=lut_dtype)
-    d2, cand = ops.local_scan(sbase, qr, n_cand, p, axis, 0, live=live)
-    d2g = jax.lax.all_gather(d2, axis, axis=1, tiled=True)
-    idg = jax.lax.all_gather(cand, axis, axis=1, tiled=True)
-    bd2, bids = masked_topk(d2g, idg, n_cand)
+    with jax.named_scope("qpad.base_scan"):
+        d2, cand = ops.local_scan(sbase, qr, n_cand, p, axis, 0, live=live)
+        d2g = jax.lax.all_gather(d2, axis, axis=1, tiled=True)
+        idg = jax.lax.all_gather(cand, axis, axis=1, tiled=True)
+        bd2, bids = masked_topk(d2g, idg, n_cand)
     delta_scan_rows = (repl.delta_reduced if repl.delta_reduced is not None
                        else repl.delta_vectors)
-    dd2, dids = _delta_scan(qr, delta_scan_rows, repl.delta_ids,
-                            repl.delta_count, n_cap, n_cand)
+    with jax.named_scope("qpad.delta_scan"):
+        dd2, dids = _delta_scan(qr, delta_scan_rows, repl.delta_ids,
+                                repl.delta_count, n_cap, n_cand)
     md2, mids = masked_topk(jnp.concatenate([bd2, dd2], axis=1),
                             jnp.concatenate([bids, dids], axis=1), n_cand)
     # two-source re-rank: base rows scored by their owner shard, delta rows

@@ -446,7 +446,7 @@ def test_background_compaction_atomic_swap():
     eng.upsert(np.arange(600, 640, dtype=np.int32), _rows(1, 40))
     pre = np.asarray(eng.search(q, K)[1])
     eng.upsert(np.arange(640, 660, dtype=np.int32), _rows(2, 20))
-    assert eng.stats()["stream"]["compaction_pending"]
+    assert eng.metrics().compact.pending
     for _ in range(4):
         mid = np.asarray(eng.search(q, K)[1])    # old store, mid-fold
         np.testing.assert_array_equal(mid, pre)
@@ -456,9 +456,9 @@ def test_background_compaction_atomic_swap():
     assert 600 not in during
     gate.set()
     eng.finish_compact()
-    st = eng.stats()
-    assert st["maintenance"]["swaps"] == 1
-    assert not st["stream"]["compaction_pending"]
+    m = eng.metrics()
+    assert m.compact.swaps == 1
+    assert not m.compact.pending
     post = np.asarray(eng.search(q, K)[1])
     assert 600 not in post
     # post-swap store == blocking-compaction oracle over the same ops
@@ -481,7 +481,7 @@ def test_background_compaction_poll_swaps_without_explicit_finish():
     fut.result()                          # wait for the fold (test only)
     eng.search(_queries(), K)             # poll point
     assert eng._compact_future is None
-    assert eng.stats()["maintenance"]["swaps"] == 1
+    assert eng.metrics().compact.swaps == 1
 
 
 def test_background_overflow_falls_back_to_blocking():
@@ -490,9 +490,9 @@ def test_background_overflow_falls_back_to_blocking():
     eng = _bg_engine()
     eng.upsert(np.arange(600, 640, dtype=np.int32), _rows(1, 40))
     eng.upsert(np.arange(640, 680, dtype=np.int32), _rows(2, 40))
-    st = eng.stats()
-    assert not st["stream"]["compaction_pending"]
-    assert st["maintenance"]["compactions"] >= 1
+    m = eng.metrics()
+    assert not m.compact.pending
+    assert m.compact.compactions >= 1
     ids = np.asarray(eng.search(_queries(), 5)[1])
     assert ids.shape == (16, 5)
 
@@ -515,7 +515,7 @@ def test_background_compaction_atomic_on_shards(shards):
     eng.upsert(np.arange(600, 640, dtype=np.int32), _rows(1, 40))
     pre = np.asarray(eng.search(q, K)[1])
     eng.upsert(np.arange(640, 660, dtype=np.int32), _rows(2, 20))
-    assert eng.stats()["stream"]["compaction_pending"]
+    assert eng.metrics().compact.pending
     mid = np.asarray(eng.search(q, K)[1])
     np.testing.assert_array_equal(mid, pre)       # old store, whole fleet
     gate.set()
@@ -541,10 +541,10 @@ def test_delete_triggers_vacuum_through_policy():
     q = _queries()
     keep = np.asarray(eng.search(q, K)[1])
     eng.delete(np.arange(200, 500, dtype=np.int32))
-    st = eng.stats()
-    assert st["maintenance"]["vacuums"] == 1
-    assert st["stream"]["tombstones"] == 0        # reclaimed, not masked
-    assert st["stream"]["n_rows"] == N - 300
+    m = eng.metrics()
+    assert m.compact.vacuums == 1
+    assert m.stream.tombstones == 0               # reclaimed, not masked
+    assert m.stream.rows == N - 300
     got = np.asarray(eng.search(q, K)[1])
     assert not np.any((got >= 200) & (got < 500))
 
@@ -554,9 +554,9 @@ def test_delete_without_policy_never_vacuums():
     contract, incl. the pinned no-recompile behavior, is untouched)."""
     eng = SearchEngine(_data(), _cfg("ivf"))
     eng.delete(np.arange(0, 400, dtype=np.int32))
-    st = eng.stats()
-    assert st["maintenance"]["vacuums"] == 0
-    assert st["stream"]["tombstones"] == 400
+    m = eng.metrics()
+    assert m.compact.vacuums == 0
+    assert m.stream.tombstones == 400
 
 
 def test_policy_grow_headroom(tmp_path):
@@ -567,19 +567,19 @@ def test_policy_grow_headroom(tmp_path):
     live = str(tmp_path / "live")
     eng = SearchEngine(_data(), cfg).durable(
         live, DurabilityConfig(fsync="batch"))
-    cap0 = eng.stats()["stream"]["row_capacity"]
+    cap0 = eng.metrics().stream.row_capacity
     ids = np.arange(600, 600 + 3 * 48, dtype=np.int32)
     eng.upsert(ids, _rows(5, len(ids)))           # forces compactions
     eng.compact()
-    st = eng.stats()
-    assert st["maintenance"]["policy_grows"] >= 1
-    assert st["stream"]["row_capacity"] > cap0
+    m = eng.metrics()
+    assert m.compact.policy_grows >= 1
+    assert m.stream.row_capacity > cap0
     wal_types = [rt for _, rt, _ in
                  iter_records(os.path.join(live, "wal"))]
     assert RT_POLICY in wal_types
     q = _queries()
     rec = load_engine(live)
-    assert rec.stats()["stream"]["row_capacity"] == st["stream"]["row_capacity"]
+    assert rec.metrics().stream.row_capacity == m.stream.row_capacity
     np.testing.assert_array_equal(np.asarray(rec.search(q, K)[1]),
                                   np.asarray(eng.search(q, K)[1]))
 
@@ -595,16 +595,16 @@ def test_drift_advises_then_auto_rebuilds():
     adv = mk(False)
     adv.upsert(np.arange(600, 648, dtype=np.int32), shifted)
     adv.compact()
-    st = adv.stats()
-    assert st["policy"]["decisions"].get("advise_rebuild", 0) >= 1
-    assert st["maintenance"]["rebuilds"] == 0
-    assert st["policy"]["drift_ratio"] > 2.0
+    m = adv.metrics()
+    assert m.policy.decisions.get("advise_rebuild", 0) >= 1
+    assert m.compact.rebuilds == 0
+    assert m.policy.drift_ratio > 2.0
     auto = mk(True)
     auto.upsert(np.arange(600, 648, dtype=np.int32), shifted)
     auto.compact()
-    st = auto.stats()
-    assert st["maintenance"]["rebuilds"] == 1
-    assert st["policy"]["recent_rows"] == 0       # re-based after retrain
+    m = auto.metrics()
+    assert m.compact.rebuilds == 1
+    assert m.policy.observed_rows == 0            # re-based after retrain
     # the retrained engine still serves every live id
     got = np.asarray(auto.search(_queries(), K)[1])
     assert got.min() >= 0
@@ -621,25 +621,27 @@ def test_rebuild_replays_deterministically(tmp_path):
     shifted = np.asarray(_data(seed=4), np.float32)[:48] * 6 + 30
     eng.upsert(np.arange(600, 648, dtype=np.int32), shifted)
     eng.compact()                                  # drift -> logged rebuild
-    assert eng.stats()["maintenance"]["rebuilds"] == 1
+    assert eng.metrics().compact.rebuilds == 1
     q = _queries()
     rec = load_engine(live)
-    assert rec.stats()["maintenance"]["rebuilds"] == 1
+    assert rec.metrics().compact.rebuilds == 1
     np.testing.assert_array_equal(np.asarray(rec.search(q, K)[1]),
                                   np.asarray(eng.search(q, K)[1]))
 
 
-def test_stats_surface():
-    """The public counters window: benches and tests read stats(), not
-    private fields."""
+def test_metrics_surface():
+    """The public counters window: benches and tests read the typed
+    metrics() tree, not private fields (stats() is gone)."""
     eng = SearchEngine(_data(), _cfg("ivfpq"))
     eng.upsert(np.arange(600, 620, dtype=np.int32), _rows(1, 20))
-    st = eng.stats()
-    assert st["streaming"] and not st["sharded"]
-    assert st["stream"]["delta_used"] == 20
-    assert st["stream"]["n_rows"] == N
-    assert set(st["maintenance"]) == {"compactions", "swaps", "vacuums",
-                                      "rebuilds", "policy_grows"}
-    assert "wal" not in st                        # not durable
+    m = eng.metrics()
+    assert m.engine.streaming and not m.engine.sharded
+    assert m.stream.delta_used == 20
+    assert m.stream.rows == N
+    for name in ("compactions", "swaps", "vacuums", "rebuilds",
+                 "policy_grows"):
+        assert getattr(m.compact, name) >= 0
+    assert m.wal is None                          # not durable
+    assert not hasattr(eng, "stats")              # removed in favor of metrics
     ro = SearchEngine(_data(), ServeConfig(index="flat"))
-    assert not ro.stats()["streaming"]
+    assert not ro.metrics().engine.streaming

@@ -5,17 +5,25 @@ The contracts pinned here:
 * **stable dotted names** — ``EngineMetrics.flatten()`` exposes the
   documented names (``wal.records``, ``wal.fsyncs``, ``stream.fill``,
   ``compact.pending``, ``policy.drift_ema``,
-  ``replication.follower_lag_seq``, ...); sections that do not apply
-  drop out instead of renaming.
-* **deprecation** — ``SearchEngine.stats()`` still returns the exact
-  legacy dict shape but warns ``DeprecationWarning``; callers migrate to
-  ``metrics()``.
+  ``replication.follower_lag_seq``, ``latency.search.p50``,
+  ``recall.estimate_at_k``, ...); sections that do not apply drop out
+  instead of renaming.
+* **stats() is gone** — the PR-8 ``DeprecationWarning`` dict view
+  completed its cycle; ``metrics()`` is the only counters window.
 * **renderings** — ``render_prometheus`` emits ``qpad_``-prefixed
-  samples with counter/gauge TYPE lines and an ``qpad_engine_info``
-  label set; ``MetricsServer`` serves both forms over HTTP from a
-  background thread (the launcher's ``--metrics-port``).
+  samples with counter/gauge/histogram TYPE lines, sanitized metric
+  names, escaped label values, and an ``qpad_engine_info`` label set;
+  ``MetricsServer`` serves both forms over HTTP from a background
+  thread (the launcher's ``--metrics-port``) and stays correct under
+  concurrent scrapes mid-traffic.
+* **exposition hygiene** — a pure-python lint accepts the ``/metrics``
+  text of every index kind: well-formed sample lines, TYPE-before-
+  sample ordering, cumulative histogram buckets ending in ``+Inf``
+  whose count equals ``_count``.
 """
 import json
+import re
+import threading
 import urllib.error
 import urllib.request
 
@@ -25,7 +33,8 @@ import pytest
 
 from repro.search import (DurabilityConfig, MetricsServer, PolicyConfig,
                           SearchEngine, ServeConfig, StreamConfig,
-                          render_prometheus, seed_follower)
+                          build_engine, render_prometheus, seed_follower)
+from repro.search.metrics import _escape_label, _sanitize_name
 
 pytestmark = pytest.mark.durability
 
@@ -65,7 +74,9 @@ def test_typed_surface_dotted_names():
     assert flat["stream.fill"] == pytest.approx(20 / 64)
     assert flat["compact.pending"] is False
     assert m.wal is None and m.replication is None
-    assert not any(k.startswith(("wal.", "replication.")) for k in flat)
+    assert m.latency is None and m.recall is None  # no tracer attached
+    assert not any(k.startswith(("wal.", "replication.", "latency.",
+                                 "recall.")) for k in flat)
     # read-only engines have no stream/compact/snapshot sections at all
     ro = SearchEngine(_data(), ServeConfig(index="flat")).metrics()
     assert ro.stream is None and ro.compact is None and ro.snapshot is None
@@ -97,17 +108,61 @@ def test_typed_surface_wal_policy_and_follower_sections(tmp_path):
     assert "wal.records" not in ff             # followers own no log
 
 
-def test_stats_is_a_deprecated_view():
-    """stats() warns but keeps the exact legacy shape for one cycle."""
+def test_stats_removed():
+    """The deprecation cycle is closed: the dict view is gone and the
+    typed surface is the only counters window."""
     eng = SearchEngine(_data(), _stream_cfg())
-    eng.upsert(np.arange(600, 620, dtype=np.int32), _rows(1, 20))
-    with pytest.warns(DeprecationWarning, match="metrics"):
-        st = eng.stats()
-    assert st["streaming"] and not st["sharded"]
-    assert st["stream"]["delta_used"] == 20
-    assert set(st["maintenance"]) == {"compactions", "swaps", "vacuums",
-                                      "rebuilds", "policy_grows"}
-    assert "wal" not in st
+    assert not hasattr(eng, "stats")
+    assert not hasattr(SearchEngine, "stats")
+    assert eng.metrics().engine.streaming is True
+
+
+def test_latency_section_and_histogram_rendering():
+    """A traced engine grows latency.* names in flatten() and a proper
+    Prometheus histogram (_bucket/_sum/_count) in the text form."""
+    eng = SearchEngine(_data(), ServeConfig(index="flat")).tracing()
+    q = _rows(3, 8)
+    for _ in range(5):
+        eng.search(q, K)
+    flat = eng.metrics().flatten()
+    assert flat["latency.queries"] == 5
+    for p in ("p50", "p95", "p99"):
+        assert flat[f"latency.search.{p}"] > 0.0
+    assert flat["latency.search.p50"] <= flat["latency.search.p99"]
+    assert flat["latency.search.count"] == 5
+    assert flat["latency.search.sum_ms"] > 0.0
+    text = render_prometheus(eng.metrics())
+    assert "# TYPE qpad_latency_search_seconds histogram" in text
+    buckets = [int(m.group(1)) for m in re.finditer(
+        r'qpad_latency_search_seconds_bucket\{le="[^"]+"\} (\d+)', text)]
+    assert buckets == sorted(buckets)          # cumulative
+    assert buckets[-1] == 5                    # +Inf holds every sample
+    assert "qpad_latency_search_seconds_count 5" in text
+    assert "qpad_latency_search_seconds_sum " in text
+
+
+def test_recall_section_and_slow_query_capture():
+    """Shadow-exact sampling feeds recall.estimate_at_k; a zero slow
+    threshold captures every query into the ring with its knobs."""
+    eng = build_engine(_data(), "ivf12x4>pq8x64>rr40").tracing(
+        recall_every=1, slow_query_ms=0.0, deep_trace_every=2)
+    q = _rows(3, 8)
+    for _ in range(4):
+        eng.search(q, K)
+    m = eng.metrics()
+    assert m.recall.samples == 4
+    assert 0.0 < m.recall.estimate_at_k <= 1.0
+    assert m.recall.k == K
+    assert m.latency.slow_queries == 4
+    assert m.latency.deep_traces == 2          # sampled 1-in-2
+    assert set(m.latency.stages) >= {"project", "probe", "scan", "rerank"}
+    ring = eng.tracer.slow_query_log()
+    assert len(ring) == 4
+    assert ring[-1]["k"] == K and ring[-1]["batch"] == 8
+    assert ring[-1]["e2e_ms"] > 0.0
+    text = render_prometheus(m)
+    assert "qpad_recall_estimate_at_k" in text
+    assert "# TYPE qpad_recall_estimate_at_k gauge" in text
 
 
 def test_render_prometheus_text():
@@ -120,6 +175,90 @@ def test_render_prometheus_text():
     assert "qpad_compact_pending 0" in text    # bools render as 0/1
     assert 'engine_index="flat"' in text
     assert text.rstrip().splitlines()[-1].startswith("qpad_engine_info{")
+
+
+def test_name_sanitization_and_label_escaping():
+    """Dotted names with hostile characters become valid Prometheus
+    names; label values with quotes/backslashes/newlines stay one
+    well-formed line."""
+    assert _sanitize_name("latency.search.p50") == "latency_search_p50"
+    assert _sanitize_name("qpad.per-stage/scan") == "qpad_per_stage_scan"
+    assert _sanitize_name("0weird") == "_0weird"
+    assert _sanitize_name("ok_name:sub") == "ok_name:sub"
+    assert _escape_label('a"b') == 'a\\"b'
+    assert _escape_label("a\\b") == "a\\\\b"
+    assert _escape_label("a\nb") == "a\\nb"
+    # end-to-end: a spec string with every hostile character survives
+    # the info line as one parseable sample
+    text = render_prometheus(
+        SearchEngine(_data(), ServeConfig(index="flat")).metrics())
+    info = [ln for ln in text.splitlines()
+            if ln.startswith("qpad_engine_info{")]
+    assert len(info) == 1 and "\n" not in info[0]
+
+
+# --- exposition lint ---------------------------------------------------------
+
+_SAMPLE_RE = re.compile(
+    r'^[a-zA-Z_:][a-zA-Z0-9_:]*(\{[a-zA-Z_][a-zA-Z0-9_]*="(?:[^"\\]|\\.)*"'
+    r'(,[a-zA-Z_][a-zA-Z0-9_]*="(?:[^"\\]|\\.)*")*\})? '
+    r'-?(\d+\.?\d*([eE][+-]?\d+)?|[+-]?Inf|NaN)$')
+
+
+def _lint_exposition(text):
+    """Minimal pure-python Prometheus text-format checker: every line is
+    a comment or a well-formed sample; TYPE precedes its samples; each
+    histogram's buckets are cumulative, end at +Inf, and agree with
+    _count; no duplicate sample names outside histogram series."""
+    typed, seen = {}, set()
+    hist = {}
+    for ln in text.splitlines():
+        if not ln:
+            continue
+        if ln.startswith("# TYPE "):
+            _, _, name, kind = ln.split(" ")
+            assert name not in typed, f"duplicate TYPE for {name}"
+            assert kind in ("counter", "gauge", "histogram"), ln
+            typed[name] = kind
+            continue
+        if ln.startswith("#"):
+            continue
+        assert _SAMPLE_RE.match(ln), f"malformed sample line: {ln!r}"
+        name = re.split(r"[{ ]", ln, maxsplit=1)[0]
+        base = re.sub(r"_(bucket|sum|count)$", "", name)
+        if typed.get(base) == "histogram":
+            series = hist.setdefault(base, {"buckets": [], "count": None})
+            val = float(ln.rsplit(" ", 1)[1])
+            if name.endswith("_bucket"):
+                le = re.search(r'le="([^"]+)"', ln).group(1)
+                series["buckets"].append((le, val))
+            elif name.endswith("_count"):
+                series["count"] = val
+        else:
+            assert typed.get(name), f"sample before TYPE: {ln!r}"
+            key = ln.rsplit(" ", 1)[0]
+            assert key not in seen, f"duplicate sample: {key!r}"
+            seen.add(key)
+    for base, series in hist.items():
+        counts = [v for _, v in series["buckets"]]
+        assert counts == sorted(counts), f"{base} buckets not cumulative"
+        assert series["buckets"][-1][0] == "+Inf", f"{base} missing +Inf"
+        assert counts[-1] == series["count"], f"{base} +Inf != _count"
+    return typed
+
+
+@pytest.mark.parametrize("spec", ("flat", "ivf12x4", "pq8x64",
+                                  "ivf12x4>pq8x64>rr40"))
+def test_exposition_lint_every_index_kind(spec):
+    """The /metrics text of every index kind — traced, so the histogram
+    series render too — passes the exposition lint."""
+    eng = build_engine(_data(), spec).tracing(recall_every=2)
+    q = _rows(3, 8)
+    for _ in range(3):
+        eng.search(q, K)
+    typed = _lint_exposition(render_prometheus(eng.metrics()))
+    assert typed.get("qpad_latency_search_seconds") == "histogram"
+    assert typed.get("qpad_engine_compile_count") == "counter"
 
 
 def test_metrics_server_serves_both_forms(tmp_path):
@@ -147,3 +286,40 @@ def test_metrics_server_serves_both_forms(tmp_path):
         with pytest.raises(urllib.error.HTTPError) as exc:
             urllib.request.urlopen(base + "/nope", timeout=10)
         assert exc.value.code == 404
+
+
+def test_metrics_server_concurrent_scrapes_mid_traffic(tmp_path):
+    """Scrapes racing live writes + traced searches: every response is a
+    200 that passes the exposition lint — collect_metrics reads a
+    consistent engine view and the Tracer's lock keeps the histogram
+    internally consistent."""
+    eng = SearchEngine(_data(), _stream_cfg(delta_capacity=256)).tracing(
+        slow_query_ms=0.0)
+    q = _rows(3, 8)
+    eng.search(q, K)                           # warm the read program
+    errors = []
+
+    def scraper(url, n):
+        try:
+            for _ in range(n):
+                with urllib.request.urlopen(url, timeout=10) as r:
+                    assert r.status == 200
+                    _lint_exposition(r.read().decode())
+        except Exception as e:                 # pragma: no cover - surfaced
+            errors.append(e)
+
+    with MetricsServer(eng, port=0) as srv:
+        ths = [threading.Thread(target=scraper, args=(srv.url, 8))
+               for _ in range(4)]
+        for t in ths:
+            t.start()
+        for i in range(6):                     # traffic while they scrape
+            eng.upsert(np.arange(600 + 8 * i, 608 + 8 * i, dtype=np.int32),
+                       _rows(4 + i, 8))
+            eng.search(q, K)
+        for t in ths:
+            t.join()
+    assert not errors
+    m = eng.metrics()
+    assert m.latency.queries == 7              # warmup + 6 in-loop
+    assert m.stream.delta_used == 48
