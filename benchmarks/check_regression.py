@@ -26,6 +26,11 @@ fresh file: an attached-but-inert tracer must cost <=
 ``--max-trace-off-overhead`` (default 1%) of batch-256 ivfpq p50, and
 end-to-end histogram recording <= ``--max-hist-overhead`` (default 3%).
 
+The ``zoo`` section gates the reducer/index-zoo recall pairs within the
+fresh file: OPQ must hold recall@10 vs plain PQ at equal code bytes, and
+the qpad (MPAD) reducer vs PCA at equal output dim — each within
+``--zoo-recall-tol`` (default 0.005) of top-k tie noise.
+
 A missing gated row in the FRESH file is itself a failure (the bench
 silently lost coverage); a missing row in the BASELINE only warns, so the
 gate can be introduced onto older baselines without a flag day.
@@ -44,6 +49,12 @@ import sys
 
 GATED = dict(index="ivfpq", lut_dtype="f32", batch=256)
 STREAM_GATED = dict(scenario="stream_90_10", index="ivfpq")
+# zoo recall pairs (challenger, reference): the challenger must hold
+# recall@10 within --zoo-recall-tol of the reference, same file/run
+ZOO_PAIRS = (
+    ("opq-vs-pq@8B", "opq8x256", "pq8x256"),
+    ("qpad-vs-pca@32d", "qpad32>flat", "pca32>flat"),
+)
 
 
 def find_row(doc: dict, key: str = "rows", **sel):
@@ -227,6 +238,55 @@ def check_observability(baseline: dict, fresh: dict,
     return failures, report
 
 
+def check_zoo(baseline: dict, fresh: dict, recall_tol: float = 0.005):
+    """Gate the reducer/index-zoo recall pairs — within the fresh file.
+
+    Both rows of each pair run on the same corpus in the same process, so
+    the compare is hardware-independent and needs no baseline:
+
+    * **opq vs pq at equal code bytes** — the learned rotation's whole
+      point is better codes for the same budget; its fit keeps the best
+      reconstruction among iterates *including* the un-rotated one, so
+      falling below plain PQ's recall (beyond ``--zoo-recall-tol`` of
+      top-k tie noise) means the rotation path is broken;
+    * **qpad vs pca at equal output dim** — the paper's claim: the
+      quantile-preserving projection beats variance-preserving PCA for
+      neighbor retrieval at the same dimension budget.
+
+    A baseline without a ``zoo`` section predates the zoo bench and only
+    warns; a FRESH file missing it (or missing a pair row) is lost
+    coverage and fails.
+    """
+    failures, report = [], []
+    new = fresh.get("zoo")
+    if new is None:
+        if baseline.get("zoo") is not None:
+            failures.append("fresh bench is missing the zoo section")
+        else:
+            report.append("no zoo section; skipping reducer/index-zoo gates")
+        return failures, report
+    for name, challenger, reference in ZOO_PAIRS:
+        c = find_row(fresh, key="zoo", spec=challenger)
+        r = find_row(fresh, key="zoo", spec=reference)
+        missing = [s for s, row in ((challenger, c), (reference, r))
+                   if row is None]
+        if missing:
+            failures.append(f"fresh bench is missing zoo row(s) "
+                            f"{missing} ({name} gate)")
+            continue
+        gain = c["recall_at_10"] - r["recall_at_10"]
+        report.append(f"zoo {name}: {challenger} {c['recall_at_10']:.4f} "
+                      f"vs {reference} {r['recall_at_10']:.4f} "
+                      f"(gain {gain:+.4f}, floor -{recall_tol})")
+        if gain < -recall_tol:
+            failures.append(
+                f"zoo recall regression ({name}): {challenger} "
+                f"recall@10 {c['recall_at_10']:.4f} fell "
+                f"{-gain:.4f} below {reference} "
+                f"{r['recall_at_10']:.4f} (> {recall_tol} tolerance)")
+    return failures, report
+
+
 def check_lut_parity(fresh: dict, min_ratio: float = 0.95):
     """Gate quantized-LUT throughput against f32 — within the fresh file.
 
@@ -291,9 +351,12 @@ def check(baseline: dict, fresh: dict, max_qps_drop: float = 0.20,
           max_wal_overhead: float = 0.25, min_lut_ratio: float = 0.95,
           min_b64_speedup: float = 1.0, min_gc_speedup: float = 2.0,
           max_inc_frac: float = 0.10, max_trace_off: float = 0.01,
-          max_hist: float = 0.03):
+          max_hist: float = 0.03, zoo_recall_tol: float = 0.005):
     """Returns (failures, report_lines); empty failures == gate passes."""
     failures, report = [], []
+    zf, zr = check_zoo(baseline, fresh, zoo_recall_tol)
+    failures += zf
+    report += zr
     sf, sr = check_stream(baseline, fresh, max_ups_drop, max_recall_drop)
     failures += sf
     report += sr
@@ -373,6 +436,10 @@ def main(argv=None) -> int:
     ap.add_argument("--max-hist-overhead", type=float, default=0.03,
                     help="max fractional p50 cost of e2e latency-histogram "
                          "recording (within the fresh file; default 0.03)")
+    ap.add_argument("--zoo-recall-tol", type=float, default=0.005,
+                    help="absolute recall@10 slack on the zoo pairs (opq "
+                         "vs pq at equal bytes, qpad vs pca at equal dim; "
+                         "within the fresh file; default 0.005)")
     args = ap.parse_args(argv)
     with open(args.baseline) as f:
         baseline = json.load(f)
@@ -385,7 +452,8 @@ def main(argv=None) -> int:
                              args.min_group_commit_speedup,
                              args.max_inc_snapshot_frac,
                              args.max_trace_off_overhead,
-                             args.max_hist_overhead)
+                             args.max_hist_overhead,
+                             args.zoo_recall_tol)
     for line in report:
         print(line)
     if failures:

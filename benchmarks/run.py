@@ -11,8 +11,9 @@ Prints ``name,us_per_call,derived`` CSV rows. Fast subset by default
 
 ``--json [PATH]`` additionally writes ``BENCH_serve.json`` — the serving
 perf trajectory (p50/p95 per query batch, QPS, recall@10 per index kind x
-lut_dtype, plus the fused-vs-staged pipeline speedup); the CSV output is
-unchanged. ``--fast`` runs only the serving + kernel subset (CI budget).
+lut_dtype, the fused-vs-staged pipeline speedup, plus the reducer/index
+``zoo`` grid: recall@10 + QPS per registered reducer x index spec); the
+CSV output is unchanged. ``--fast`` runs only the serving + kernel subset (CI budget).
 """
 from __future__ import annotations
 
@@ -552,6 +553,85 @@ def bench_stream(rows, json_doc=None, fast=False):
             fresh_top1_compacted=round(rec_compacted, 4))]
 
 
+def bench_zoo(rows, json_doc=None, fast=False):
+    """Reducer & index zoo: recall@10 + QPS per registered reducer x index
+    spec on one clustered grid (the ``zoo`` section of BENCH_serve.json).
+
+    Two within-file pairs are regression gates (check_regression.py):
+    OPQ's learned rotation must not lose recall vs plain PQ at equal code
+    bytes (the OPQ fit's candidate set includes the un-rotated solution,
+    so its reconstruction MSE is <= plain PQ by construction), and the
+    MPAD reducer must hold recall vs PCA at equal output dim (the paper's
+    claim, Fig.1)."""
+    from repro.search import build_engine, knn_search, parse_spec
+    from repro.search.knn import recall_at_k
+    n, dim, nq, k = 8192, 128, 256, 10
+    key = jax.random.key(0)
+
+    # reducer grid: cluster structure in the first 96 dims plus 32
+    # high-variance nuisance dims that carry no neighbor information —
+    # the regime the quantile-preserving projection targets (PCA's
+    # top-variance directions are exactly the nuisance dims)
+    sig = dim - 32
+    centers = jax.random.normal(key, (64, sig)) * 1.5
+    lab = jax.random.randint(jax.random.fold_in(key, 1), (n,), 0, 64)
+    signal = centers[lab] + 0.4 * jax.random.normal(
+        jax.random.fold_in(key, 2), (n, sig))
+    red_corpus = jnp.concatenate(
+        [signal, 3.0 * jax.random.normal(jax.random.fold_in(key, 4),
+                                         (n, 32))], axis=1)
+    # code grid: anisotropic (decaying per-dim scales), so PQ's fixed
+    # subspace split is variance-imbalanced and the learned rotation has
+    # something to rebalance
+    kc = jax.random.key(5)
+    scales = 1.0 / jnp.sqrt(1.0 + jnp.arange(dim, dtype=jnp.float32))
+    ccent = jax.random.normal(kc, (64, dim)) * 1.5
+    clab = jax.random.randint(jax.random.fold_in(kc, 1), (n,), 0, 64)
+    code_corpus = (ccent[clab] + 0.4 * jax.random.normal(
+        jax.random.fold_in(kc, 2), (n, dim))) * scales
+
+    grids = {}
+    for gname, corpus, qkey, qscale in (
+            ("reducer", red_corpus, jax.random.fold_in(key, 3), 1.0),
+            ("code", code_corpus, jax.random.fold_in(kc, 3), scales)):
+        queries = corpus[:nq] + 0.05 * jax.random.normal(
+            qkey, (nq, dim)) * qscale
+        _, truth = knn_search(queries, corpus, k)
+        grids[gname] = (corpus, queries, truth)
+
+    # each gate pair runs on one grid, so the within-file compare is
+    # apples-to-apples: equal-dim reducers on the exact-scan pipeline,
+    # equal-byte codes without a reducer
+    specs = [("reducer", "qpad32>flat"), ("reducer", "pca32>flat"),
+             ("reducer", "mlp32>flat"),
+             ("code", "pq8x256"), ("code", "opq8x256")]
+    if not fast:
+        specs.append(("reducer", "qpad32>ivf64x8>pq8x256:i8"))
+    reps = 5 if fast else 9
+    zoo_rows = []
+    for gname, spec_s in specs:
+        corpus, queries, truth = grids[gname]
+        sp = parse_spec(spec_s)
+        eng = build_engine(corpus, spec_s, fit_sample=2048, seed=0)
+        ts = _timeit_dist(eng.search, queries, k, reps=reps)
+        p50 = _pctl(ts, 50)
+        _, found = eng.search(queries, k)
+        rec = float(recall_at_k(found, truth))
+        qps = nq / (p50 * 1e-6)
+        rows.append((f"zoo_{spec_s}", p50,
+                     f"grid={gname} recall@10={rec:.4f} qps={qps:.0f}"))
+        zoo_rows.append(dict(
+            spec=spec_s, grid=gname,
+            reducer=sp.reduce.kind if sp.reduce is not None else None,
+            index=sp.kind,
+            dim=sp.reduce.m if sp.reduce is not None else dim,
+            code_bytes=(sp.code.subspaces if sp.code is not None else None),
+            p50_us=round(p50, 1), qps=round(qps),
+            recall_at_10=round(rec, 4)))
+    if json_doc is not None:
+        json_doc["zoo"] = zoo_rows
+
+
 def bench_durability(rows, json_doc=None, fast=False):
     """Durability subsystem: what the WAL costs the write path, how fast
     crash recovery replays, and what background compaction buys search
@@ -813,6 +893,11 @@ def main(argv=None) -> None:
     except Exception as e:
         serve_err = serve_err or e
         rows.append(("bench_durability", -1.0, f"ERROR:{type(e).__name__}"))
+    try:
+        bench_zoo(rows, json_doc=json_doc, fast=args.fast)
+    except Exception as e:
+        serve_err = serve_err or e
+        rows.append(("bench_zoo", -1.0, f"ERROR:{type(e).__name__}"))
     print("\nname,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")

@@ -87,6 +87,23 @@ def main():
     jax.block_until_ready(ids_pq8)
     t_ivfpq8 = time.time() - t0
 
+    # the reducer & index zoo: the same serving stack with the Reduce and
+    # code stages swapped by spec string — PCA and a small nonlinear MLP
+    # reducer ride everything the MPAD projection does, and OPQ's learned
+    # rotation upgrades plain PQ at equal code bytes
+    zoo = []
+    for spec_s in (f"pca{args.target_dim}>flat",
+                   f"mlp{args.target_dim}>flat",
+                   f"opq{args.target_dim // 2}x256>rr{4 * args.k}"):
+        eng_z = build_engine(corpus, spec_s, fit_sample=4096)
+        _, ids_z = eng_z.search(queries, args.k)  # warm up / compile
+        jax.block_until_ready(ids_z)
+        t0 = time.time()
+        _, ids_z = eng_z.search(queries, args.k)
+        jax.block_until_ready(ids_z)
+        zoo.append((spec_s, time.time() - t0,
+                    float(recall_at_k(ids_z, truth))))
+
     # sharded serving: the same IVF-PQ engine partitioned over a data mesh
     # (every available device; on a plain CPU session that is a 1-device
     # mesh — run under XLA_FLAGS=--xla_force_host_platform_device_count=8
@@ -113,7 +130,7 @@ def main():
     from repro.search import StreamConfig
     eng_s = SearchEngine(corpus, dataclasses.replace(
         eng_pq.config, stream=StreamConfig(delta_capacity=512)))
-    nb = 256
+    nb = min(256, args.queries)
     fresh = queries[:nb] + 0.001 * jax.random.normal(
         jax.random.fold_in(key, 99), (nb, args.dim))
     t0 = time.time()
@@ -173,6 +190,10 @@ def main():
           f" {t_ivfpq*1e3:7.1f} ms/batch  recall@{args.k}={rec_pq:.4f}")
     print(f"MPAD {args.dim}->{args.target_dim} + IVF-PQ int8 LUT + rerank:"
           f" {t_ivfpq8*1e3:7.1f} ms/batch  recall@{args.k}={rec_pq8:.4f}")
+    print("reducer & index zoo (same stack, spec-swapped stages):")
+    for spec_s, t_z, rec_z in zoo:
+        print(f"  {spec_s:24s} {t_z*1e3:7.1f} ms/batch  "
+              f"recall@{args.k}={rec_z:.4f}")
     print(f"MPAD {args.dim}->{args.target_dim} + IVF-PQ sharded x{n_shards}:"
           f" {t_shard*1e3:7.1f} ms/batch  recall@{args.k}={rec_sh:.4f}  "
           f"ids==unsharded: {same}")

@@ -23,7 +23,7 @@ out-of-sample points — the paper's evaluation protocol (Table 2) requires it.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -36,8 +36,19 @@ __all__ = [
 
 @dataclasses.dataclass(frozen=True)
 class Reducer:
+    """A fitted DR method: callable transform + (for the affine methods)
+    the raw fitted arrays.
+
+    ``params`` carries the affine map in the engine's canonical
+    ``(matrix (m, D), mean (D,))`` layout when the method is linear
+    (PCA / random projection / MDS), which is what lets the serving
+    registry (``repro.search.reducers``) wire these fits straight into
+    the index pipeline instead of re-deriving them from the closure.
+    Nonlinear methods leave it ``None``.
+    """
     name: str
     transform: Callable[[jax.Array], jax.Array]
+    params: Any = None
 
     def __call__(self, x):
         return self.transform(x)
@@ -51,7 +62,9 @@ def fit_pca(x: jax.Array, m: int) -> Reducer:
     xc = x - mean
     _, _, vt = jnp.linalg.svd(xc, full_matrices=False)
     comps = vt[:m]                                   # (m, n)
-    return Reducer("pca", lambda y: (jnp.asarray(y, jnp.float32) - mean) @ comps.T)
+    return Reducer("pca",
+                   lambda y: (jnp.asarray(y, jnp.float32) - mean) @ comps.T,
+                   params=(comps, mean))
 
 
 # ------------------------------------------------- Random projection
@@ -66,7 +79,8 @@ def fit_random_projection(key: jax.Array, n: int, m: int,
                         jnp.where(u < 1 / 3, -jnp.sqrt(3.0), 0.0)) / jnp.sqrt(m)
     else:
         raise ValueError(kind)
-    return Reducer(f"rp_{kind}", lambda y: jnp.asarray(y, jnp.float32) @ mat)
+    return Reducer(f"rp_{kind}", lambda y: jnp.asarray(y, jnp.float32) @ mat,
+                   params=(mat.T, jnp.zeros((n,), mat.dtype)))
 
 
 # --------------------------------------------------- Classical MDS
@@ -97,7 +111,8 @@ def fit_mds(x: jax.Array, m: int, ridge: float = 1e-4) -> Reducer:
     # linear map W: argmin ||Xc W - Y||^2 + ridge||W||^2
     n_dim = xc.shape[1]
     w = jnp.linalg.solve(xc.T @ xc + ridge * jnp.eye(n_dim), xc.T @ y)
-    return Reducer("mds", lambda q: (jnp.asarray(q, jnp.float32) - mean) @ w)
+    return Reducer("mds", lambda q: (jnp.asarray(q, jnp.float32) - mean) @ w,
+                   params=(w.T, mean))
 
 
 # ------------------------------------------------- Kernel PCA (RBF)

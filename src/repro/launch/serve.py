@@ -53,10 +53,15 @@ def _parse_args():
                          "--pq-subspaces/--lut-dtype/--pq-backend")
     ap.add_argument("--target-dim", type=int, default=32,
                     help="MPAD reduction target (0 = no reduction)")
+    ap.add_argument("--reducer", choices=["qpad", "pca", "mlp"],
+                    default="qpad",
+                    help="Reduce-stage kind (the reducer zoo; ignored "
+                         "when --target-dim is 0)")
     ap.add_argument("--batch", type=int, default=256)
     ap.add_argument("--batches", type=int, default=5)
     ap.add_argument("--k", type=int, default=10)
-    ap.add_argument("--index", choices=["flat", "ivf", "pq", "ivfpq"],
+    ap.add_argument("--index", choices=["flat", "ivf", "pq", "opq",
+                                        "ivfpq"],
                     default="flat")
     ap.add_argument("--nlist", type=int, default=64)
     ap.add_argument("--nprobe", type=int, default=8)
@@ -144,12 +149,14 @@ def _spec_from_flags(args):
     setup in ``main``."""
     from repro.search import Coarse, Code, IndexSpec, Reduce, Rerank
     return IndexSpec(
-        reduce=Reduce(args.target_dim) if args.target_dim else None,
+        reduce=(Reduce(args.target_dim, kind=args.reducer)
+                if args.target_dim else None),
         coarse=(Coarse(nlist=args.nlist, nprobe=args.nprobe)
                 if args.index in ("ivf", "ivfpq") else None),
-        code=(Code(subspaces=args.pq_subspaces, centroids=256,
+        code=(Code(kind="opq" if args.index == "opq" else "pq",
+                   subspaces=args.pq_subspaces, centroids=256,
                    lut_dtype=args.lut_dtype, backend=args.pq_backend)
-              if args.index in ("pq", "ivfpq") else None),
+              if args.index in ("pq", "opq", "ivfpq") else None),
         rerank=Rerank(4 * args.k))
 
 
@@ -182,7 +189,9 @@ def main():
         runtime["stream"] = StreamConfig(
             delta_capacity=args.delta_capacity,
             background_compact=args.background_compact)
-    if spec.reduce is not None:
+    if spec.reduce is not None and spec.reduce.kind == "qpad":
+        # the MPAD knobs configure the qpad kind only; other reducers
+        # own their training hyperparameters
         runtime["mpad"] = MPADConfig(m=spec.reduce.m, iters=64,
                                      batch_size=2048)
     engine = build_engine(corpus, spec, **runtime)

@@ -46,20 +46,22 @@ def replicate_like(tree: Any) -> Any:
 def engine_state_specs(state, axis: str = "data"):
     """``ShardedEngineState`` -> matching pytree of PartitionSpecs.
 
-    The corpus rows shard along ``axis`` and the projection replicates;
-    the per-kind sharded index payload gets its spec tree from the ops
-    registry (``IndexOps.payload_specs`` — row- or cell-sharded database
-    leaves, replicated quantizers). Used both as ``shard_map`` in_specs
-    and for the ``device_put`` placement in ``shard_engine``. The
-    registry import is deferred so this module stays importable without
-    the search package.
+    The corpus rows shard along ``axis`` and the reducer params replicate
+    (whatever their pytree shape — the reducer kind rides along as pytree
+    metadata); the per-kind sharded index payload gets its spec tree from
+    the ops registry (``IndexOps.payload_specs`` — row- or cell-sharded
+    database leaves, replicated quantizers). Used both as ``shard_map``
+    in_specs and for the ``device_put`` placement in ``shard_engine``.
+    The registry import is deferred so this module stays importable
+    without the search package.
     """
     from repro.search.registry import Index, get_ops
     payload_specs = get_ops(state.index.kind).payload_specs(
         state.index.payload, axis)
     return type(state)(
         corpus=P(axis),
-        proj=None if state.proj is None else (P(), P()),
+        proj=(None if state.proj is None
+              else jax.tree.map(lambda _: P(), state.proj)),
         n_real=P(),
         index=Index(state.index.kind, payload_specs))
 

@@ -15,6 +15,9 @@ from .ivfpq import IVFPQIndex, build_ivfpq, ivfpq_search
 from .pq import PQIndex, build_pq, pq_search, pq_reconstruct
 from .spec import (Coarse, Code, IndexSpec, Reduce, Rerank, format_spec,
                    parse_spec, spec_from_config)
+from .reducers import (REDUCER_KINDS, Reducer, ReducerOps, fit_reducer,
+                       get_reducer_ops, reduce_vectors, reducer_dim,
+                       register_reducer)
 from .registry import Index, IndexOps, ScanParams, get_ops, register_index
 from .segments import (FrozenParams, MutableEngineState, StreamStore,
                        compact_fn, delete_fn, make_mutable, rebuild_state,
@@ -49,6 +52,9 @@ __all__ = [
     "IndexSpec", "Reduce", "Coarse", "Code", "Rerank",
     "parse_spec", "format_spec", "spec_from_config", "config_from_spec",
     "Index", "IndexOps", "ScanParams", "get_ops", "register_index",
+    # the reducer zoo (pluggable Reduce stage)
+    "Reducer", "ReducerOps", "register_reducer", "get_reducer_ops",
+    "fit_reducer", "reduce_vectors", "reducer_dim", "REDUCER_KINDS",
     # engine + lifecycle
     "SearchEngine", "ServeConfig", "EngineState", "ShardedEngineState",
     "build_engine", "save_engine", "load_engine",

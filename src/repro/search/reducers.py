@@ -1,0 +1,278 @@
+"""Pluggable Reduce stage: a ``ReducerOps`` registry mirroring ``IndexOps``.
+
+QPAD's thesis makes the Reduce stage the retrieval-specific part of the
+pipeline — yet until this module the engine hard-coded exactly one
+reducer (the linear MPAD projection) while a new *index* kind was one
+``register_index`` call. This is the same move for the projection: a
+reducer kind is a :class:`ReducerOps` record (fit / transform /
+snapshot-skeleton / output-dim hooks) keyed by the ``Reduce`` stage's
+kind token in the spec grammar (``qpad32`` | ``pca32`` | ``mlp32``), and
+every registered kind rides the full serving stack for free — fused
+``search_fn``, sharded serving, streaming upsert/delete/compact,
+snapshot save/load, WAL replay, tracing (pinned by
+``tests/test_zoo.py``).
+
+The fitted projection travels as a :class:`Reducer` **tagged union**
+(static ``kind`` + params pytree), exactly like the index side's
+``Index``: the kind lives in pytree metadata, so jitted search programs
+dispatch on it at trace time and sharding/snapshot code treats the
+params as an opaque pytree. The linear kinds (``qpad``, ``pca``) share
+the legacy ``(matrix (m, D), mean (D,))`` params layout — snapshots of
+``qpad`` engines keep byte-identical key paths to pre-zoo snapshots.
+
+Registered kinds:
+
+* ``qpad``  — the MPAD projection (Algorithm 1); bit-identical to the
+  previously hard-coded path, and the default kind.
+* ``pca``   — classical PCA via ``repro.core.baselines.fit_pca`` (the
+  affine params the baseline ``Reducer`` closure now exposes).
+* ``mlp``   — a GleanVec/RAE-style minimalist nonlinear reducer: a
+  linear MPAD map plus a small zero-initialized tanh residual head,
+  trained on an exact-NN triplet margin objective over the fit sample.
+  The residual starts at the linear solution and is kept only when it
+  reduces the triplet violation count, so ``mlp`` never ranks worse
+  than its own linear init on the training sample.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.baselines import fit_pca
+from repro.core.mpad import MPADConfig, fit_mpad
+
+__all__ = ["Reducer", "ReducerOps", "register_reducer", "get_reducer_ops",
+           "fit_reducer", "reduce_vectors", "reducer_dim", "REDUCER_KINDS"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Reducer:
+    """A fitted Reduce stage: ``kind`` names the registered ops, ``params``
+    is the kind's pytree of fitted arrays. The kind is pytree *metadata*
+    (static under jit), so traced programs specialize on it exactly like
+    the index side's ``Index`` union."""
+    kind: str
+    params: Any
+
+    def __call__(self, x: jax.Array) -> jax.Array:
+        """Apply the fitted projection (``SearchEngine.reducer`` is one of
+        these, so ``eng.reducer(q)`` reduces a query batch)."""
+        return reduce_vectors(self, x)
+
+
+jax.tree_util.register_dataclass(
+    Reducer, data_fields=["params"], meta_fields=["kind"])
+
+
+@dataclasses.dataclass(frozen=True)
+class ReducerOps:
+    """The per-kind hook table (the Reduce-stage counterpart of
+    ``IndexOps``).
+
+    * ``fit(key, x, m, mpad)`` -> params: fit on sample ``x`` (N, D) to
+      ``m`` output dims. ``mpad`` is the engine's ``MPADConfig`` when the
+      kind consumes one (only ``qpad`` does; others receive ``None``).
+    * ``transform(params, x)`` -> (..., m): the projection itself; pure
+      and jit-traceable (runs inside the fused search programs).
+    * ``skeleton(leaf)`` -> params-shaped pytree of placeholder leaves
+      (snapshot restore rebuilds params by key path from this).
+    * ``out_dim(params)`` -> int: the reduced dimension ``m``.
+    """
+    kind: str
+    fit: Callable[..., Any]
+    transform: Callable[[Any, jax.Array], jax.Array]
+    skeleton: Callable[[Any], Any]
+    out_dim: Callable[[Any], int]
+
+
+_REGISTRY: dict = {}
+
+
+def register_reducer(ops: ReducerOps) -> ReducerOps:
+    """Register a reducer kind. The spec grammar (``<kind><m>``), serving,
+    sharding, snapshots, and the conformance suite pick it up from here."""
+    _REGISTRY[ops.kind] = ops
+    return ops
+
+
+def get_reducer_ops(kind: str) -> ReducerOps:
+    """Look up a registered reducer kind's hook table (actionable
+    ``ValueError`` naming the registered kinds on a miss)."""
+    try:
+        return _REGISTRY[kind]
+    except KeyError:
+        raise ValueError(
+            f"unknown reducer kind {kind!r}; registered kinds: "
+            f"{tuple(_REGISTRY)}") from None
+
+
+def fit_reducer(kind: str, key: jax.Array, x: jax.Array, m: int,
+                mpad: Optional[MPADConfig] = None) -> Reducer:
+    """Fit a registered reducer kind on sample ``x`` -> tagged union."""
+    ops = get_reducer_ops(kind)
+    return Reducer(kind, ops.fit(key, x, m, mpad))
+
+
+def reduce_vectors(proj: Optional[Reducer], x: jax.Array) -> jax.Array:
+    """Apply a fitted reducer (identity when ``proj`` is None). The single
+    projection entry point every scan/serve/stream path goes through."""
+    if proj is None:
+        return x
+    return get_reducer_ops(proj.kind).transform(proj.params, x)
+
+
+def reducer_dim(proj: Reducer) -> int:
+    """The reduced dimension a fitted reducer maps into."""
+    return get_reducer_ops(proj.kind).out_dim(proj.params)
+
+
+# ------------------------------------------------------- linear kinds
+# qpad and pca share the legacy affine params layout (matrix (m, D),
+# mean (D,)) — the tuple the engine previously carried as its bare
+# ``proj`` field, which is what keeps old snapshots' key paths valid.
+
+def _affine_transform(params, x):
+    matrix, mean = params
+    return (jnp.asarray(x, jnp.float32) - mean) @ matrix.T
+
+
+def _affine_skeleton(leaf):
+    return (leaf, leaf)
+
+
+def _affine_dim(params):
+    return params[0].shape[0]
+
+
+def _qpad_fit(key, x, m, mpad):
+    del key        # fit_mpad derives its key from MPADConfig.seed — keeps
+    #                qpad fits bit-identical to the pre-zoo serve path
+    cfg = mpad if mpad is not None else MPADConfig(
+        m=m, b=80.0, alpha=25.0, iters=48)
+    if cfg.m != m:
+        raise ValueError(
+            f"MPADConfig.m={cfg.m} disagrees with the Reduce stage's "
+            f"m={m}; the spec's reduce dim is authoritative")
+    result = fit_mpad(x, cfg)
+    return (result.matrix, result.mean)
+
+
+def _pca_fit(key, x, m, mpad):
+    del key, mpad                      # PCA is deterministic, config-free
+    return fit_pca(x, m).params
+
+
+register_reducer(ReducerOps(
+    kind="qpad", fit=_qpad_fit, transform=_affine_transform,
+    skeleton=_affine_skeleton, out_dim=_affine_dim))
+
+register_reducer(ReducerOps(
+    kind="pca", fit=_pca_fit, transform=_affine_transform,
+    skeleton=_affine_skeleton, out_dim=_affine_dim))
+
+
+# ------------------------------------------ mlp (nonlinear residual)
+# f(x) = (x - mean) @ lin.T + tanh((x - mean) @ w1 + b1) @ w2
+# with w2 zero-initialized: the map starts exactly at the linear MPAD
+# solution and the residual head trains on a triplet margin objective
+# (anchor / exact-NN positive / random negative over the fit sample).
+
+_MLP_ANCHORS = 256       # triplet anchors subsampled from the fit set
+_MLP_NEGATIVES = 4       # random negatives per anchor
+_MLP_STEPS = 150
+_MLP_LR = 3e-3
+_MLP_INIT_ITERS = 24     # MPAD iterations for the linear init
+
+
+def _mlp_transform(params, x):
+    xc = jnp.asarray(x, jnp.float32) - params["mean"]
+    h = jnp.tanh(xc @ params["w1"] + params["b1"])
+    return xc @ params["lin"].T + h @ params["w2"]
+
+
+def _mlp_skeleton(leaf):
+    return {"mean": leaf, "lin": leaf, "w1": leaf, "b1": leaf, "w2": leaf}
+
+
+def _mlp_dim(params):
+    return params["lin"].shape[0]
+
+
+def _mlp_fit(key, x, m, mpad):
+    del mpad                 # the MPAD knobs configure the qpad kind only
+    x = jnp.asarray(x, jnp.float32)
+    n, d = x.shape
+    k_lin, k_anchor, k_neg, k_w1 = jax.random.split(key, 4)
+    lin = fit_mpad(x, MPADConfig(m=m, b=80.0, alpha=25.0,
+                                 iters=_MLP_INIT_ITERS), k_lin)
+    hidden = int(min(max(2 * m, 16), 128))
+    params = {
+        "mean": lin.mean,
+        "lin": lin.matrix,
+        "w1": jax.random.normal(k_w1, (d, hidden), jnp.float32)
+              * (1.0 / jnp.sqrt(jnp.asarray(float(d)))),
+        "b1": jnp.zeros((hidden,), jnp.float32),
+        "w2": jnp.zeros((hidden, m), jnp.float32),
+    }
+    # exact-NN triplets on the fit sample: anchor a, its true nearest
+    # neighbor p in the ORIGINAL space, random negatives
+    n_anchor = min(_MLP_ANCHORS, n)
+    anchors = jax.random.choice(k_anchor, n, (n_anchor,), replace=False)
+    xa = x[anchors]
+    d2 = (jnp.sum(xa * xa, axis=1)[:, None] + jnp.sum(x * x, axis=1)[None, :]
+          - 2.0 * xa @ x.T)
+    d2 = d2.at[jnp.arange(n_anchor), anchors].set(jnp.inf)   # mask self
+    pos = jnp.argmin(d2, axis=1)
+    neg = jax.random.randint(k_neg, (n_anchor, _MLP_NEGATIVES), 0, n)
+    neg_ok = (neg != anchors[:, None]) & (neg != pos[:, None])
+    xp, xn = x[pos], x[neg]
+
+    def triplet_stats(p):
+        fa = _mlp_transform(p, xa)
+        fp = _mlp_transform(p, xp)
+        fn = _mlp_transform(p, xn.reshape(-1, d)).reshape(
+            n_anchor, _MLP_NEGATIVES, m)
+        dp = jnp.sum((fa - fp) ** 2, axis=1)
+        dn = jnp.sum((fa[:, None, :] - fn) ** 2, axis=2)
+        gap = (dp[:, None] - dn) * neg_ok            # >0 = NN order violated
+        return gap, jnp.sum((gap > 0).astype(jnp.int32))
+
+    gap0, _ = triplet_stats(params)
+    margin = 0.05 * jnp.mean(jnp.abs(gap0))
+
+    def loss_fn(p):
+        gap, _ = triplet_stats(p)
+        return jnp.mean(jax.nn.relu(gap + margin))
+
+    def adam_step(carry, t):
+        p, mom, vel = carry
+        loss, g = jax.value_and_grad(loss_fn)(p)
+        mom = jax.tree.map(lambda a, b: 0.9 * a + 0.1 * b, mom, g)
+        vel = jax.tree.map(lambda a, b: 0.999 * a + 0.001 * b * b, vel, g)
+        t1 = (t + 1).astype(jnp.float32)
+        upd = jax.tree.map(
+            lambda mo, ve: (mo / (1.0 - 0.9 ** t1))
+            / (jnp.sqrt(ve / (1.0 - 0.999 ** t1)) + 1e-8), mom, vel)
+        p = jax.tree.map(lambda a, u: a - _MLP_LR * u, p, upd)
+        return (p, mom, vel), loss
+
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    (trained, _, _), _ = jax.lax.scan(
+        adam_step, (params, zeros, zeros), jnp.arange(_MLP_STEPS))
+    # accept the residual only if it strictly improves NN-order
+    # preservation on the sample; otherwise fall back to the linear init
+    _, viol0 = triplet_stats(params)
+    _, viol1 = triplet_stats(trained)
+    keep = viol1 < viol0
+    return jax.tree.map(lambda a, b: jnp.where(keep, a, b), trained, params)
+
+
+register_reducer(ReducerOps(
+    kind="mlp", fit=_mlp_fit, transform=_mlp_transform,
+    skeleton=_mlp_skeleton, out_dim=_mlp_dim))
+
+
+REDUCER_KINDS = tuple(_REGISTRY)

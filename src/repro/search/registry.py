@@ -24,9 +24,12 @@ serving stack dispatches on:
     rebuild              payload from frozen quantizers (rebuild_state)
     stream_base_payload  dense payload over a StreamStore (shard_stream)
 
-Adding a future index kind (HNSW, OPQ-rotated PQ, ...) is one
+Adding a future index kind (HNSW, additive quantizers, ...) is one
 ``register_index(IndexOps(...))`` call — no engine, stream, or sharding
-edits.
+edits. The ``opq`` kind below is the existence proof: a learned
+orthogonal rotation (alternating Procrustes / assignment, OPQ-style)
+fitted before PQ coding, registered as one entry that delegates every
+scan to the plain-PQ ADC/LUT/kernel paths on the rotated query.
 """
 from __future__ import annotations
 
@@ -46,8 +49,8 @@ from .pq import PQIndex, adc_tables, build_pq, pq_local_scan, pq_scan
 
 __all__ = ["Index", "IndexOps", "ScanParams", "INDEX_KINDS",
            "register_index", "get_ops",
-           "ShardedIVF", "ShardedPQ", "ShardedIVFPQ",
-           "PQQuant", "IVFPQQuant"]
+           "ShardedIVF", "ShardedPQ", "ShardedIVFPQ", "ShardedOPQ",
+           "PQQuant", "IVFPQQuant", "OPQIndex", "OPQQuant"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -59,6 +62,7 @@ class Index:
       "flat"   scan vectors (N, m)   / row-sharded copy or None / None
       "ivf"    IVFIndex              / ShardedIVF               / centroids
       "pq"     PQIndex               / ShardedPQ                / PQQuant
+      "opq"    OPQIndex              / ShardedOPQ               / OPQQuant
       "ivfpq"  IVFPQIndex            / ShardedIVFPQ             / IVFPQQuant
     """
     kind: str
@@ -112,8 +116,36 @@ class ShardedIVFPQ(NamedTuple):
     codebooks: jax.Array    # (M, K, dsub) replicated (analytic LUT stats)
 
 
+class OPQIndex(NamedTuple):
+    """OPQ payload: a learned orthogonal rotation of the scan space plus
+    plain-PQ state over the rotated rows. Every scan delegates to the PQ
+    ADC paths with the query rotated first (rotation is an isometry, so
+    delta scans and re-ranks in the unrotated space stay consistent)."""
+    rot: jax.Array          # (d, d) learned orthogonal rotation
+    codebooks: jax.Array    # (M, K, dsub) over the rotated space
+    codes: jax.Array        # (N, M) stored width (uint8 for K <= 256)
+    lut_w: jax.Array        # (d, M*K)
+    cbnorm: jax.Array       # (M, K)
+
+
+class ShardedOPQ(NamedTuple):
+    """OPQ payload re-laid for a database-axis mesh (row-sharded)."""
+    rot: jax.Array          # (d, d) replicated
+    codes: jax.Array        # (N_pad, M) row-sharded
+    lut_w: jax.Array        # (d, M*K) replicated
+    cbnorm: jax.Array       # (M, K) replicated
+
+
 class PQQuant(NamedTuple):
     """Frozen PQ quantizers (streaming ``FrozenParams`` payload)."""
+    codebooks: jax.Array    # (M, K, dsub)
+    lut_w: jax.Array        # (d, M*K)
+    cbnorm: jax.Array       # (M, K)
+
+
+class OPQQuant(NamedTuple):
+    """Frozen OPQ quantizers (streaming ``FrozenParams`` payload)."""
+    rot: jax.Array          # (d, d)
     codebooks: jax.Array    # (M, K, dsub)
     lut_w: jax.Array        # (d, M*K)
     cbnorm: jax.Array       # (M, K)
@@ -497,6 +529,122 @@ register_index(IndexOps(
     quant_skeleton=lambda leaf: PQQuant(
         codebooks=leaf, lut_w=leaf, cbnorm=leaf),
     drift_stats=_pq_drift_stats))
+
+
+# --- opq: learned orthogonal rotation + PQ codes -----------------------------
+# "Quantization Meets Projection": alternate (1) k-means codebooks on the
+# rotated rows with (2) the orthogonal Procrustes solution R = U V^T of
+# X^T X_hat — each step can only help the rotated-space quantization, and
+# the identity-rotation iterate IS the plain-pq build (same key fold), so
+# keeping the lowest-MSE iterate guarantees opq reconstruction error
+# <= plain pq at equal code bytes.
+
+_OPQ_ITERS = 3          # Procrustes/assignment alternations after identity
+
+
+def _opq_pq_view(ix) -> PQIndex:
+    """The plain-PQ view of an OPQ payload (scan delegation)."""
+    return PQIndex(codebooks=ix.codebooks, codes=ix.codes,
+                   lut_w=ix.lut_w, cbnorm=ix.cbnorm)
+
+
+def _opq_build(key, reduced, spec):
+    x = jnp.asarray(reduced, jnp.float32)
+    d = x.shape[1]
+    rot = jnp.eye(d, dtype=jnp.float32)
+    best = None
+    best_err = jnp.inf
+    # fold 2 on purpose: iterate 0 (rot = I) reproduces _pq_build exactly
+    pq_key = jax.random.fold_in(key, 2)
+    for _ in range(_OPQ_ITERS + 1):
+        xr = x @ rot
+        pq = build_pq(pq_key, xr, spec.code.subspaces, spec.code.centroids)
+        recon = _pq_decode(pq.codebooks, pq.codes.astype(jnp.int32))
+        err = jnp.mean(jnp.sum((xr - recon) ** 2, axis=1))
+        if best is None or bool(err < best_err):
+            best, best_err = OPQIndex(rot=rot, codebooks=pq.codebooks,
+                                      codes=pq.codes, lut_w=pq.lut_w,
+                                      cbnorm=pq.cbnorm), err
+        u, _, vt = jnp.linalg.svd(x.T @ recon)
+        rot = u @ vt
+    return best
+
+
+def _opq_scan(state, qr, n_cand, p):
+    ix = state.index.payload
+    return pq_scan(_opq_pq_view(ix), qr @ ix.rot, n_cand, backend=p.backend,
+                   interpret=p.interpret, lut_dtype=p.lut_dtype)
+
+
+def _opq_local_scan(sstate, qr, n_cand, p, axis, slack, live=None):
+    ix = sstate.index.payload
+    return pq_local_scan(ix.lut_w, ix.cbnorm, ix.codes, qr @ ix.rot, n_cand,
+                         sstate.n_real, axis, backend=p.backend,
+                         interpret=p.interpret, lut_dtype=p.lut_dtype,
+                         slack=slack, live=live)
+
+
+def _opq_stream_scan(store, frozen, qr, n_cand, live, p):
+    # rotate, then the masked plain-PQ ADC scan serves the rotated space
+    return _pq_stream_scan(store, frozen, qr @ frozen.quant.payload.rot,
+                           n_cand, live, p)
+
+
+def _opq_shard_payload(state, shards):
+    ix = state.index.payload
+    return ShardedOPQ(rot=ix.rot, codes=_pad_dim0(ix.codes, shards),
+                      lut_w=ix.lut_w, cbnorm=ix.cbnorm)
+
+
+def _opq_payload_specs(payload, axis):
+    return ShardedOPQ(rot=P(), codes=P(axis), lut_w=P(), cbnorm=P())
+
+
+def _opq_store_parts(state, n_cap, cell_slack):
+    ix = state.index.payload
+    parts = {"codes": _pad_rows(ix.codes, n_cap)}     # stored width (uint8)
+    return parts, OPQQuant(rot=ix.rot, codebooks=ix.codebooks,
+                           lut_w=ix.lut_w, cbnorm=ix.cbnorm)
+
+
+def _opq_encode_delta(frozen, rows):
+    rot = frozen.quant.payload.rot
+    return None, _encode_pq(frozen.codebooks, rows @ rot), None
+
+
+def _opq_rebuild(frozen, reduced, shards):
+    rot = frozen.quant.payload.rot
+    code_dt = jnp.uint8 if frozen.codebooks.shape[1] <= 256 else jnp.int32
+    return OPQIndex(rot=rot, codebooks=frozen.codebooks,
+                    codes=_encode_pq(frozen.codebooks,
+                                     reduced @ rot).astype(code_dt),
+                    lut_w=frozen.lut_w, cbnorm=frozen.cbnorm)
+
+
+def _opq_stream_base_payload(store, frozen, corpus_owned):
+    q = frozen.quant.payload
+    return OPQIndex(rot=q.rot, codebooks=q.codebooks,
+                    codes=_own(store.codes), lut_w=q.lut_w, cbnorm=q.cbnorm)
+
+
+def _opq_drift_stats(frozen, rows):
+    xr = rows @ frozen.quant.payload.rot
+    codes = _encode_pq(frozen.codebooks, xr)
+    return jnp.sum((xr - _pq_decode(frozen.codebooks, codes)) ** 2, axis=-1)
+
+
+register_index(IndexOps(
+    kind="opq", lossy=True,
+    build=_opq_build, scan=_opq_scan, local_scan=_opq_local_scan,
+    stream_scan=_opq_stream_scan, shard_payload=_opq_shard_payload,
+    payload_specs=_opq_payload_specs, store_parts=_opq_store_parts,
+    encode_delta=_opq_encode_delta, rebuild=_opq_rebuild,
+    stream_base_payload=_opq_stream_base_payload,
+    payload_skeleton=lambda leaf: OPQIndex(
+        rot=leaf, codebooks=leaf, codes=leaf, lut_w=leaf, cbnorm=leaf),
+    quant_skeleton=lambda leaf: OPQQuant(
+        rot=leaf, codebooks=leaf, lut_w=leaf, cbnorm=leaf),
+    drift_stats=_opq_drift_stats))
 
 
 # --- ivfpq: coarse quantizer + PQ-coded residuals ----------------------------

@@ -62,6 +62,7 @@ import jax.numpy as jnp
 
 from .durability.policy import PolicyConfig
 from .ivf import sq_dists
+from .reducers import Reducer, reduce_vectors, reducer_dim
 from .registry import Index, _pad_cells, _pad_rows, get_ops
 
 __all__ = ["StreamConfig", "StreamStore", "MutableEngineState",
@@ -117,7 +118,7 @@ class FrozenParams(NamedTuple):
     ``IVFPQQuant`` for the coded kinds). The accessor properties give the
     per-array views the scan/encode code reads.
     """
-    proj: Optional[Tuple[jax.Array, jax.Array]]   # MPAD (matrix (m,D), mean)
+    proj: Optional[Reducer]                       # fitted Reduce stage
     quant: Index                                  # kind + frozen quantizers
 
     @property
@@ -178,10 +179,7 @@ def live_mask(store: StreamStore) -> jax.Array:
 
 
 def _project(proj, vectors: jax.Array) -> jax.Array:
-    if proj is None:
-        return vectors
-    matrix, mean = proj
-    return (vectors - mean) @ matrix.T
+    return reduce_vectors(proj, vectors)
 
 
 def encode_pq(codebooks: jax.Array, x: jax.Array) -> jax.Array:
@@ -234,7 +232,7 @@ def make_mutable(state, config: StreamConfig
     proj = state.proj
     cell_slack = config.cell_slack if config.cell_slack is not None else cap
     parts, quant = ops.store_parts(state, n_cap, cell_slack)
-    m_dim = proj[0].shape[0] if proj is not None else d
+    m_dim = reducer_dim(proj) if proj is not None else d
     store = StreamStore(
         corpus=_pad_rows(state.corpus, n_cap),
         row_ids=_pad_rows(jnp.arange(n, dtype=jnp.int32), n_cap, fill=-1),

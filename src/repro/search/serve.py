@@ -131,10 +131,11 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core import MPADConfig, MPADResult, fit_mpad
+from repro.core import MPADConfig
 from repro.kernels.pq_adc.lut import LUT_DTYPES, lut_error_bound
 from .durability.wal import (RT_COMPACT, RT_DELETE, RT_POLICY, RT_UPSERT,
                              encode_delete, encode_policy, encode_upsert)
+from .reducers import Reducer, fit_reducer, reduce_vectors
 from .registry import INDEX_KINDS, Index, ScanParams, get_ops
 from .segments import StreamConfig
 from .spec import IndexSpec, parse_spec, spec_from_config
@@ -162,6 +163,8 @@ class ServeConfig:
     ``ServeConfig`` directly when you need the runtime knobs too.
     """
     target_dim: Optional[int] = None     # None = no reduction (full-dim exact)
+    reducer: str = "qpad"                # Reduce-stage kind (REDUCER_KINDS):
+    #                                      "qpad" | "pca" | "mlp" | registered
     rerank: int = 64                     # candidates re-ranked in original space
     index: str = "flat"                  # one of INDEX_KINDS
     nlist: int = 64                      # ivf/ivfpq: coarse cells
@@ -235,13 +238,13 @@ class ServeConfig:
         if self.prefilter_batch < 0:
             raise ValueError("prefilter_batch must be >= 0 (0 disables the "
                              "re-rank candidate pre-filter)")
-        if (self.stream is not None and self.index == "pq"
+        if (self.stream is not None and self.index in ("pq", "opq")
                 and self.pq_backend == "kernel"):
             raise ValueError(
-                "streaming index='pq' needs pq_backend='jnp': the "
-                "shared-codes Pallas kernel has no masked entry point for "
-                "an arbitrary tombstone bitmap (use index='ivfpq' for a "
-                "kernel-backed streaming ADC scan)")
+                f"streaming index={self.index!r} needs pq_backend='jnp': "
+                "the shared-codes Pallas kernel has no masked entry point "
+                "for an arbitrary tombstone bitmap (use index='ivfpq' for "
+                "a kernel-backed streaming ADC scan)")
         # stage-level validation: lower onto the pipeline spec (rejects
         # nprobe > nlist, dead knobs, bad stage values)
         self.to_spec()
@@ -267,6 +270,7 @@ def config_from_spec(spec, **runtime) -> ServeConfig:
     kw = dict(index=spec.kind, rerank=spec.rerank.n)
     if spec.reduce is not None:
         kw["target_dim"] = spec.reduce.m
+        kw["reducer"] = spec.reduce.kind
     if spec.coarse is not None:
         kw.update(nlist=spec.coarse.nlist, nprobe=spec.coarse.nprobe)
     if spec.code is not None:
@@ -296,10 +300,12 @@ class EngineState(NamedTuple):
     ``index`` is the tagged union: ``index.kind`` selects the registered
     ``IndexOps`` (static under jit — it rides the treedef), ``index.payload``
     is that kind's built arrays. ``corpus`` is the original-space row store
-    for the exact re-rank; ``proj`` the (optional) MPAD projection.
+    for the exact re-rank; ``proj`` the (optional) fitted Reduce stage —
+    a ``repro.search.reducers.Reducer`` tagged union whose ``kind`` is
+    pytree metadata, exactly like ``index.kind``.
     """
     corpus: jax.Array                              # (N, D) re-rank space
-    proj: Optional[Tuple[jax.Array, jax.Array]]    # (matrix (m,D), mean (D,))
+    proj: Optional[Reducer]                        # fitted Reduce stage
     index: Index                                   # tagged union payload
 
 
@@ -309,13 +315,13 @@ class ShardedEngineState(NamedTuple):
     ``corpus`` is padded to a per-shard-equal shape and sharded along dim
     0; ``index`` holds the kind's **sharded** payload (see
     ``IndexOps.shard_payload`` — row- or cell-sharded database leaves,
-    replicated quantizers); the MPAD projection replicates. Built by
+    replicated quantizers); the reducer params replicate. Built by
     ``repro.parallel.engine.shard_engine``; consumed by
     ``sharded_search_fn``. ``n_real`` is the unpadded corpus size — rows
     at or beyond it are shard padding, masked out of every scan.
     """
     corpus: jax.Array                              # (N_pad, D) row-sharded
-    proj: Optional[Tuple[jax.Array, jax.Array]]    # replicated (matrix, mean)
+    proj: Optional[Reducer]                        # replicated reducer params
     n_real: jax.Array                              # () int32 replicated
     index: Index                                   # kind + sharded payload
 
@@ -459,12 +465,8 @@ def search_fn(state: EngineState, queries: jax.Array, k: int, *,
     # named_scope annotations label the stage boundaries inside the fused
     # program for jax.profiler / Perfetto timelines (see
     # repro.search.tracing); they are free at run time
-    if state.proj is not None:
-        matrix, mean = state.proj
-        with jax.named_scope("qpad.project"):
-            qr = (queries - mean) @ matrix.T
-    else:
-        qr = queries
+    with jax.named_scope("qpad.project"):
+        qr = reduce_vectors(state.proj, queries)
     # lossy scoring (reduction and/or PQ codes) -> over-retrieve + re-rank
     approximate = state.proj is not None or ops.lossy
     _check_rerank_budget(approximate, rerank, k)
@@ -523,12 +525,8 @@ def _sharded_core(sstate: ShardedEngineState, queries: jax.Array, *, k: int,
             "0 on the sharded path")
     ops = get_ops(sstate.index.kind)
     queries = jnp.asarray(queries, jnp.float32)
-    if sstate.proj is not None:
-        matrix, mean = sstate.proj
-        with jax.named_scope("qpad.project"):
-            qr = (queries - mean) @ matrix.T
-    else:
-        qr = queries
+    with jax.named_scope("qpad.project"):
+        qr = reduce_vectors(sstate.proj, queries)
     approximate = sstate.proj is not None or ops.lossy
     _check_rerank_budget(approximate, rerank, k)
     n_cand = rerank if approximate else k
@@ -610,30 +608,31 @@ class SearchEngine:
         n, dim = corpus.shape
         key = jax.random.key(config.seed)
         if spec.reduce is not None:
-            mcfg = config.mpad or MPADConfig(
-                m=spec.reduce.m, b=80.0, alpha=25.0, iters=48,
-                seed=config.seed)
+            mcfg = config.mpad
+            if mcfg is None and spec.reduce.kind == "qpad":
+                mcfg = MPADConfig(
+                    m=spec.reduce.m, b=80.0, alpha=25.0, iters=48,
+                    seed=config.seed)
             sample = corpus
             if config.fit_sample < n:
                 rows = jax.random.choice(
                     key, n, (config.fit_sample,), replace=False)
                 sample = corpus[rows]
-            reducer: Optional[MPADResult] = fit_mpad(sample, mcfg)
-            reduced = reducer(corpus)
-            proj = (reducer.matrix, reducer.mean)
+            proj: Optional[Reducer] = fit_reducer(
+                spec.reduce.kind, key, sample, spec.reduce.m, mcfg)
+            reduced = reduce_vectors(proj, corpus)
         else:
-            reducer = None
-            reduced = corpus
             proj = None
+            reduced = corpus
         payload = get_ops(config.index).build(key, reduced, spec)
         state = EngineState(corpus=corpus, proj=proj,
                             index=Index(config.index, payload))
-        self._attach(config, state, reducer)
+        self._attach(config, state, proj)
 
     # --- lifecycle --------------------------------------------------------
 
     def _attach(self, config: ServeConfig, state: Optional[EngineState],
-                reducer: Optional[MPADResult], store=None, frozen=None):
+                reducer: Optional[Reducer], store=None, frozen=None):
         """Wire a built (or restored) state into a serving engine: jit
         programs, compile caches, counters. The shared tail of ``__init__``
         and the snapshot-restore constructors."""
@@ -736,12 +735,7 @@ class SearchEngine:
         eng = object.__new__(cls)
         eng._user_corpus = None
         proj = state.proj if state is not None else frozen.proj
-        reducer = None
-        if proj is not None:
-            matrix, mean = proj
-            reducer = MPADResult(matrix=matrix, mean=mean,
-                                 objective_trace=jnp.zeros((0, 0)))
-        eng._attach(config, state, reducer, store=store, frozen=frozen)
+        eng._attach(config, state, proj, store=store, frozen=frozen)
         return eng
 
     @property
@@ -1149,7 +1143,7 @@ class SearchEngine:
         quantization error bound the coded scan could not express the
         difference anyway."""
         cb = self.frozen.cbnorm if self.frozen is not None else None
-        if cb is None or self.config.index not in ("pq", "ivfpq"):
+        if cb is None or self.config.index not in ("pq", "opq", "ivfpq"):
             return 0.0
         from repro.kernels.pq_adc.lut import lut_error_bound
         return float(lut_error_bound(cb[None], self.config.lut_dtype)[0])
@@ -1448,12 +1442,10 @@ class SearchEngine:
         if donate:
             self.state = None
             if self.reducer is not None:
-                # the dense projection arrays were donated; point the
-                # public reducer at the replicated sharded copies so
+                # the dense reducer params were donated; point the public
+                # reducer at the replicated sharded copies so
                 # eng.reducer(x) keeps working
-                matrix, mean = self.sharded_state.proj
-                self.reducer = self.reducer._replace(matrix=matrix,
-                                                     mean=mean)
+                self.reducer = self.sharded_state.proj
         if self._sharded_program is None:
             def _engine_sharded_fn(sstate, queries, k, **kw):
                 return sharded_search_fn(sstate, queries, k, **kw)
@@ -1508,7 +1500,7 @@ class SearchEngine:
         # normalize knobs the index kind can't observe so flipping them
         # (e.g. a stray nprobe on a flat engine) never re-keys the jit cache
         probed = cfg.index in ("ivf", "ivfpq")
-        coded = cfg.index in ("pq", "ivfpq")
+        coded = cfg.index in ("pq", "opq", "ivfpq")
         kw = dict(nprobe=cfg.nprobe if probed else 0,
                   rerank=cfg.rerank,
                   backend=cfg.pq_backend if coded else "jnp",

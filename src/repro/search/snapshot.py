@@ -46,6 +46,7 @@ from repro.runtime.checkpoint import (checkpoint_step, latest_checkpoint,
                                       save_arrays, save_checkpoint)
 from .durability.policy import PolicyConfig
 from .durability.wal import RT_SNAPSHOT, DurabilityConfig, Wal
+from .reducers import Reducer, get_reducer_ops
 from .registry import Index, get_ops
 from .segments import FrozenParams, StreamConfig, StreamStore
 from .serve import EngineState, SearchEngine, config_from_spec
@@ -85,15 +86,23 @@ _INC_STORE_FIELDS = ("row_ids", "n_rows", "dead", "delta_vectors",
                      "delta_ids", "delta_count", "delta_reduced")
 
 
-def _snapshot_skeleton(kind: str, has_proj: bool, streaming: bool,
+def _snapshot_skeleton(kind: str, reducer: Optional[str], streaming: bool,
                        flat_alias: bool, store_fields=()):
     """The snapshot pytree with placeholder leaves — the structure comes
-    from the spec metadata (kind, projection presence, streaming, the
-    optional store fields present at save time) plus the ops registry's
-    per-kind payload shapes (``payload_skeleton``/``quant_skeleton``), so
-    save and load flatten to the same key paths for any registered kind."""
+    from the spec metadata (kind, reducer kind, streaming, the optional
+    store fields present at save time) plus the ops registries' per-kind
+    shapes (``ReducerOps.skeleton``,
+    ``payload_skeleton``/``quant_skeleton``), so save and load flatten to
+    the same key paths for any registered kind.
+
+    ``reducer`` is the Reduce stage's kind (None = no projection). The
+    proj travels as the kind's RAW params pytree — unwrapped from the
+    ``Reducer`` union at save time — so qpad snapshots keep the exact
+    ``proj[0]``/``proj[1]`` key paths of pre-zoo checkpoints; load
+    rewraps."""
     ops = get_ops(kind)
-    proj = (_L, _L) if has_proj else None
+    proj = (get_reducer_ops(reducer).skeleton(_L)
+            if reducer is not None else None)
     if not streaming:
         # the flat-alias case (no Reduce stage: payload IS the corpus
         # array) is not re-saved; restore re-points it at the corpus
@@ -220,18 +229,26 @@ def save_engine(engine: SearchEngine, directory: str,
     flat_alias = False
     store_fields = []
     if streaming:
-        tree = {"store": engine.store, "frozen": engine.frozen}
-        has_proj = engine.frozen.proj is not None
+        proj = engine.frozen.proj
+        # persist the RAW reducer params (not the tagged union): qpad key
+        # paths stay identical to pre-zoo snapshots; load rewraps
+        frozen = engine.frozen._replace(
+            proj=proj.params if proj is not None else None)
+        tree = {"store": engine.store, "frozen": frozen}
         store_fields = [f for f in _OPT_STORE_FIELDS
                         if getattr(engine.store, f) is not None]
     else:
         state = engine.state
-        has_proj = state.proj is not None
+        proj = state.proj
+        state = state._replace(
+            proj=proj.params if proj is not None else None)
         if state.index.kind == "flat" and state.index.payload is state.corpus:
             # don't write the same rows twice; restore re-aliases
             flat_alias = True
             state = state._replace(index=Index("flat", None))
         tree = {"state": state}
+    has_proj = proj is not None
+    red_kind = proj.kind if proj is not None else None
     # fresh step per save: the metadata names its checkpoint, so a crash
     # between the array write and the metadata commit leaves the previous
     # (still-named, still-retained) snapshot fully intact
@@ -252,6 +269,7 @@ def save_engine(engine: SearchEngine, directory: str,
         "kind": spec.kind,
         "streaming": streaming,
         "has_proj": has_proj,
+        "reducer": red_kind,
         "flat_alias": flat_alias,
         "store_fields": store_fields,
         "ckpt": os.path.basename(path),
@@ -342,6 +360,8 @@ def _save_incremental(engine: SearchEngine, directory: str) -> str:
         "kind": spec.kind,
         "streaming": True,
         "has_proj": engine.frozen.proj is not None,
+        "reducer": (engine.frozen.proj.kind
+                    if engine.frozen.proj is not None else None),
         "flat_alias": False,
         "store_fields": [f for f in _OPT_STORE_FIELDS
                          if getattr(engine.store, f) is not None],
@@ -447,7 +467,10 @@ def load_engine(directory: str, mesh: Optional[Mesh] = None,
         runtime["stream"] = StreamConfig(**skw)
     runtime.update(runtime_overrides)
     config = config_from_spec(spec, **runtime)
-    skeleton = _snapshot_skeleton(meta["kind"], meta["has_proj"],
+    # pre-zoo snapshots carry has_proj only: their one reducer was qpad
+    red_kind = meta.get(
+        "reducer", "qpad" if meta.get("has_proj") else None)
+    skeleton = _snapshot_skeleton(meta["kind"], red_kind,
                                   meta["streaming"], meta["flat_alias"],
                                   store_fields=meta.get("store_fields", ()))
     template = _host_template(skeleton, path, overlay)
@@ -459,11 +482,18 @@ def load_engine(directory: str, mesh: Optional[Mesh] = None,
         shardings = jax.tree.map(
             lambda _: NamedSharding(mesh, P()), template)
         tree = restore_resharded(path, template, shardings, overlay=overlay)
+
+    def _rewrap(raw):      # raw params from disk -> tagged Reducer union
+        return Reducer(red_kind, raw) if red_kind is not None else None
+
     if meta["streaming"]:
+        frozen = tree["frozen"]
+        frozen = frozen._replace(proj=_rewrap(frozen.proj))
         engine = SearchEngine._restore(config, store=tree["store"],
-                                       frozen=tree["frozen"])
+                                       frozen=frozen)
     else:
         state = tree["state"]
+        state = state._replace(proj=_rewrap(state.proj))
         if meta["flat_alias"]:
             state = state._replace(index=Index("flat", state.corpus))
         engine = SearchEngine._restore(config, state=state)

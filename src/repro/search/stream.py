@@ -46,6 +46,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from .knn import _sq_dists, masked_topk
 from .pq import _check_adc_args
+from .reducers import reduce_vectors
 from .registry import ScanParams, get_ops
 from .segments import FrozenParams, StreamStore, live_mask
 from .serve import (ShardedEngineState, _check_rerank_budget,
@@ -80,11 +81,12 @@ def replica_from_store(store: StreamStore) -> StreamReplica:
 
 
 def _check_stream_backend(kind: str, backend: str):
-    if kind == "pq" and backend == "kernel":
+    if kind in ("pq", "opq") and backend == "kernel":
         raise ValueError(
-            "streaming index='pq' needs backend='jnp': the shared-codes "
-            "Pallas kernel has no masked entry point for an arbitrary "
-            "tombstone bitmap (ivfpq folds the mask into the base term)")
+            f"streaming index={kind!r} needs backend='jnp': the "
+            "shared-codes Pallas kernel has no masked entry point for an "
+            "arbitrary tombstone bitmap (ivfpq folds the mask into the "
+            "base term)")
 
 
 def _delta_scan(qr, delta_scan_rows, delta_ids, delta_count, n_cap, n_cand):
@@ -149,11 +151,8 @@ def stream_search_fn(store: StreamStore, frozen: FrozenParams,
     _check_adc_args(backend, lut_dtype)
     _check_stream_backend(kind, backend)
     queries = jnp.asarray(queries, jnp.float32)
-    qr = queries
-    if frozen.proj is not None:
-        matrix, mean = frozen.proj
-        with jax.named_scope("qpad.project"):
-            qr = (queries - mean) @ matrix.T
+    with jax.named_scope("qpad.project"):
+        qr = reduce_vectors(frozen.proj, queries)
     approximate = frozen.proj is not None or ops.lossy
     _check_rerank_budget(approximate, rerank, k)
     n_cand = rerank if approximate else k
@@ -189,11 +188,8 @@ def _stream_sharded_core(sbase: ShardedEngineState, repl: StreamReplica,
     scan + distributed merge + two-source re-rank."""
     ops = get_ops(sbase.index.kind)
     queries = jnp.asarray(queries, jnp.float32)
-    qr = queries
-    if sbase.proj is not None:
-        matrix, mean = sbase.proj
-        with jax.named_scope("qpad.project"):
-            qr = (queries - mean) @ matrix.T
+    with jax.named_scope("qpad.project"):
+        qr = reduce_vectors(sbase.proj, queries)
     approximate = sbase.proj is not None or ops.lossy
     _check_rerank_budget(approximate, rerank, k)
     n_cand = rerank if approximate else k

@@ -127,11 +127,9 @@ class LatencyHistogram:
 
 @jax.jit
 def _project_stage(proj, queries):
+    from .reducers import reduce_vectors
     queries = jnp.asarray(queries, jnp.float32)
-    if proj is None:
-        return queries
-    matrix, mean = proj
-    return (queries - mean) @ matrix.T
+    return reduce_vectors(proj, queries)
 
 
 _probe_stage = jax.jit(probe_cells, static_argnames=("nprobe", "min_cand"))

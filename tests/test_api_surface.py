@@ -30,8 +30,21 @@ def test_composable_api_entry_points_exported():
                  "config_from_spec", "Index", "IndexOps", "ScanParams",
                  "get_ops", "register_index", "build_engine", "save_engine",
                  "load_engine", "SearchEngine", "ServeConfig",
-                 "StreamConfig"):
+                 "StreamConfig", "Reducer", "ReducerOps", "register_reducer",
+                 "get_reducer_ops", "fit_reducer", "reduce_vectors",
+                 "reducer_dim", "REDUCER_KINDS"):
         assert name in search.__all__, f"{name} missing from __all__"
+
+
+def test_reducer_registry_covers_kinds():
+    """Every registered reducer kind exposes the full ReducerOps hook
+    table (the Reduce-stage counterpart of the index registry pin)."""
+    assert set(search.REDUCER_KINDS) >= {"qpad", "pca", "mlp"}
+    for kind in search.REDUCER_KINDS:
+        ops = search.get_reducer_ops(kind)
+        assert ops.kind == kind
+        for hook in ("fit", "transform", "skeleton", "out_dim"):
+            assert callable(getattr(ops, hook)), (kind, hook)
 
 
 def test_registry_covers_index_kinds():

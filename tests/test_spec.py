@@ -32,6 +32,11 @@ from repro.search import (Coarse, Code, IndexSpec, Reduce, Rerank,
     ("ivf64x8>pq8x256", "ivfpq"),
     ("qpad32>ivf64x8>pq8x256:i8", "ivfpq"),
     ("qpad32>ivf64x8>pq8x256:i8>rr96", "ivfpq"),
+    ("pca32>ivf64x8>pq8x256:i8", "ivfpq"),
+    ("mlp16>flat", "flat"),
+    ("flat>rr64", "flat"),
+    ("opq8x256", "opq"),
+    ("qpad32>opq8x256:i8", "opq"),
 ])
 def test_parse_print_round_trip(s, kind):
     spec = parse_spec(s)
@@ -53,15 +58,18 @@ def test_printer_canonicalizes():
 
 @pytest.mark.parametrize("bad,match", [
     ("", "empty"),
-    ("hnsw32", "unknown stage token"),
+    ("hnsw32", "unknown reducer kind"),
     ("qpad", "unknown stage token"),
-    ("ivf64", "unknown stage token"),          # missing xNPROBE
+    ("ivf64", "malformed ivf stage"),          # missing xNPROBE
     ("pq8x256:fp8", "unknown stage token"),
     ("pq8x256@triton", "unknown stage token"),
     ("qpad32>qpad16", "duplicate"),
     ("ivf64x8>qpad32", "out of pipeline order"),
     ("rr64>pq8x256", "out of pipeline order"),
-    ("flat>rr64", "unknown stage token"),      # 'flat' only stands alone
+    ("flat>flat", "duplicate 'flat'"),
+    ("rr64>flat", "out of pipeline order"),
+    ("ivf64x8>flat", "mixes 'flat'"),
+    ("flat>pq8x256", "mixes 'flat'"),
     ("ivf8x16", "nprobe exceeds nlist"),
     ("qpad0", "m must be >= 1"),
     ("rr0", "n must be >= 1"),
